@@ -1,0 +1,322 @@
+"""Post-SPMD HLO analysis: per-device collective traffic, matmul FLOPs and
+HBM byte estimates — all *while-loop trip-count aware*.
+
+``compiled.cost_analysis()`` counts each while body ONCE, so a 48-layer
+scanned stack under-reports flops/bytes/collectives by ~48x. We instead walk
+the computation graph from ENTRY, multiplying by each while's trip count
+(recovered from the condition computation's `compare(ind, constant(N))` —
+XLA canonicalizes counted loops, and newer versions annotate
+`known_trip_count` in backend_config, which we prefer when present).
+
+Accounting per visited instruction (x enclosing-loop multiplier):
+  * collectives  -> ring-algorithm link bytes (see CollectiveOp.link_bytes)
+  * dot          -> 2 * prod(out_dims) * prod(lhs_contracting_dims)
+  * fusion/dot/copy/dynamic-(update-)slice/collectives
+                 -> HBM bytes ~= operand bytes + output bytes (a fusion
+                    streams exactly its boundary; fusion-internal values
+                    never materialize)
+Fusion bodies are visited for *flops only* (dots may be fused); their
+internals contribute no bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+BYTES_OPS = {"fusion", "dot", "copy", "dynamic-slice", "dynamic-update-slice",
+             "custom-call", "convolution", "scatter", "gather", "transpose",
+             "reduce", "broadcast", "concatenate", "convert", "select-and-scatter"}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-~]+)\s*\(")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-~]+)\s*=\s*(\([^()]*\)|\S+?)\s+([\w\-]+)\((.*)$")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-~]+), body=%?([\w\.\-~]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-~]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-~]+)")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    bytes_out: int
+    group_size: int
+    crosses_pod: bool
+    multiplier: int
+
+    @property
+    def link_bytes(self) -> float:
+        k, n = self.group_size, self.bytes_out
+        if k <= 1:
+            return 0.0
+        if self.kind == "all-reduce":
+            per = 2.0 * (k - 1) / k * n
+        elif self.kind == "all-gather":
+            per = (k - 1) / k * n
+        elif self.kind == "reduce-scatter":
+            per = (k - 1.0) * n
+        elif self.kind == "all-to-all":
+            per = (k - 1) / k * n
+        else:  # collective-permute
+            per = float(n)
+        return per * self.multiplier
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _first_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str
+
+
+def _split_computations(text: str) -> dict[str, list[_Instr]]:
+    comps: dict[str, list[_Instr]] = {}
+    cur: str | None = None
+    for line in text.splitlines():
+        if (not line.startswith(" ") and line.rstrip().endswith("{")
+                and "->" in line):
+            m = _COMP_HDR.match(line.strip())
+            cur = m.group(2) if m else None
+            if cur:
+                comps[cur] = []
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            comps[cur].append(_Instr(*m.groups()))
+    return comps
+
+
+def _entry_name(text: str) -> str | None:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-~]+)", text, re.MULTILINE)
+    return m.group(1) if m else None
+
+
+@dataclasses.dataclass
+class HloSummary:
+    flops: float = 0.0
+    bytes_hbm: float = 0.0
+    collectives: list = dataclasses.field(default_factory=list)
+    n_dots: int = 0
+    n_unparsed_dots: int = 0
+
+    def collective_summary(self) -> dict:
+        by_kind: dict[str, float] = defaultdict(float)
+        ici = dcn = 0.0
+        for op in self.collectives:
+            by_kind[op.kind] += op.link_bytes
+            if op.crosses_pod:
+                dcn += op.link_bytes
+            else:
+                ici += op.link_bytes
+        return {"per_kind_bytes": dict(by_kind), "ici_bytes": ici,
+                "dcn_bytes": dcn, "total_bytes": ici + dcn,
+                "n_ops": len(self.collectives)}
+
+
+def analyze_hlo(text: str, pod_size: int | None = None) -> HloSummary:
+    comps = _split_computations(text)
+    entry = _entry_name(text)
+    if entry is None or entry not in comps:
+        raise ValueError("could not locate ENTRY computation")
+    out = HloSummary()
+
+    shape_maps: dict[str, dict[str, str]] = {}
+
+    def shapes_of(comp: str) -> dict[str, str]:
+        if comp not in shape_maps:
+            shape_maps[comp] = {i.name: i.type_str for i in comps[comp]}
+        return shape_maps[comp]
+
+    def group_info(rest: str) -> tuple[int, bool]:
+        m = _GROUPS_IOTA_RE.search(rest)
+        if m:
+            _g, k, _n = (int(x) for x in m.groups())
+            return k, (pod_size is not None and k > pod_size)
+        m = _GROUPS_LIST_RE.search(rest)
+        if m:
+            ids = [int(x) for x in m.group(1).split(",") if x.strip()]
+            crosses = (pod_size is not None and ids
+                       and (max(ids) // pod_size != min(ids) // pod_size))
+            return max(len(ids), 1), crosses
+        return 1, False
+
+    def dot_flops(comp: str, ins: _Instr) -> float:
+        out_dims = _first_dims(ins.type_str)
+        ops = _OPERAND_RE.findall(ins.rest.split("),")[0] + ")")
+        if not ops:
+            return 0.0
+        lhs_type = shapes_of(comp).get(ops[0])
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+        if lhs_type is None or m is None:
+            out.n_unparsed_dots += 1
+            return 0.0
+        lhs_dims = _first_dims(lhs_type)
+        k = 1
+        for idx in m.group(1).split(","):
+            if idx:
+                k *= lhs_dims[int(idx)]
+        n = 1
+        for d in out_dims:
+            n *= d
+        return 2.0 * n * k
+
+    def _slice_only_params(callee: str) -> dict[int, int]:
+        """Fusion-body params consumed ONLY via dynamic-slice/gather:
+        param index -> bytes actually read per call (the slice, not the
+        whole operand). This keeps loop-sliced stacked scan parameters
+        (e.g. (n_periods, ...) weights) from being charged at full size on
+        every iteration."""
+        out_map: dict[int, int] = {}
+        body = comps.get(callee, [])
+        by_name = {i.name: i for i in body}
+        params: dict[str, int] = {}
+        for i in body:
+            if i.op == "parameter":
+                m = re.match(r"(\d+)", i.rest)
+                if m:
+                    params[i.name] = int(m.group(1))
+        for pname, pidx in params.items():
+            consumers = [i for i in body
+                         if re.search(rf"%{re.escape(pname)}\b", i.rest)
+                         and i.name != pname]
+            if consumers and all(c.op in ("dynamic-slice", "gather", "bitcast")
+                                 for c in consumers):
+                out_map[pidx] = sum(_type_bytes(c.type_str)
+                                    for c in consumers)
+        return out_map
+
+    _slice_cache: dict[str, dict[int, int]] = {}
+
+    def op_bytes(comp: str, ins: _Instr) -> float:
+        # slicing ops read only their output-sized window
+        if ins.op in ("dynamic-slice", "gather"):
+            return float(_type_bytes(ins.type_str))
+        if ins.op in ("dynamic-update-slice", "scatter"):
+            # in-place read-modify-write of the update window
+            smap = shapes_of(comp)
+            ops = _OPERAND_RE.findall(ins.rest.split(", metadata")[0])
+            upd = smap.get(ops[1]) if len(ops) > 1 else None
+            return 2.0 * _type_bytes(upd) if upd else float(
+                _type_bytes(ins.type_str))
+        total = float(_type_bytes(ins.type_str))
+        smap = shapes_of(comp)
+        slice_only: dict[int, int] = {}
+        if ins.op == "fusion":
+            m = _CALLS_RE.search(ins.rest)
+            if m:
+                callee = m.group(1)
+                if callee not in _slice_cache:
+                    _slice_cache[callee] = _slice_only_params(callee)
+                slice_only = _slice_cache[callee]
+        for pos, name in enumerate(
+                _OPERAND_RE.findall(ins.rest.split(", metadata")[0])):
+            t = smap.get(name)
+            if t is None:
+                continue
+            if pos in slice_only:
+                total += slice_only[pos]
+            else:
+                total += _type_bytes(t)
+        return total
+
+    def trip_count(cond: str, while_rest: str) -> int:
+        m = _TRIP_RE.search(while_rest)
+        if m:
+            return int(m.group(1))
+        best = 1
+        for ins in comps.get(cond, []):
+            for c in _CONST_RE.findall(ins.rest):
+                best = max(best, int(c))
+            for c in _CONST_RE.findall(ins.type_str):
+                best = max(best, int(c))
+        return best
+
+    visited_fusion_bodies: set[tuple[str, int]] = set()
+
+    def visit(comp: str, mult: int, in_fusion: bool) -> None:
+        for ins in comps.get(comp, []):
+            if ins.op == "while":
+                m = _WHILE_RE.search(ins.rest)
+                if m:
+                    cond, body = m.groups()
+                    trips = trip_count(cond, ins.rest)
+                    visit(body, mult * trips, in_fusion)
+                continue
+            is_coll = any(ins.op == c or ins.op == c + "-start"
+                          for c in COLLECTIVES)
+            if is_coll:
+                kind = ins.op.removesuffix("-start")
+                k, crosses = group_info(ins.rest)
+                out.collectives.append(CollectiveOp(
+                    kind, _type_bytes(ins.type_str), k, crosses, mult))
+                if not in_fusion:
+                    out.bytes_hbm += mult * op_bytes(comp, ins)
+                continue
+            if ins.op == "dot":
+                out.n_dots += 1
+                out.flops += mult * dot_flops(comp, ins)
+                if not in_fusion:
+                    out.bytes_hbm += mult * op_bytes(comp, ins)
+                continue
+            if ins.op in ("fusion", "call", "conditional", "map"):
+                for callee in _CALLS_RE.findall(ins.rest):
+                    key = (callee, mult)
+                    visit(callee, mult, True)
+                if not in_fusion and ins.op == "fusion":
+                    out.bytes_hbm += mult * op_bytes(comp, ins)
+                continue
+            if not in_fusion and ins.op in BYTES_OPS:
+                out.bytes_hbm += mult * op_bytes(comp, ins)
+
+    visit(entry, 1, False)
+    return out
+
+
+# Back-compat helpers used by launch/dryrun.py --------------------------------
+
+def parse_collectives(text: str, pod_size: int | None = None):
+    return analyze_hlo(text, pod_size).collectives
+
+
+def collective_summary(ops) -> dict:
+    s = HloSummary(collectives=list(ops))
+    return s.collective_summary()

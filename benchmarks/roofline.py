@@ -1,0 +1,138 @@
+"""Roofline assembly: three terms per (arch x shape x mesh) from the
+dry-run artifacts in results/dryrun/*.json.
+
+    compute term    = HLO_FLOPs / peak_FLOP/s          (per chip)
+    memory term     = HLO_bytes / HBM_bw               (per chip)
+    collective term = ICI_bytes / ICI_bw + DCN_bytes / DCN_bw
+
+plus MODEL_FLOPS (analytic 6·N_active·D & friends) and the
+MODEL/HLO ratio that exposes remat/padding/recompute waste.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (1-link-equivalent conservative), 6.25 GB/s/chip DCN
+(assumed for the cross-pod axis; stated in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPE_GRID, get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 6.25e9
+
+
+def model_flops_global(arch: str, shape_name: str) -> float:
+    """Analytic useful FLOPs for the whole cell (all chips)."""
+    cfg = get_config(arch)
+    shape = SHAPE_GRID[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    n_act = cfg.param_count()[1]
+    n_attn = (cfg.n_layers // cfg.period) * len(cfg.attn_every)
+    if cfg.is_enc_dec:
+        n_attn = cfg.n_enc_layers + 2 * cfg.n_layers
+    n_ssm = (cfg.n_layers // cfg.period) * len(cfg.ssm_every)
+
+    def attn_fwd(tokens_q, tokens_kv, causal):
+        f = 4.0 * tokens_q * tokens_kv * cfg.n_heads * cfg.d_head / max(b, 1)
+        return f * (0.5 if causal else 1.0)
+
+    def ssd_fwd(tokens):
+        """Chunked SSD: per token ~ 2(Q·N_total [scores] + Q·H·P [apply]
+        + 2·H·N·P [state update/read])."""
+        if cfg.ssm is None:
+            return 0.0
+        q = cfg.ssm.chunk
+        h = cfg.ssm.n_ssm_heads(cfg.d_model)
+        n = cfg.ssm.d_state
+        p = cfg.ssm.head_dim
+        per_tok = 2.0 * (q * n * cfg.ssm.n_groups + q * h * p
+                         + 2 * h * n * p)
+        return tokens * per_tok
+
+    if shape.kind == "train":
+        toks = b * s
+        f = 6.0 * n_act * toks
+        f += 3.0 * n_attn * b * attn_fwd(s, s, True)
+        f += 3.0 * n_ssm * ssd_fwd(toks)
+        return f
+    if shape.kind == "prefill":
+        toks = b * s
+        f = 2.0 * n_act * toks
+        f += n_attn * b * attn_fwd(s, s, True)
+        f += n_ssm * ssd_fwd(toks)
+        return f
+    # decode: one token per sequence against an s-long cache
+    f = 2.0 * n_act * b
+    f += n_attn * 4.0 * b * s * cfg.n_kv_heads * cfg.d_head  # cache reads
+    if cfg.ssm is not None:
+        h = cfg.ssm.n_ssm_heads(cfg.d_model)
+        f += n_ssm * 4.0 * b * h * cfg.ssm.d_state * cfg.ssm.head_dim
+    return f
+
+
+def roofline_row(record: dict) -> dict:
+    arch, shape = record["arch"], record["shape"]
+    chips = record["n_chips"]
+    flops_dev = record["cost_per_device"]["flops"]
+    bytes_dev = record["cost_per_device"]["bytes_accessed"]
+    colls = record["collectives_per_device"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = colls["ici_bytes"] / ICI_BW + colls["dcn_bytes"] / DCN_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_global(arch, shape) / chips
+    step_time = max(terms.values())
+    return {
+        "arch": arch,
+        "shape": shape,
+        "mesh": record["mesh"],
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "hlo_flops_per_dev": flops_dev,
+        "model_over_hlo": (mf / flops_dev) if flops_dev else 0.0,
+        # fraction of ideal: useful-compute time over the bottleneck time
+        "roofline_fraction": (mf / PEAK_FLOPS) / step_time if step_time else 0.0,
+        "mem_gib_per_dev": record["memory_per_device"]["peak_estimate_bytes"] / 2**30,
+    }
+
+
+def load_rows(result_dir: str = "results/dryrun", mesh: str | None = "16x16"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if mesh and rec["mesh"] != mesh:
+            continue
+        rows.append(roofline_row(rec))
+    return rows
+
+
+def fmt_table(rows) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':8s} {'compute':>9s} "
+           f"{'memory':>9s} {'collect':>9s} {'bound':>10s} {'MODEL/HLO':>9s} "
+           f"{'roofline%':>9s} {'GiB/dev':>8s}")
+    out = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        out.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{r['t_compute_s']*1e3:8.1f}ms {r['t_memory_s']*1e3:8.1f}ms "
+            f"{r['t_collective_s']*1e3:8.1f}ms {r['dominant']:>10s} "
+            f"{r['model_over_hlo']:9.2f} {r['roofline_fraction']*100:8.1f}% "
+            f"{r['mem_gib_per_dev']:8.2f}")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    import sys
+
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+    print(fmt_table(load_rows(mesh=mesh)))

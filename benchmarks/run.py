@@ -1,0 +1,65 @@
+"""Benchmark harness: one entry per paper table/figure + the roofline.
+
+Prints ``name,us_per_call,derived`` CSV (derived = the headline number the
+paper reports for that artifact). Roofline rows appear when dry-run
+artifacts exist under results/dryrun.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import tables  # noqa: E402
+
+BENCHES = [
+    ("table2_partitions", tables.table2_partitions,
+     "total spans across 8 nets"),
+    ("table3_misses", tables.table3_misses,
+     "mean normalized miss (paper ~0.05)"),
+    ("table4_traffic", tables.table4_traffic,
+     "geomean traffic reduction (paper 21x)"),
+    ("fig7_capacity", tables.fig7_capacity,
+     "mean filter fraction of capacity (paper: most)"),
+    ("fig8_speedup", tables.fig8_speedup,
+     "geomean speedup vs base (paper 2.06x)"),
+    ("fig9_energy", tables.fig9_energy,
+     "mean energy saving (paper 0.33)"),
+    ("cache_sensitivity", tables.cache_sensitivity,
+     "traffic ratio 3MB/6MB (>1 per paper §V-B2)"),
+    ("stap_example", tables.stap_example,
+     "sim/paper throughput ratio (1.0 = exact)"),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for name, fn, _note in BENCHES:
+        t0 = time.perf_counter()
+        _rows, derived = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        print(f"{name},{us:.0f},{derived:.4g}")
+
+    # roofline (from dry-run artifacts, when present)
+    from benchmarks import roofline
+
+    for mesh in ("16x16", "2x16x16"):
+        t0 = time.perf_counter()
+        rows = roofline.load_rows(mesh=mesh)
+        us = (time.perf_counter() - t0) * 1e6
+        if rows:
+            worst = min(rows, key=lambda r: r["roofline_fraction"])
+            mean_frac = sum(r["roofline_fraction"] for r in rows) / len(rows)
+            print(f"roofline_{mesh},{us:.0f},{mean_frac:.4g}")
+            print(f"roofline_{mesh}_cells,{us:.0f},{len(rows)}")
+            print(f"roofline_{mesh}_worst,{us:.0f},"
+                  f"{worst['roofline_fraction']:.4g}")
+
+
+if __name__ == "__main__":
+    main()

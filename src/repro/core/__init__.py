@@ -1,0 +1,10 @@
+"""Occam's core contributions (paper §III) as composable modules.
+
+C1/C2: `closure` — row-plane tiles + dependence-closure arithmetic.
+C3:    `partition` — O(n^3) DP optimal partitioner (CNN + transformer).
+C4:    `stap` — staggered asynchronous pipelining planner + simulator.
+Models: `traffic` — analytical traffic/latency/energy (paper tables).
+"""
+from . import closure, graph, partition, stap, traffic  # noqa: F401
+
+__all__ = ["closure", "graph", "partition", "stap", "traffic"]

@@ -1,0 +1,164 @@
+"""Dependence-closure arithmetic (paper §III-A/B/C).
+
+Necessary condition (C1): a tile must span one *full input row-plane*
+(1 row x W x C) — anything narrower evicts elements with guaranteed future
+reuse in the orthogonal dimension.
+
+Sufficient condition / dependence closure (C2): to emit one output row-plane
+of span-final map ``L_j`` while capturing *all* reuse, hold — per layer
+``l in [i, j)`` — a circular buffer of ``rows_l`` input row-planes, where the
+row counts follow the stride-induced arithmetic sequence (receptive-field
+recurrence):
+
+    rows(L_j) = t                      (t = output row-planes per step, >= 1)
+    rows(L_l) = (rows(L_{l+1}) - 1) * stride_l + k_l     clamped to map height
+
+The closure size |DC(i, j)| = sum_l rows(L_l) * W_l * C_l over the *input*
+buffers L_i .. L_{j-1} (the final output row streams off-chip / downstream).
+This matches the paper's walkthrough (Fig. 4: DC(0,1) = 3 rows x 13 x 4 = 156).
+
+Residual edges do not grow the closure (§III-C: residual source rows are
+already present as a previous layer's non-residual input).
+"""
+from __future__ import annotations
+
+from .graph import NetSpec
+
+
+def span_row_counts(net: NetSpec, i: int, j: int, out_rows: int = 1) -> list[int]:
+    """Circular-buffer heights at feature maps ``L_i .. L_{j-1}``.
+
+    ``out_rows`` generalizes to t output row-planes per step (tile height t);
+    t=1 is the paper's minimal closure.
+    """
+    if not (0 <= i < j <= net.n_layers):
+        raise ValueError(f"bad span ({i}, {j})")
+    if out_rows < 1:
+        raise ValueError("out_rows must be >= 1")
+    rows = out_rows
+    counts_rev: list[int] = []
+    for l in range(j - 1, i - 1, -1):
+        layer = net.layers[l]
+        rows = (rows - 1) * layer.stride + layer.k
+        h_l = net.map_shape(l)[0]
+        # Padding rows are synthesized, not stored; clamp to the real map.
+        rows = min(rows, h_l)
+        counts_rev.append(rows)
+    return list(reversed(counts_rev))
+
+
+def span_closure_elems(net: NetSpec, i: int, j: int, out_rows: int = 1) -> int:
+    """|DC(i, j)| in elements for ``out_rows`` output row-planes per step."""
+    counts = span_row_counts(net, i, j, out_rows)
+    total = 0
+    for off, rows in enumerate(counts):
+        h, w, c = net.map_shape(i + off)
+        total += rows * w * c
+    return total
+
+
+def span_footprint_elems(net: NetSpec, i: int, j: int, out_rows: int = 1) -> int:
+    """Closure + chip-resident span filters (Eqn. 1 left-hand side)."""
+    return span_closure_elems(net, i, j, out_rows) + net.span_weight_elems(i, j)
+
+
+def max_tile_rows(net: NetSpec, i: int, j: int, capacity: int,
+                  batch: int = 1) -> int:
+    """Largest t (output row-planes per step) whose footprint fits capacity.
+
+    This is the Occam ``TileDim`` reported per-partition in the paper's
+    Table II (tiles are TileDim x RowWidth). Returns 0 if even t=1 misses.
+    Closures scale with batch; chip-resident filters are shared (Eqn. 6).
+    """
+    out_h = net.map_shape(j)[0]
+    weights = net.span_weight_elems(i, j)
+    lo, hi, best = 1, out_h, 0
+    while lo <= hi:
+        mid = (lo + hi) // 2
+        if batch * span_closure_elems(net, i, j, mid) + weights <= capacity:
+            best = mid
+            lo = mid + 1
+        else:
+            hi = mid - 1
+    return best
+
+
+# --------------------------------------------------------------------------
+# Layer-Fusion square tiles (the paper's comparison baseline, §III-A/IV)
+# --------------------------------------------------------------------------
+
+def square_tile_halo_rows(net: NetSpec, i: int, j: int, t: int) -> list[int]:
+    """Rows of L_l needed to produce a t x t output tile of L_j (same
+    recurrence but *both* spatial dims are tiled, so halos are re-fetched /
+    recomputed instead of kept)."""
+    return span_row_counts(net, i, j, out_rows=t)
+
+
+def square_tile_footprint_elems(net: NetSpec, i: int, j: int, t: int) -> int:
+    """Footprint of Layer Fusion's t x t output tile: per layer the buffer is
+    rows x cols x C with rows == cols (square), plus span weights."""
+    counts = span_row_counts(net, i, j, out_rows=t)
+    total = 0
+    for off, rows in enumerate(counts):
+        h, w, c = net.map_shape(i + off)
+        cols = min(rows, w)
+        total += rows * cols * c
+    return total + net.span_weight_elems(i, j)
+
+
+def max_square_tile(net: NetSpec, i: int, j: int, capacity: int,
+                    batch: int = 1) -> int:
+    """Largest square output tile side for Layer Fusion within capacity."""
+    out_h, out_w, _ = net.map_shape(j)
+    weights = net.span_weight_elems(i, j)
+    lo, hi, best = 1, max(out_h, out_w), 0
+    while lo <= hi:
+        mid = (lo + hi) // 2
+        fp = square_tile_footprint_elems(net, i, j, mid) - weights
+        if batch * fp + weights <= capacity:
+            best = mid
+            lo = mid + 1
+        else:
+            hi = mid - 1
+    return best
+
+
+def recompute_factor_square(net: NetSpec, i: int, j: int, t: int) -> float:
+    """Compute bloat of Layer Fusion's t x t tiles over exact execution.
+
+    Layer Fusion scans tiles in row-major order and *caches the overlap in
+    the scan direction* (its pyramid buffers), but the orthogonal halo was
+    evicted with the previous tile row-band and must be *recomputed* — the
+    paper's 'recomputation triggered by reuse not captured on-chip'. Per
+    tile step, layer l therefore computes its full vertical extent
+    (rows_out(l), halo included) over only the fresh columns (t * sigma(l),
+    where sigma(l) is the cumulative stride from l+1 to the span output).
+    Occam's full-row circular buffers never recompute (its necessary
+    condition keeps every future-reuse row resident).
+
+    Returns total-MACs(LF tiling) / total-MACs(exact) for the span, >= 1.
+    """
+    if t <= 0:
+        return float("inf")
+    out_h, out_w, _ = net.map_shape(j)
+    n_tiles = -(-out_h // t) * (-(-out_w // t))
+    exact = sum(net.layers[l].macs for l in range(i, j))
+    tiled = 0.0
+    # Rows of each layer's *output* needed per tile = row counts shifted by one.
+    counts = span_row_counts(net, i, j, out_rows=t)  # inputs of layers i..j-1
+    out_counts = counts[1:] + [t]  # outputs of layers i..j-1
+    sigma = 1
+    sigmas = []
+    for l in range(j - 1, i - 1, -1):  # sigma(l) = prod strides of l+1..j-1
+        sigmas.append(sigma)
+        sigma *= net.layers[l].stride
+    sigmas = list(reversed(sigmas))
+    for off, l in enumerate(range(i, j)):
+        layer = net.layers[l]
+        if layer.kind != "conv":
+            continue
+        rows = min(out_counts[off], layer.out_h)       # vertical halo: recomputed
+        fresh_cols = min(t * sigmas[off], layer.out_w)  # scan dir: cached overlap
+        tiled += n_tiles * rows * fresh_cols * layer.out_ch \
+            * layer.k * layer.k * layer.in_ch
+    return max(tiled / exact, 1.0) if exact else 1.0

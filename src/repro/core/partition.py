@@ -1,0 +1,279 @@
+"""Occam's optimal-partition dynamic program (paper §III-D).
+
+Partitions a layer chain into contiguous spans such that each span's
+footprint (dependence closure + chip-resident filters) fits the on-chip
+capacity ``C``, provably minimizing off-chip transfers at span boundaries.
+
+The DP is written against an abstract :class:`PartitionProblem` so the same
+optimal machinery drives (a) the paper's CNNs (closure footprints) and
+(b) transformer pipeline-stage assignment (HBM footprints) — see
+``partition_transformer`` at the bottom.
+
+Complexity: O(n^3) spans x split points, O(n^2) table (paper §III-D
+"Complexity"). Runs in milliseconds for ResNet-152.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Protocol, Sequence
+
+from .closure import max_tile_rows, span_footprint_elems
+from .graph import NetSpec
+
+INF = float("inf")
+
+
+class PartitionProblem(Protocol):
+    """What the DP needs to know about a layer chain."""
+
+    @property
+    def n_layers(self) -> int: ...
+
+    def boundary_cost(self, i: int) -> float:
+        """Off-chip elements moved when map L_i is a span input OR output
+        (counted once per direction; a boundary between two spans costs
+        write + read = 2x this)."""
+        ...
+
+    def span_fits(self, i: int, j: int) -> bool:
+        """True if SPAN(i, j)'s footprint fits on-chip (Eqn. 1)."""
+        ...
+
+    def residual_edges(self) -> Sequence[tuple[int, int]]: ...
+
+    def residual_cost(self, s: int) -> float:
+        """Extra one-direction cost of spilling residual source map L_s."""
+        ...
+
+
+@dataclasses.dataclass
+class Span:
+    start: int
+    end: int
+    fits: bool  # False only for oversized single layers (lower-bound mode)
+
+
+@dataclasses.dataclass
+class PartitionResult:
+    boundaries: list[int]  # interior partition points p_1 < ... < p_{k-1}
+    spans: list[Span]
+    transfers: float  # OP[0, n].X — optimal off-chip elements moved
+    table_X: dict[tuple[int, int], float]
+    table_p: dict[tuple[int, int], int | None]
+
+    @property
+    def n_spans(self) -> int:
+        return len(self.spans)
+
+
+def optimal_partition(problem: PartitionProblem) -> PartitionResult:
+    """Bottom-up DP over span lengths (paper Fig. 4 walkthrough).
+
+    Base case   : SPAN(i, j) fits  -> X = |L_i| + |L_j|, p = null.
+    Recurrence  : X = min_p X(i,p) + X(p,j) [+ 2|L_s| per residual edge
+                  (s, t) with i <= s < p < t <= j].
+
+    Residual accounting: an edge is charged at the *outermost* split that
+    separates source from sink and never again (sub-spans can no longer see
+    both endpoints), i.e. a spilled residual is written once and read once
+    ("the values must be written out to and read back from memory") no
+    matter how many boundaries it crosses. This keeps the objective a
+    well-defined function of the final PBS, preserving optimal substructure.
+    Oversized single layers (span of length 1 that does not fit) get the
+    base-case lower bound, as the paper does for VGG's biggest layers.
+    """
+    n = problem.n_layers
+    if n == 0:
+        raise ValueError("empty network")
+    edges = list(problem.residual_edges())
+    X: dict[tuple[int, int], float] = {}
+    P: dict[tuple[int, int], int | None] = {}
+    fits: dict[tuple[int, int], bool] = {}
+
+    for length in range(1, n + 1):
+        for i in range(0, n - length + 1):
+            j = i + length
+            f = problem.span_fits(i, j)
+            fits[(i, j)] = f
+            if f or length == 1:
+                # length==1 & !fits: paper's lower-bound estimate for
+                # single layers that exceed capacity.
+                X[(i, j)] = problem.boundary_cost(i) + problem.boundary_cost(j)
+                P[(i, j)] = None
+                continue
+            best_x, best_p = INF, None
+            for p in range(i + 1, j):
+                penalty = 0.0
+                for (s, t) in edges:
+                    if i <= s < p < t <= j:
+                        penalty += 2.0 * problem.residual_cost(s)
+                cand = X[(i, p)] + X[(p, j)] + penalty
+                if cand < best_x:
+                    best_x, best_p = cand, p
+            X[(i, j)] = best_x
+            P[(i, j)] = best_p
+
+    # Reconstruct the partition boundary set from the memoized split points.
+    boundaries: list[int] = []
+
+    def rec(i: int, j: int) -> None:
+        p = P[(i, j)]
+        if p is None:
+            return
+        rec(i, p)
+        boundaries.append(p)
+        rec(p, j)
+
+    rec(0, n)
+    cuts = [0] + boundaries + [n]
+    spans = [Span(cuts[k], cuts[k + 1], fits[(cuts[k], cuts[k + 1])])
+             for k in range(len(cuts) - 1)]
+    return PartitionResult(boundaries, spans, X[(0, n)], X, P)
+
+
+# --------------------------------------------------------------------------
+# CNN problem (the paper)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CNNPartitionProblem:
+    """Paper §III-D: footprint = |DC(i,j)| + sum W, boundary = b * |L_i|."""
+
+    net: NetSpec
+    capacity_elems: int
+    batch: int = 1
+
+    @property
+    def n_layers(self) -> int:
+        return self.net.n_layers
+
+    def boundary_cost(self, i: int) -> float:
+        return float(self.batch * self.net.map_elems(i))
+
+    def span_fits(self, i: int, j: int) -> bool:
+        # Feature-map closures scale with batch; filters are shared (Eqn. 6).
+        from .closure import span_closure_elems
+
+        fp = (self.batch * span_closure_elems(self.net, i, j)
+              + self.net.span_weight_elems(i, j))
+        return fp <= self.capacity_elems
+
+    def residual_edges(self) -> Sequence[tuple[int, int]]:
+        return self.net.residual_edges
+
+    def residual_cost(self, s: int) -> float:
+        return float(self.batch * self.net.map_elems(s))
+
+
+def partition_cnn(net: NetSpec, capacity_elems: int, batch: int = 1) -> PartitionResult:
+    return optimal_partition(CNNPartitionProblem(net, capacity_elems, batch))
+
+
+def partition_report(net: NetSpec, capacity_elems: int, batch: int = 1) -> list[dict]:
+    """Per-span report matching the paper's Table II columns:
+    (p_begin, p_end, occam_tile_rows) + footprint split (Fig. 7)."""
+    res = partition_cnn(net, capacity_elems, batch)
+    rows = []
+    for sp in res.spans:
+        from .closure import max_square_tile, span_closure_elems
+
+        rows.append({
+            "start": sp.start,
+            "end": sp.end,
+            "fits": sp.fits,
+            "occam_tile_rows": max_tile_rows(net, sp.start, sp.end,
+                                             capacity_elems, batch),
+            "lf_square_tile": max_square_tile(net, sp.start, sp.end,
+                                              capacity_elems, batch),
+            "closure_elems": span_closure_elems(net, sp.start, sp.end),
+            "weight_elems": net.span_weight_elems(sp.start, sp.end),
+        })
+    return rows
+
+
+# --------------------------------------------------------------------------
+# Transformer problem (Occam C3 applied to pipeline-stage assignment)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TransformerPartitionProblem:
+    """Occam's DP with an HBM cost model for decoder stacks.
+
+    layer_weight_bytes[l]   : parameter (+optimizer-state) bytes of layer l
+    boundary_act_bytes      : activation bytes crossing any layer boundary
+                              (B x S x d_model x dtype) — uniform in a
+                              homogeneous stack, so the DP optimizes *where*
+                              capacity forces cuts (heterogeneous layers —
+                              MoE vs Mamba vs attn — make boundaries cheap or
+                              expensive via working-set differences).
+    stage_capacity_bytes    : per-mesh-slice HBM budget
+    layer_act_bytes[l]      : residency (KV cache / SSM state / remat stash)
+                              of layer l that must live on the stage.
+    residual (s, t) edges model long skips (e.g. speculative exits); none for
+    the assigned archs' plain pre-norm residuals (those stay inside a layer).
+    """
+
+    layer_weight_bytes: Sequence[float]
+    layer_act_bytes: Sequence[float]
+    boundary_act_bytes: float
+    stage_capacity_bytes: float
+    edges: Sequence[tuple[int, int]] = ()
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layer_weight_bytes)
+
+    def boundary_cost(self, i: int) -> float:
+        return float(self.boundary_act_bytes)
+
+    def span_fits(self, i: int, j: int) -> bool:
+        fp = sum(self.layer_weight_bytes[i:j]) + sum(self.layer_act_bytes[i:j])
+        return fp <= self.stage_capacity_bytes
+
+    def residual_edges(self) -> Sequence[tuple[int, int]]:
+        return self.edges
+
+    def residual_cost(self, s: int) -> float:
+        return float(self.boundary_act_bytes)
+
+
+def partition_transformer(layer_weight_bytes: Sequence[float],
+                          layer_act_bytes: Sequence[float],
+                          boundary_act_bytes: float,
+                          stage_capacity_bytes: float,
+                          edges: Sequence[tuple[int, int]] = ()) -> PartitionResult:
+    return optimal_partition(TransformerPartitionProblem(
+        list(layer_weight_bytes), list(layer_act_bytes),
+        boundary_act_bytes, stage_capacity_bytes, list(edges)))
+
+
+# --------------------------------------------------------------------------
+# Reference implementations for testing optimality
+# --------------------------------------------------------------------------
+
+def brute_force_partition(problem: PartitionProblem) -> tuple[float, list[int]]:
+    """Exponential enumeration of all PBSs (Layer Fusion's search) — used in
+    tests to prove the DP optimal on small nets. O(2^(n-1))."""
+    n = problem.n_layers
+    edges = list(problem.residual_edges())
+    best = (INF, [])
+
+    def cost_of(cuts: list[int]) -> float:
+        pts = [0] + cuts + [n]
+        total = 0.0
+        for a, b in zip(pts, pts[1:]):
+            if not problem.span_fits(a, b) and b - a > 1:
+                return INF
+            total += problem.boundary_cost(a) + problem.boundary_cost(b)
+        for (s, t) in edges:
+            if any(s < p < t for p in cuts):  # charged once per cut edge
+                total += 2.0 * problem.residual_cost(s)
+        return total
+
+    for mask in range(1 << (n - 1)):
+        cuts = [p for p in range(1, n) if mask >> (p - 1) & 1]
+        c = cost_of(cuts)
+        if c < best[0]:
+            best = (c, cuts)
+    return best

@@ -1,0 +1,127 @@
+"""FlashAttention forward as an Occam dependence-closure kernel.
+
+Occam's C1/C2 applied to attention: the output tile is a block of *query
+rows*; its dependence closure — the running softmax statistics (m, l) and
+the output accumulator — is held in VMEM scratch while K/V row-planes
+stream through once. Nothing is ever re-fetched from HBM and nothing is
+recomputed (the standard FlashAttention recurrence is exactly the circular-
+buffer trick with an O(1) summary instead of raw rows).
+
+Grid: (batch*heads, n_q_blocks, n_kv_blocks), kv innermost so the scratch
+closure persists across the sequential TPU grid. Causal masking skips
+fully-masked kv blocks. GQA is handled in ops.py via the kv BlockSpec
+index_map (no materialized head repeats).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+STAT_LANES = 128  # TPU lane width for the (bq, 128) stat scratch
+
+
+def _flash_kernel(q, k, v, o, m_scr, l_scr, acc_scr, *,
+                  causal: bool, sm_scale: float, block_q: int, block_k: int,
+                  seq_q: int, seq_k: int, causal_offset: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _reset_closure():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    def compute():
+        qb = q[0].astype(jnp.float32) * sm_scale          # (bq, d)
+        kb = k[0].astype(jnp.float32)                     # (bk, d)
+        s = jnp.dot(qb, kb.T, preferred_element_type=jnp.float32)
+        # mask out-of-range kv rows (ragged tail) and the causal triangle
+        kv_ids = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kv_ids < seq_k
+        if causal:
+            # bottom-aligned: query row r attends kv <= r + (seq_k - seq_q)
+            q_ids = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            mask = jnp.logical_and(mask, kv_ids <= q_ids + causal_offset)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, 0]
+        l_prev = l_scr[:, 0]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * alpha + p.sum(axis=-1)
+        vb = v[0].astype(jnp.float32)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jnp.dot(p, vb, preferred_element_type=jnp.float32))
+        m_scr[...] = jnp.broadcast_to(m_cur[:, None], m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_cur[:, None], l_scr.shape)
+
+    if causal:
+        # skip kv blocks strictly above the causal diagonal
+        pl.when(k_start <= q_start + block_q - 1 + causal_offset)(compute)
+    else:
+        compute()
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        l = l_scr[:, 0]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> zeros
+        o[0] = (acc_scr[...] / l[:, None]).astype(o.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("seq_q_valid", "seq_k_valid", "causal", "block_q",
+                     "block_k", "interpret"))
+def flash_attention_call(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         seq_q_valid: int | None = None,
+                         seq_k_valid: int | None = None,
+                         causal: bool = True, block_q: int = 128,
+                         block_k: int = 128,
+                         interpret: bool = False) -> jax.Array:
+    """q: (BH, Sq, D); k, v: (BH, Skv, D) — heads pre-flattened/grouped and
+    sequences pre-padded to block multiples by ops.py. ``seq_k_valid`` masks
+    padded kv rows. Returns (BH, Sq, D)."""
+    bh, seq_q, d = q.shape
+    _, seq_k, _ = k.shape
+    if seq_q % block_q or seq_k % block_k:
+        raise ValueError("sequences must be padded to block multiples")
+    n_q = seq_q // block_q
+    n_k = seq_k // block_k
+    sm_scale = 1.0 / math.sqrt(d)
+
+    sk_valid = seq_k_valid if seq_k_valid is not None else seq_k
+    sq_valid = seq_q_valid if seq_q_valid is not None else seq_q
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, sm_scale=sm_scale, block_q=block_q,
+        block_k=block_k, seq_q=seq_q, seq_k=sk_valid,
+        causal_offset=max(sk_valid - sq_valid, 0))
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq_q, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, STAT_LANES), jnp.float32),  # m (running max)
+            pltpu.VMEM((block_q, STAT_LANES), jnp.float32),  # l (running sum)
+            pltpu.VMEM((block_q, d), jnp.float32),           # output acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,50 @@
+"""Public op: GQA flash attention (closure-tiled) with backend dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_call
+from .ref import attention_ref
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) with Hq % Hkv == 0.
+
+    GQA: kv heads are broadcast to query groups *by indexing*, never
+    materialized (the kernel consumes pre-grouped (B*Hq, S, D) views whose
+    kv rows alias the grouped head).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    if hq % hkv:
+        raise ValueError(f"Hq={hq} not a multiple of Hkv={hkv}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    group = hq // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    # Pad sequences to block multiples: blocks stay aligned (no dynamic-slice
+    # clamping on ragged tails) and the kernel masks kv rows >= seq_k.
+    pq = (-sq) % block_q
+    pk = (-sk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else v
+    qf = qp.reshape(b * hq, sq + pq, d)
+    # kv head for flattened q-head index n = (n % hq) // group; build the
+    # aliased view via gather on the head axis (XLA keeps this as a cheap
+    # gather; on TPU the BlockSpec index_map would subsume it).
+    head_ids = (jnp.arange(b * hq) % hq) // group + (jnp.arange(b * hq) // hq) * hkv
+    kf = kp.reshape(b * hkv, sk + pk, d)[head_ids]
+    vf = vp.reshape(b * hkv, sk + pk, d)[head_ids]
+    o = flash_attention_call(qf, kf, vf, seq_q_valid=sq, seq_k_valid=sk,
+                             causal=causal, block_q=block_q, block_k=block_k,
+                             interpret=interpret)
+    return o.reshape(b, hq, sq + pq, d)[:, :, :sq, :]
+
+
+__all__ = ["flash_attention", "attention_ref"]

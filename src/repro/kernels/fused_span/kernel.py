@@ -1,0 +1,141 @@
+"""Occam fused-span Pallas kernel: a two-conv span streamed row-by-row with
+the dependence closure held in VMEM scratch.
+
+This is the paper's contribution C1+C2 as a TPU kernel, *not* a CUDA port:
+
+* Necessary condition (C1): the tile is one full input **row-plane**
+  (1 x W x C_in) per grid step — the BlockSpec shape. Nothing narrower
+  enters VMEM; nothing is ever re-read from HBM (contrast Layer Fusion's
+  square tiles, which re-fetch/recompute halos).
+* Sufficient condition (C2): the two circular row buffers (`ring_in`,
+  `ring_mid`) hold exactly the dependence closure of one output row-plane —
+  sized (k, W, C) by the closure arithmetic — in VMEM scratch, which
+  persists across the *sequential* TPU grid. Software-managed VMEM makes
+  the closure an allocation, not a cache-hit hope (the paper's GPU pain).
+* Filters stay VMEM-resident for the whole kernel (cross-row filter reuse;
+  the multi-chip pipeline extends this to cross-image reuse).
+
+The convolution itself is executed as k*k MXU matmuls (W, C_in) @
+(C_in, C_out) over shifted row windows — channels-minor layout, contraction
+dims padded to the 128-lane MXU by the wrapper in ops.py.
+
+Restrictions (asserted in ops.py): stride 1, odd k, same-padding, two conv
+layers with ReLU. General spans/strides run on the pure-JAX streaming path
+(repro.models.cnn.occam_forward); this kernel covers the paper's hot case
+(VGG-style 3x3 stacks dominate the fused spans in Table II).
+
+Pipeline (h = k // 2): at grid step i
+    row i of the input arrives in VMEM            (i < H)
+    mid row  m = i - h   becomes computable  ->  ring_mid
+    out row  o = i - 2h  becomes computable  ->  written to HBM
+so the grid has H + 2h steps; the first 2h output writes land on row 0 and
+are overwritten by the first valid write (sequential grid semantics).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _row_conv(window: jax.Array, w: jax.Array, b: jax.Array, k: int,
+              width: int) -> jax.Array:
+    """One output row from a (k, W + 2h, C_in) padded window: k*k matmuls.
+
+    window is already horizontally zero-padded; w: (k, k, C_in, C_out).
+    """
+    acc = jnp.zeros((width, w.shape[-1]), jnp.float32)
+    for dy in range(k):
+        for dx in range(k):
+            acc += jnp.dot(window[dy, dx:dx + width, :].astype(jnp.float32),
+                           w[dy, dx].astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+    return jax.nn.relu(acc + b.astype(jnp.float32))
+
+
+def _fused_span_kernel(x_row, w1, b1, w2, b2, out_row,
+                       ring_in, ring_mid, *, k: int, height: int, width: int):
+    h = k // 2
+    i = pl.program_id(0)
+
+    # --- stage 0: the arriving input row-plane joins the closure ----------
+    @pl.when(i < height)
+    def _store_input():
+        ring_in[i % k] = x_row[0]
+
+    def window(ring, row_idx, n_valid_rows):
+        """(k, W + 2h, C) window of rows row_idx-h .. row_idx+h with zero
+        padding outside [0, n_valid_rows)."""
+        rows = []
+        for dy in range(-h, h + 1):
+            r = row_idx + dy
+            valid = jnp.logical_and(r >= 0, r < n_valid_rows)
+            data = ring[(r % k).astype(jnp.int32)]
+            rows.append(jnp.where(valid, data, jnp.zeros_like(data)))
+        win = jnp.stack(rows)
+        return jnp.pad(win, ((0, 0), (h, h), (0, 0)))
+
+    # --- stage 1: mid row m = i - h --------------------------------------
+    m = i - h
+
+    @pl.when(jnp.logical_and(m >= 0, m < height))
+    def _compute_mid():
+        win = window(ring_in, m, height)
+        ring_mid[m % k] = _row_conv(win, w1[...], b1[...], k, width
+                                    ).astype(ring_mid.dtype)
+
+    # --- stage 2: out row o = i - 2h --------------------------------------
+    o = i - 2 * h
+
+    @pl.when(jnp.logical_and(o >= 0, o < height))
+    def _compute_out():
+        win = window(ring_mid, o, height)
+        out_row[0] = _row_conv(win, w2[...], b2[...], k, width
+                               ).astype(out_row.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def fused_span_call(x: jax.Array, w1: jax.Array, b1: jax.Array,
+                    w2: jax.Array, b2: jax.Array, *, k: int,
+                    interpret: bool = False) -> jax.Array:
+    """x: (H, W, C_in) -> (H, W, C_out2). See module docstring."""
+    height, width, c_in = x.shape
+    c_mid = w1.shape[-1]
+    c_out = w2.shape[-1]
+    h = k // 2
+    grid = (height + 2 * h,)
+
+    kernel = functools.partial(_fused_span_kernel, k=k, height=height,
+                               width=width)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # one full input row-plane per step — the C1 tile shape
+            pl.BlockSpec((1, width, c_in),
+                         lambda i: (jnp.minimum(i, height - 1), 0, 0)),
+            # chip-resident filters: whole arrays in VMEM for every step
+            pl.BlockSpec((k, k, c_in, c_mid), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((c_mid,), lambda i: (0,)),
+            pl.BlockSpec((k, k, c_mid, c_out), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((c_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, width, c_out),
+            lambda i: (jnp.clip(i - 2 * h, 0, height - 1), 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((height, width, c_out), x.dtype),
+        scratch_shapes=[
+            pltpu_vmem((k, width, c_in), x.dtype),    # closure: input rows
+            pltpu_vmem((k, width, c_mid), x.dtype),   # closure: mid rows
+        ],
+        interpret=interpret,
+    )(x, w1, b1, w2, b2)
+
+
+def pltpu_vmem(shape, dtype):
+    """VMEM scratch allocation (TPU); plain scratch under interpret mode."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

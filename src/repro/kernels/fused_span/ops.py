@@ -1,0 +1,34 @@
+"""Public op: Occam fused-span conv with validation + backend dispatch."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import fused_span_call
+from .ref import fused_span_ref
+
+
+def fused_span(x: jax.Array, w1: jax.Array, b1: jax.Array,
+               w2: jax.Array, b2: jax.Array,
+               interpret: bool | None = None) -> jax.Array:
+    """Two stacked same-padded stride-1 conv+ReLU layers, fused so the
+    intermediate map never leaves VMEM (Occam dependence closure).
+
+    x: (H, W, Cin); w1: (k, k, Cin, Cmid); w2: (k, k, Cmid, Cout).
+    ``interpret`` defaults to True off-TPU (pure-Python execution of the
+    kernel body for correctness validation on CPU).
+    """
+    k = w1.shape[0]
+    if w1.shape[0] != w1.shape[1] or w2.shape[0] != w2.shape[1]:
+        raise ValueError("square filters only")
+    if w2.shape[0] != k:
+        raise ValueError("both layers must share k")
+    if k % 2 != 1:
+        raise ValueError("odd k only (same padding)")
+    if x.ndim != 3 or x.shape[-1] != w1.shape[2] or w1.shape[3] != w2.shape[2]:
+        raise ValueError(f"shape mismatch: {x.shape} {w1.shape} {w2.shape}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return fused_span_call(x, w1, b1, w2, b2, k=k, interpret=interpret)
+
+
+__all__ = ["fused_span", "fused_span_ref"]

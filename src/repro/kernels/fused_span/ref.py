@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused two-conv span (stride 1, same padding)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv_relu(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (H, W, Cin), w: (k, k, Cin, Cout), same padding, stride 1."""
+    k = w.shape[0]
+    p = k // 2
+    y = lax.conv_general_dilated(
+        x[None].astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(1, 1), padding=((p, p), (p, p)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))[0]
+    return jax.nn.relu(y + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def fused_span_ref(x: jax.Array, w1: jax.Array, b1: jax.Array,
+                   w2: jax.Array, b2: jax.Array) -> jax.Array:
+    return conv_relu(conv_relu(x, w1, b1), w2, b2)

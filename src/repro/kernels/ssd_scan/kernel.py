@@ -1,0 +1,92 @@
+"""Mamba-2 SSD chunked scan as an Occam dependence-closure kernel.
+
+The SSD recurrence  S_t = a_t * S_{t-1} + B_t (x) x_t ,  y_t = C_t^T S_t
+has a *constant-size* dependence closure: the (N x P) state summarizes all
+past inputs. The chunked (state-space duality) algorithm is Occam's tiling
+applied along time: each chunk's intra-block term is a dense MXU matmul
+(quadratic in the chunk, like the attention closure), and the inter-chunk
+term carries the closure (the running state in VMEM scratch) across the
+sequential TPU grid — streamed once from HBM, never re-read.
+
+Grid: (batch*heads, n_chunks), chunk innermost. Scratch: S (N, P) fp32,
+reset at chunk 0.
+
+Math (log-decay alpha_t = log a_t <= 0, cumsum A[i] = sum_{t<=i} alpha_t):
+    L[i, j]   = exp(A[i] - A[j]) for i >= j else 0
+    Y_intra   = ((C B^T) * L) X
+    Y_inter_i = exp(A[i]) * C_i S_in
+    S_out     = exp(A[Q-1]) S_in + sum_j exp(A[Q-1] - A[j]) B_j (x) x_j
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x, a, b, c, y, state, *, chunk: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _reset():
+        state[...] = jnp.zeros_like(state)
+
+    xb = x[0].astype(jnp.float32)            # (Q, P)
+    ab = a[0].astype(jnp.float32)            # (Q,)
+    bb = b[0].astype(jnp.float32)            # (Q, N)
+    cb = c[0].astype(jnp.float32)            # (Q, N)
+
+    a_cum = jnp.cumsum(ab)                   # inclusive: A[i]
+    # intra-chunk: lower-triangular decay kernel (the 'duality' matmul)
+    seg = a_cum[:, None] - a_cum[None, :]    # A[i] - A[j]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    l_mat = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+    scores = jnp.dot(cb, bb.T, preferred_element_type=jnp.float32) * l_mat
+    y_blk = jnp.dot(scores, xb, preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of the incoming closure (state)
+    s_in = state[...]
+    y_blk += jnp.exp(a_cum)[:, None] * jnp.dot(
+        cb, s_in, preferred_element_type=jnp.float32)
+
+    # closure update for the next chunk
+    a_tot = a_cum[-1]
+    w = jnp.exp(a_tot - a_cum)[:, None] * bb          # (Q, N)
+    state[...] = jnp.exp(a_tot) * s_in + jnp.dot(
+        w.T, xb, preferred_element_type=jnp.float32)
+
+    y[0] = y_blk.astype(y.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_call(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array, *,
+                  chunk: int = 64, interpret: bool = False) -> jax.Array:
+    """x: (BH, T, P); a: (BH, T) log-decay; b, c: (BH, T, N). T % chunk == 0.
+
+    Returns y: (BH, T, P).
+    """
+    bh, t, p = x.shape
+    n = b.shape[-1]
+    if t % chunk:
+        raise ValueError(f"T={t} not a multiple of chunk={chunk}")
+    n_chunks = t // chunk
+    from jax.experimental.pallas import tpu as pltpu
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, chunk), lambda h, i: (h, i)),
+            pl.BlockSpec((1, chunk, n), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, chunk, n), lambda h, i: (h, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, a, b, c)

@@ -1,0 +1,44 @@
+"""Public op: Mamba-2 SSD chunked scan with group broadcast + padding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan_call
+from .ref import ssd_ref
+
+
+def ssd_scan(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array, *,
+             chunk: int = 64, interpret: bool | None = None) -> jax.Array:
+    """Multi-head SSD scan.
+
+    x: (B, T, H, P) head values
+    a: (B, T, H)   log decay per head/step (<= 0 for stability)
+    b, c: (B, T, G, N) with H % G == 0 (groups broadcast like GQA)
+    Returns (B, T, H, P).
+    """
+    bsz, t, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    if h % g:
+        raise ValueError(f"H={h} not a multiple of G={g}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    pad = (-t) % chunk
+    if pad:  # zero x contributes nothing; a=0 keeps state decay neutral
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    rep = h // g
+    head_of = jnp.arange(bsz * h)
+    grp = (head_of % h) // rep + (head_of // h) * g
+    xf = x.transpose(0, 2, 1, 3).reshape(bsz * h, t + pad, p)
+    af = a.transpose(0, 2, 1).reshape(bsz * h, t + pad)
+    bf = b.transpose(0, 2, 1, 3).reshape(bsz * g, t + pad, n)[grp]
+    cf = c.transpose(0, 2, 1, 3).reshape(bsz * g, t + pad, n)[grp]
+    y = ssd_scan_call(xf, af, bf, cf, chunk=chunk, interpret=interpret)
+    y = y[:, :t].reshape(bsz, h, t, p).transpose(0, 2, 1, 3)
+    return y
+
+
+__all__ = ["ssd_scan", "ssd_ref"]

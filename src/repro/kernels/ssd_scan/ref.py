@@ -1,0 +1,31 @@
+"""Pure-jnp oracle: naive sequential SSD recurrence via lax.scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_ref(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
+    """x: (BH, T, P); a: (BH, T) log decay; b, c: (BH, T, N) -> (BH, T, P).
+
+    S_t = exp(a_t) S_{t-1} + B_t (x) x_t ;  y_t = C_t^T S_t. fp32 state.
+    """
+    bh, t, p = x.shape
+    n = b.shape[-1]
+
+    def step(s, inp):
+        x_t, a_t, b_t, c_t = inp
+        s = jnp.exp(a_t) * s + b_t[:, None] * x_t[None, :]
+        y = c_t @ s
+        return s, y
+
+    def one(xh, ah, bh_, ch):
+        s0 = jnp.zeros((n, p), jnp.float32)
+        _, ys = lax.scan(step, s0, (xh.astype(jnp.float32),
+                                    ah.astype(jnp.float32),
+                                    bh_.astype(jnp.float32),
+                                    ch.astype(jnp.float32)))
+        return ys
+
+    return jax.vmap(one)(x, a, b, c).astype(x.dtype)

@@ -1,0 +1,154 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (architecture x input shape) on
+# the production meshes, print memory/cost analyses, dump roofline inputs.
+#
+# Usage:
+#     PYTHONPATH=src:. python -m repro.launch.dryrun --arch llama3.2-1b \
+#         --shape train_4k [--multi-pod] [--out results/dryrun]
+#     PYTHONPATH=src:. python -m repro.launch.dryrun --all [--both-meshes]
+#
+# The FIRST TWO LINES of this file force 512 placeholder CPU devices before
+# any jax import — jax locks the device count on first init. Do NOT import
+# this module from tests (smoke tests must see 1 device).
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPE_GRID, applicable_shapes, get_config
+from repro.models.sharding import use_shardings
+from .mesh import make_production_mesh
+from .specs import build_cell, make_ctx
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str | None = None, save_hlo: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPE_GRID[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = make_ctx(mesh, multi_pod, shape)
+    t0 = time.time()
+    with use_shardings(ctx):
+        cell = build_cell(cfg, shape, ctx)
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         donate_argnums=cell.donate_argnums)
+        lowered = jitted.lower(*cell.args_sds)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    from benchmarks.hlo_analysis import analyze_hlo
+
+    pod_size = 256 if multi_pod else None
+    hlo = analyze_hlo(hlo_text, pod_size)
+    colls = hlo.collective_summary()
+
+    n_chips = mesh.devices.size
+    total, active = cfg.param_count()
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "label": cell.label,
+        "mesh": f"{'2x16x16' if multi_pod else '16x16'}",
+        "n_chips": n_chips,
+        "seconds_lower": round(t_lower, 1),
+        "seconds_compile": round(t_compile, 1),
+        "params_total": total,
+        "params_active": active,
+        "memory_per_device": {
+            "arguments_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": (mem.argument_size_in_bytes
+                                    + mem.output_size_in_bytes
+                                    + mem.temp_size_in_bytes
+                                    - mem.alias_size_in_bytes),
+        },
+        "cost_per_device": {
+            # raw cost_analysis counts while bodies ONCE — kept as a
+            # diagnostic; the roofline uses the trip-count-aware HLO walk.
+            "flops_xla_raw": cost.get("flops", 0.0),
+            "bytes_xla_raw": cost.get("bytes accessed", 0.0),
+            "flops": hlo.flops,
+            "bytes_accessed": hlo.bytes_hbm,
+            "n_dots": hlo.n_dots,
+        },
+        "collectives_per_device": colls,
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}__{shape_name}__{record['mesh']}".replace("/", "_")
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(record, f, indent=2)
+        if save_hlo:
+            with open(os.path.join(out_dir, tag + ".hlo.txt"), "w") as f:
+                f.write(hlo_text)
+    return record
+
+
+def fmt(record: dict) -> str:
+    m = record["memory_per_device"]
+    c = record["cost_per_device"]
+    k = record["collectives_per_device"]
+    return (f"{record['label']:60s} mesh={record['mesh']:7s} "
+            f"mem/dev={(m['peak_estimate_bytes'])/2**30:7.2f}GiB "
+            f"flops/dev={c['flops']:.3e} bytes/dev={c['bytes_accessed']:.3e} "
+            f"coll/dev={k['total_bytes']:.3e}B "
+            f"(compile {record['seconds_compile']:.0f}s)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHS))
+    ap.add_argument("--shape", choices=list(SHAPE_GRID))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in applicable_shapes(get_config(arch)):
+                cells.append((arch, shape))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch/--shape or --all required")
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                rec = run_cell(arch, shape, mp, args.out, args.save_hlo)
+                print(fmt(rec), flush=True)
+            except Exception as e:  # noqa: BLE001 — report, keep sweeping
+                failures.append((arch, shape, mp, repr(e)))
+                print(f"FAIL {arch}/{shape} multi_pod={mp}: {e!r}",
+                      flush=True)
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        sys.exit(1)
+    print("\nall dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (jax locks the device count on first init, and
+smoke tests must see 1 CPU device while the dry-run sees 512 placeholders).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (one v5e pod's 256 chips) or 2x16x16 (two pods, 512 chips).
+
+    Axes: data = DP/FSDP/batch, model = TP/EP/SP; pod = the cross-pod (DCN)
+    data axis in the multi-pod mesh.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(multi_pod: bool) -> tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)

@@ -1,0 +1,197 @@
+"""Cell assembly for the dry-run: input ShapeDtypeStructs + sharding trees
+for every (arch x shape x mesh) combination.
+
+Nothing here allocates device memory: params/optimizer/caches come from
+jax.eval_shape and inputs are ShapeDtypeStructs (weak-type-correct,
+shardable stand-ins).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelCfg, ShapeCfg
+from repro.models import sharding as shmod
+from repro.models.api import ModelAPI, build_model
+from repro.models.sharding import ShardCtx
+from repro.models.transformer import cache_axes, param_spec_tree
+from repro.optim.adamw import AdamW
+from .mesh import data_axes as mesh_data_axes
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def make_ctx(mesh: Mesh, multi_pod: bool, shape: ShapeCfg) -> ShardCtx:
+    """ShardCtx with cache symbols resolved for this cell's batch size."""
+    daxes = mesh_data_axes(multi_pod)
+    dp = 1
+    for a in daxes:
+        dp *= mesh.shape[a]
+    b = shape.global_batch
+    if b % dp == 0:
+        cache_b: Any = daxes if len(daxes) > 1 else daxes[0]
+        cache_s: Any = "model"
+    else:  # e.g. long_500k B=1 — shard the sequence over everything
+        cache_b = None
+        cache_s = daxes + ("model",)
+    # Sequence-parallel residual stream: on for training (shards the
+    # per-period remat stack 16-way over the model axis). Overridable for
+    # perf experiments via REPRO_ACT_SEQ=0.
+    import os as _os
+
+    sp_on = _os.environ.get("REPRO_ACT_SEQ", "1") != "0"
+    act_seq = "model" if (shape.kind == "train" and sp_on) else None
+    return ShardCtx(
+        mesh=mesh,
+        data_axes=daxes,
+        model_axis="model",
+        symbols=(("cache_b", cache_b), ("cache_s", cache_s),
+                 ("act_seq", act_seq)),
+    )
+
+
+def batch_partition(ctx: ShardCtx, global_batch: int):
+    dp = 1
+    for a in ctx.data_axes:
+        dp *= ctx.mesh.shape[a]
+    if global_batch % dp == 0:
+        return ctx.data_axes if len(ctx.data_axes) > 1 else ctx.data_axes[0]
+    return None
+
+
+def input_specs(cfg: ModelCfg, shape: ShapeCfg) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        specs = {"tokens": sds((b, 1), jnp.int32),
+                 "pos": sds((), jnp.int32)}
+        return specs
+    specs = {"tokens": sds((b, s), jnp.int32)}
+    if shape.kind == "train":
+        specs["labels"] = sds((b, s), jnp.int32)
+    if cfg.is_enc_dec:
+        specs["enc_embeds"] = sds((b, s, cfg.d_model), jnp.bfloat16)
+    if cfg.mrope_sections is not None:
+        specs["positions"] = sds((b, s, 3), jnp.int32)
+    return specs
+
+
+def batch_shardings(ctx: ShardCtx, specs: dict, global_batch: int) -> dict:
+    bspec = batch_partition(ctx, global_batch)
+    out = {}
+    for k, v in specs.items():
+        if k == "pos":
+            out[k] = NamedSharding(ctx.mesh, P())
+        else:
+            out[k] = NamedSharding(ctx.mesh, P(bspec, *([None] * (v.ndim - 1))))
+    return out
+
+
+def param_shardings(ctx: ShardCtx, params_sds) -> Any:
+    specs = param_spec_tree(params_sds)
+    with shmod.use_shardings(ctx):
+        return jax.tree.map(
+            lambda spec: NamedSharding(ctx.mesh, shmod.resolve(*spec)),
+            specs, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def cache_shardings(ctx: ShardCtx, caches_sds) -> Any:
+    with shmod.use_shardings(ctx):
+        def f(leaf):
+            axes = cache_axes(leaf.ndim)
+            if axes is None:
+                return NamedSharding(ctx.mesh, P())
+            return NamedSharding(ctx.mesh, shmod.resolve(*axes))
+
+        return jax.tree.map(f, caches_sds)
+
+
+def opt_shardings(ctx: ShardCtx, opt_sds, p_shardings) -> Any:
+    """m/v shard like their params; count replicated."""
+    from repro.optim.adamw import AdamWState
+
+    return AdamWState(m=p_shardings, v=p_shardings,
+                      count=NamedSharding(ctx.mesh, P()))
+
+
+@dataclasses.dataclass
+class Cell:
+    """Everything needed to lower one (arch x shape) on a mesh."""
+
+    fn: Any                  # callable to jit
+    args_sds: tuple          # abstract args
+    in_shardings: tuple
+    donate_argnums: tuple
+    label: str
+
+
+def build_cell(cfg: ModelCfg, shape: ShapeCfg, ctx: ShardCtx) -> Cell:
+    api = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params_sds = jax.eval_shape(api.init, key)
+    p_sh = param_shardings(ctx, params_sds)
+    specs = input_specs(cfg, shape)
+    b_sh = batch_shardings(ctx, specs, shape.global_batch)
+
+    if shape.kind == "train":
+        opt = AdamW()
+        from .train_step import make_train_step, microbatch_policy
+
+        dp = 1
+        for a in ctx.data_axes:
+            dp *= ctx.mesh.shape[a]
+        m = microbatch_policy(cfg.param_count()[0], shape.global_batch, dp)
+        step = make_train_step(api, opt, microbatches=m)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        o_sh = opt_shardings(ctx, opt_sds, p_sh)
+        if m > 1:  # leading microbatch dim on every batch leaf
+            specs = {k: sds((m, v.shape[0] // m, *v.shape[1:]), v.dtype)
+                     for k, v in specs.items()}
+            b_sh = {k: NamedSharding(
+                ctx.mesh, P(None, *s.spec)) for (k, v), s in
+                zip(specs.items(), b_sh.values())}
+        return Cell(
+            fn=step,
+            args_sds=(params_sds, opt_sds, specs),
+            in_shardings=(p_sh, o_sh, b_sh),
+            donate_argnums=(0, 1),
+            label=f"{cfg.name}/{shape.name}/train_step[m={m}]",
+        )
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            return api.prefill(params, batch, shape.seq_len)
+
+        return Cell(
+            fn=prefill_fn,
+            args_sds=(params_sds, specs),
+            in_shardings=(p_sh, b_sh),
+            donate_argnums=(),
+            label=f"{cfg.name}/{shape.name}/prefill",
+        )
+
+    # decode: one new token against a seq_len cache
+    b = shape.global_batch
+    if cfg.is_enc_dec:
+        caches_sds = jax.eval_shape(
+            lambda: api.init_caches(b, shape.seq_len, shape.seq_len))
+    else:
+        caches_sds = jax.eval_shape(lambda: api.init_caches(b, shape.seq_len))
+    c_sh = cache_shardings(ctx, caches_sds)
+
+    def decode_fn(params, tokens, caches, pos):
+        return api.decode_step(params, tokens, caches, pos)
+
+    return Cell(
+        fn=decode_fn,
+        args_sds=(params_sds, specs["tokens"], caches_sds, specs["pos"]),
+        in_shardings=(p_sh, b_sh["tokens"], c_sh, b_sh["pos"]),
+        donate_argnums=(2,),
+        label=f"{cfg.name}/{shape.name}/serve_step",
+    )

@@ -1,0 +1,74 @@
+"""Unified model API: one entry point per architecture family.
+
+``build_model(cfg)`` returns a ModelAPI whose four functions cover the
+whole shape grid: train_loss (train_4k), prefill (prefill_32k),
+decode_step (decode_32k / long_500k).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg
+from . import encdec, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelCfg
+    init: Callable[[jax.Array], Any]
+    train_loss: Callable[..., tuple[jax.Array, dict]]
+    prefill: Callable[..., tuple[jax.Array, Any]]
+    decode_step: Callable[..., tuple[jax.Array, Any]]
+    init_caches: Callable[..., Any]
+
+
+def build_model(cfg: ModelCfg, dtype=jnp.bfloat16) -> ModelAPI:
+    if cfg.is_enc_dec:
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: encdec.init_encdec_params(cfg, key, dtype),
+            train_loss=lambda p, b: encdec.encdec_lm_loss(p, b, cfg),
+            prefill=lambda p, b, s_max: encdec.encdec_prefill(p, b, cfg, s_max),
+            decode_step=lambda p, t, c, pos: encdec.encdec_decode_step(
+                p, t, c, pos, cfg),
+            init_caches=lambda b, s_max, s_enc=None: encdec.init_encdec_caches(
+                cfg, b, s_max, s_enc or s_max, dtype),
+        )
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: transformer.init_decoder_params(cfg, key, dtype),
+        train_loss=lambda p, b: transformer.decoder_lm_loss(p, b, cfg),
+        prefill=lambda p, b, s_max: transformer.decoder_prefill(p, b, cfg,
+                                                                s_max),
+        decode_step=lambda p, t, c, pos: transformer.decoder_decode_step(
+            p, t, c, pos, cfg),
+        init_caches=lambda b, s_max, s_enc=None: transformer.init_decoder_caches(
+            cfg, b, s_max, dtype),
+    )
+
+
+def make_batch(cfg: ModelCfg, batch: int, seq: int, key=None,
+               dtype=jnp.bfloat16) -> dict:
+    """Synthetic batch matching the arch's input signature (smoke tests)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    if cfg.is_enc_dec:
+        return {
+            "enc_embeds": jax.random.normal(ks[0], (batch, seq, cfg.d_model),
+                                            dtype),
+            "tokens": jax.random.randint(ks[1], (batch, seq), 0, cfg.vocab),
+            "labels": jax.random.randint(ks[2], (batch, seq), 0, cfg.vocab),
+        }
+    b: dict[str, Any] = {
+        "tokens": jax.random.randint(ks[1], (batch, seq), 0, cfg.vocab),
+        "labels": jax.random.randint(ks[2], (batch, seq), 0, cfg.vocab),
+    }
+    if cfg.mrope_sections is not None:  # VLM backbone: 3-D positions (t,h,w)
+        pos = jnp.broadcast_to(jnp.arange(seq)[None, :, None],
+                               (batch, seq, 3)).astype(jnp.int32)
+        b["positions"] = pos
+    return b

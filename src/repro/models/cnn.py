@@ -1,0 +1,303 @@
+"""JAX execution of NetSpecs: layer-by-layer oracle + Occam fused-span
+row-streaming execution with circular buffers (paper §III-C).
+
+``occam_forward`` is the executable form of the dependence closure: each
+span streams its output one row-plane at a time while per-layer *ring
+buffers sized exactly by the closure arithmetic* hold the live ancestors.
+If the closure under-counted, the rings would overwrite live rows and the
+output would diverge from the oracle — so the equality tests in
+``tests/test_cnn_fused.py`` are a proof-by-execution of the sufficient
+condition. The ring reads also assert the retention invariant directly.
+
+Off-chip transfers are counted during execution and cross-validated against
+the DP's predicted ``OP[0,n].X`` (model == machine).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import closure
+from repro.core.graph import LayerSpec, NetSpec
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def init_params(key: jax.Array, net: NetSpec, scale: float = 0.1,
+                dtype=jnp.float32) -> list[dict]:
+    params: list[dict] = []
+    for layer in net.layers:
+        if layer.kind == "conv":
+            key, k1, k2 = jax.random.split(key, 3)
+            w = jax.random.normal(
+                k1, (layer.k, layer.k, layer.in_ch, layer.out_ch), dtype) * scale
+            b = jax.random.normal(k2, (layer.out_ch,), dtype) * scale
+            params.append({"w": w, "b": b})
+        else:
+            params.append({})
+    return params
+
+
+# --------------------------------------------------------------------------
+# Primitive ops (shared by oracle and streaming paths)
+# --------------------------------------------------------------------------
+
+def _conv_window(window: jax.Array, w: jax.Array, b: jax.Array,
+                 layer: LayerSpec) -> jax.Array:
+    """Conv over a row window that already includes the exact vertical halo
+    (VALID in H); horizontal padding applied here. window: (R, W, Cin)."""
+    y = lax.conv_general_dilated(
+        window[None], w,
+        window_strides=(layer.stride, layer.stride),
+        padding=((0, 0), (layer.padding, layer.padding)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]
+    return jax.nn.relu(y + b)
+
+
+def _pool_window(window: jax.Array, layer: LayerSpec) -> jax.Array:
+    """Max-pool over a row window with exact vertical halo. window already
+    -inf padded for out-of-range rows; pad horizontally with -inf here."""
+    if layer.padding:
+        window = jnp.pad(window, ((0, 0), (layer.padding, layer.padding), (0, 0)),
+                         constant_values=NEG_INF)
+    return lax.reduce_window(
+        window, NEG_INF, lax.max,
+        window_dimensions=(layer.k, layer.k, 1),
+        window_strides=(layer.stride, layer.stride, 1),
+        padding="VALID",
+    )
+
+
+def _project_shortcut(src: jax.Array, h_t: int, w_t: int, c_t: int) -> jax.Array:
+    """Parameter-free 'option A' shortcut: strided subsample + channel pad."""
+    h_s, w_s, c_s = src.shape
+    sh, sw = max(h_s // h_t, 1), max(w_s // w_t, 1)
+    y = src[::sh, ::sw, :][:h_t, :w_t, :]
+    if c_t > c_s:
+        y = jnp.pad(y, ((0, 0), (0, 0), (0, c_t - c_s)))
+    elif c_t < c_s:
+        y = y[:, :, :c_t]
+    return y
+
+
+def _project_rows(src_rows: jax.Array, w_t: int, c_t: int) -> jax.Array:
+    """Shortcut projection for a batch of already-subsampled source rows."""
+    n, w_s, c_s = src_rows.shape
+    sw = max(w_s // w_t, 1)
+    y = src_rows[:, ::sw, :][:, :w_t, :]
+    if c_t > c_s:
+        y = jnp.pad(y, ((0, 0), (0, 0), (0, c_t - c_s)))
+    elif c_t < c_s:
+        y = y[:, :, :c_t]
+    return y
+
+
+# --------------------------------------------------------------------------
+# Oracle: layer-by-layer forward (the paper's base case, functionally)
+# --------------------------------------------------------------------------
+
+def reference_forward(params: list[dict], x: jax.Array, net: NetSpec,
+                      collect: bool = False):
+    """x: (H, W, C) single image. Returns final map (or all maps)."""
+    maps = [x]
+    for idx, layer in enumerate(net.layers):
+        h = maps[-1]
+        if layer.kind == "conv":
+            y = _conv_window(_pad_rows_zero(h, layer), params[idx]["w"],
+                             params[idx]["b"], layer)
+        else:
+            y = _pool_window(_pad_rows_neg(h, layer), layer)
+        for (s, t) in net.residual_edges:
+            if t == idx + 1:
+                y = y + _project_shortcut(maps[s], *y.shape)
+        maps.append(y)
+    return maps if collect else maps[-1]
+
+
+def _pad_rows_zero(x: jax.Array, layer: LayerSpec) -> jax.Array:
+    p = layer.padding
+    return jnp.pad(x, ((p, p), (0, 0), (0, 0))) if p else x
+
+
+def _pad_rows_neg(x: jax.Array, layer: LayerSpec) -> jax.Array:
+    p = layer.padding
+    if not p:
+        return x
+    return jnp.pad(x, ((p, p), (0, 0), (0, 0)), constant_values=NEG_INF)
+
+
+# --------------------------------------------------------------------------
+# Occam streaming execution
+# --------------------------------------------------------------------------
+
+class RowRing:
+    """Circular buffer of the most recent ``capacity`` row-planes of a map.
+
+    Reads assert the retention invariant: a requested row must still be
+    resident — i.e. the closure arithmetic that sized this ring must have
+    been sufficient. This is the executable sufficient condition.
+    """
+
+    def __init__(self, capacity: int, w: int, c: int, dtype):
+        self.capacity = capacity
+        self.buf = jnp.zeros((capacity, w, c), dtype)
+        self.next = 0  # absolute index of the next row to be written
+
+    def push(self, rows: jax.Array) -> None:
+        for r in range(rows.shape[0]):
+            self.buf = self.buf.at[(self.next + r) % self.capacity].set(rows[r])
+        self.next += rows.shape[0]
+
+    def window(self, a: int, b: int, h: int, pad_value: float) -> jax.Array:
+        """Rows [a, b) in absolute coordinates; rows outside [0, h) padded."""
+        out = []
+        pad = jnp.full(self.buf.shape[1:], pad_value, self.buf.dtype)
+        for r in range(a, b):
+            if r < 0 or r >= h:
+                out.append(pad)
+                continue
+            if r < self.next - self.capacity or r >= self.next:
+                raise AssertionError(
+                    f"ring violation: row {r} not resident "
+                    f"(have [{self.next - self.capacity}, {self.next}))")
+            out.append(self.buf[r % self.capacity])
+        return jnp.stack(out)
+
+
+@dataclasses.dataclass
+class TrafficCounter:
+    reads: int = 0
+    writes: int = 0
+
+    @property
+    def total(self) -> int:
+        return self.reads + self.writes
+
+
+def occam_forward(params: list[dict], x: jax.Array, net: NetSpec,
+                  boundaries: list[int] | None = None,
+                  counter: TrafficCounter | None = None) -> jax.Array:
+    """Execute the net span-by-span with closure-sized ring buffers.
+
+    ``boundaries``: interior partition points (from the DP). ``counter``
+    accumulates off-chip element transfers for model-vs-machine validation.
+    """
+    boundaries = boundaries or []
+    cuts = [0] + list(boundaries) + [net.n_layers]
+    stored: dict[int, jax.Array] = {0: x}
+    # residual edges that cross a partition boundary must spill their source
+    crossing = [(s, t) for (s, t) in net.residual_edges
+                if any(s < p < t for p in boundaries)]
+    spill_sources = {s for (s, _t) in crossing}
+    for a, b in zip(cuts, cuts[1:]):
+        out, spilled = _stream_span(params, net, a, b, stored,
+                                    spill_sources, counter)
+        stored[b] = out
+        stored.update(spilled)
+    return stored[net.n_layers]
+
+
+def _stream_span(params: list[dict], net: NetSpec, a: int, b: int,
+                 stored: dict[int, jax.Array],
+                 spill_sources: set[int],
+                 counter: TrafficCounter | None):
+    """Produce map ``b`` from stored map ``a``, one output row at a time."""
+    x_in = stored[a]
+    dtype = x_in.dtype
+    row_counts = closure.span_row_counts(net, a, b)  # maps a .. b-1
+    rings: dict[int, RowRing] = {}
+    for off, rows in enumerate(row_counts):
+        m = a + off
+        h, w, c = net.map_shape(m)
+        rings[m] = RowRing(rows, w, c, dtype)
+    produced = {m: 0 for m in range(a, b + 1)}
+    h_out, w_out, c_out = net.map_shape(b)
+    out_rows: list[jax.Array] = []
+    # maps interior to this span that must be spilled for downstream spans
+    spill_targets = {m for m in spill_sources if a < m < b}
+    spilled: dict[int, list[jax.Array]] = {m: [] for m in spill_targets}
+
+    if counter is not None:
+        counter.reads += net.map_elems(a)  # span input streamed in once
+        # residual sources read from DRAM by edges crossing INTO this span
+        for (s, t) in net.residual_edges:
+            if s < a < t <= b:
+                counter.reads += net.map_elems(s)
+
+    def ensure(m: int, upto: int) -> None:
+        """Guarantee map m has rows [0, upto) produced (and ring-resident)."""
+        upto = min(upto, net.map_shape(m)[0])
+        if produced[m] >= upto:
+            return
+        if m == a:
+            rows = x_in[produced[m]:upto]
+            rings[m].push(rows)
+            produced[m] = upto
+            return
+        layer = net.layers[m - 1]
+        lo = produced[m] * layer.stride - layer.padding
+        hi = (upto - 1) * layer.stride - layer.padding + layer.k
+        h_in = net.map_shape(m - 1)[0]
+        ensure(m - 1, min(hi, h_in))
+        pad_val = 0.0 if layer.kind == "conv" else NEG_INF
+        window = rings[m - 1].window(lo, hi, h_in, pad_val)
+        if layer.kind == "conv":
+            new = _conv_window(window, params[m - 1]["w"], params[m - 1]["b"],
+                               layer)
+        else:
+            new = _pool_window(window, layer)
+        # residual edges terminating at map m
+        for (s, t) in net.residual_edges:
+            if t != m:
+                continue
+            h_s = net.map_shape(s)[0]
+            sh = max(h_s // net.map_shape(m)[0], 1)
+            src_abs = [min(r * sh, h_s - 1) for r in range(produced[m], upto)]
+            if s < a:  # crossed into the span: source lives in DRAM
+                src_rows = jnp.stack([stored[s][r] for r in src_abs])
+            else:
+                ensure(s, max(src_abs) + 1)
+                src_rows = jnp.stack(
+                    [rings[s].window(r, r + 1, h_s, 0.0)[0] for r in src_abs])
+            w_m, c_m = net.map_shape(m)[1], net.map_shape(m)[2]
+            new = new + _project_rows(src_rows, w_m, c_m)
+        if m < b:
+            rings[m].push(new)
+        else:
+            out_rows.append(new)
+        if m in spill_targets:
+            spilled[m].append(new)
+        produced[m] = upto
+
+    for r in range(h_out):
+        ensure(b, r + 1)
+
+    out = jnp.concatenate(out_rows, axis=0)
+    if counter is not None:
+        counter.writes += net.map_elems(b)
+        for m in spill_targets:
+            counter.writes += net.map_elems(m)
+    spilled_maps = {m: jnp.concatenate(v, axis=0) for m, v in spilled.items()}
+    return out, spilled_maps
+
+
+def predicted_transfers(net: NetSpec, boundaries: list[int]) -> int:
+    """The DP cost model's transfer count for a given PBS (for machine-vs-
+    model equality tests)."""
+    cuts = [0] + list(boundaries) + [net.n_layers]
+    total = net.map_elems(0) + net.map_elems(net.n_layers)
+    for p in cuts[1:-1]:
+        total += 2 * net.map_elems(p)
+    for (s, t) in net.residual_edges:
+        if any(s < p < t for p in cuts[1:-1]):
+            total += 2 * net.map_elems(s)
+    return total

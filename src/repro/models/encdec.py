@@ -1,0 +1,191 @@
+"""Encoder-decoder stack (SeamlessM4T backbone): bidirectional encoder +
+causal decoder with cross-attention. The audio frontend is a stub — the
+encoder consumes precomputed frame embeddings (B, S_enc, d_model) per the
+assignment spec.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelCfg
+from . import layers
+from .layers import KVCache
+from .sharding import shard
+
+
+class CrossCache(NamedTuple):
+    k: jax.Array  # (B, S_enc, H_kv, D)
+    v: jax.Array
+
+
+def _init_enc_layer(key, cfg: ModelCfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "attn": layers.init_attention(ks[0], cfg, dtype=dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "ffn": layers.init_ffn(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelCfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "attn": layers.init_attention(ks[0], cfg, dtype=dtype),
+        "norm_x": jnp.ones((cfg.d_model,), dtype),
+        "xattn": layers.init_attention(ks[1], cfg, dtype=dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "ffn": layers.init_ffn(ks[2], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_encdec_params(cfg: ModelCfg, key: jax.Array, dtype=jnp.bfloat16):
+    keys = jax.random.split(key, 5)
+    vp, d = cfg.vocab_padded, cfg.d_model
+    enc_keys = jax.random.split(keys[2], cfg.n_enc_layers)
+    dec_keys = jax.random.split(keys[3], cfg.n_layers)
+    return {
+        "embed": jax.random.normal(keys[0], (vp, d), dtype) * 0.02,
+        "final_norm": jnp.ones((d,), dtype),
+        "lm_head": jax.random.normal(keys[1], (d, vp), dtype) / math.sqrt(d),
+        "enc": {
+            "periods": {"sub_0": jax.vmap(
+                lambda k: _init_enc_layer(k, cfg, dtype))(enc_keys)},
+            "enc_norm": jnp.ones((d,), dtype),
+        },
+        "dec": {
+            "periods": {"sub_0": jax.vmap(
+                lambda k: _init_dec_layer(k, cfg, dtype))(dec_keys)},
+        },
+    }
+
+
+def encoder_forward(params, enc_embeds, cfg: ModelCfg, remat=True):
+    x = shard(enc_embeds, "data", None, None)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(x, pp):
+        h = layers.rms_norm(x, pp["norm1"], cfg.norm_eps)
+        y, _ = layers.attention_sublayer(pp["attn"], h, cfg, positions,
+                                         causal=False)
+        x = x + y
+        h = layers.rms_norm(x, pp["norm2"], cfg.norm_eps)
+        x = x + layers.ffn_sublayer(pp["ffn"], h)
+        return shard(x, "data", None, None), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = lax.scan(body_fn, x, params["enc"]["periods"]["sub_0"])
+    return layers.rms_norm(x, params["enc"]["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(pp, memory, cfg: ModelCfg):
+    b, se, _ = memory.shape
+    hkv, dh = cfg.n_kv_heads, cfg.d_head
+    k = (memory @ pp["wk"]).reshape(b, se, hkv, dh)
+    v = (memory @ pp["wv"]).reshape(b, se, hkv, dh)
+    if "bk" in pp:
+        k = k + pp["bk"].reshape(hkv, dh)
+        v = v + pp["bv"].reshape(hkv, dh)
+    return k, v
+
+
+def decoder_forward(params, tokens, memory, cfg: ModelCfg, *,
+                    caches=None, cache_pos=None, remat=True):
+    """memory: encoder output (None in pure-decode mode: cross kv cached)."""
+    x = params["embed"][tokens]
+    x = shard(x, "data", None, None)
+    b, s, _ = x.shape
+    if cache_pos is not None and s == 1:
+        positions = jnp.broadcast_to(cache_pos[None, None], (b, 1)).astype(
+            jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(x, xs):
+        pp, pc = xs
+        new_cache: dict[str, Any] = {}
+        h = layers.rms_norm(x, pp["norm1"], cfg.norm_eps)
+        y, kv = layers.attention_sublayer(
+            pp["attn"], h, cfg, positions, causal=True,
+            cache=pc.get("self") if pc else None, cache_pos=cache_pos)
+        if kv is not None:
+            new_cache["self"] = kv
+        x = x + y
+        h = layers.rms_norm(x, pp["norm_x"], cfg.norm_eps)
+        if memory is not None:
+            ck, cv = _cross_kv(pp["xattn"], memory, cfg)
+        else:
+            cc = pc["cross"]
+            ck, cv = cc.k, cc.v
+        if caches is not None:
+            new_cache["cross"] = CrossCache(ck, cv)
+        y, _ = layers.attention_sublayer(pp["xattn"], h, cfg, positions,
+                                         causal=False, kv_override=(ck, cv))
+        x = x + y
+        h = layers.rms_norm(x, pp["norm2"], cfg.norm_eps)
+        x = x + layers.ffn_sublayer(pp["ffn"], h)
+        return shard(x, "data", None, None), new_cache
+
+    body_fn = jax.checkpoint(body) if remat else body
+    xs = (params["dec"]["periods"]["sub_0"], caches)
+    x, new_caches = lax.scan(body_fn, x, xs)
+    return x, (new_caches if caches is not None else None)
+
+
+# --------------------------------------------------------------------------
+# Entry points
+# --------------------------------------------------------------------------
+
+def encdec_lm_loss(params, batch, cfg: ModelCfg):
+    from .transformer import chunked_cross_entropy
+
+    memory = encoder_forward(params, batch["enc_embeds"], cfg)
+    x, _ = decoder_forward(params, batch["tokens"], memory, cfg)
+    ce = chunked_cross_entropy(params, x, batch["labels"], cfg)
+    return ce, {"ce": ce}
+
+
+def init_encdec_caches(cfg: ModelCfg, batch: int, s_max: int, s_enc: int,
+                       dtype=jnp.bfloat16):
+    n, hkv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    return {
+        "self": KVCache(
+            k=jnp.zeros((n, batch, s_max, hkv, dh), dtype),
+            v=jnp.zeros((n, batch, s_max, hkv, dh), dtype)),
+        "cross": CrossCache(
+            k=jnp.zeros((n, batch, s_enc, hkv, dh), dtype),
+            v=jnp.zeros((n, batch, s_enc, hkv, dh), dtype)),
+    }
+
+
+def encdec_prefill(params, batch, cfg: ModelCfg, s_max: int):
+    from .transformer import shard_caches
+
+    memory = encoder_forward(params, batch["enc_embeds"], cfg)
+    b, s = batch["tokens"].shape
+    s_enc = batch["enc_embeds"].shape[1]
+    caches = init_encdec_caches(cfg, b, s_max, s_enc,
+                                batch["enc_embeds"].dtype)
+    caches = shard_caches(caches)
+    x, new_caches = decoder_forward(params, batch["tokens"], memory, cfg,
+                                    caches=caches)
+    from .transformer import unembed
+
+    logits = unembed(params, x[:, -1:, :], cfg)
+    return logits, new_caches
+
+
+def encdec_decode_step(params, tokens, caches, pos, cfg: ModelCfg):
+    from .transformer import unembed
+
+    x, new_caches = decoder_forward(params, tokens, None, cfg,
+                                    caches=caches, cache_pos=pos)
+    logits = unembed(params, x, cfg)
+    return logits, new_caches

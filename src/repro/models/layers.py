@@ -1,0 +1,297 @@
+"""Transformer building blocks: RMSNorm, RoPE / M-RoPE, GQA attention
+(chunked-streaming train path + cache decode path), SwiGLU FFN.
+
+The train/prefill attention is a *pure-JAX flash recurrence* (lax.scan over
+KV chunks with running max/sum) — Occam's dependence-closure tiling in XLA
+form, so the compiled memory footprint never materializes (S x S) scores.
+The Pallas kernel in repro.kernels.flash_attention is the TPU-optimized
+twin (selected via ``impl="pallas"``); both agree with attention_ref.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .sharding import shard
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+# --------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# --------------------------------------------------------------------------
+
+def _rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / theta ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               mrope_sections: tuple[int, int, int] | None = None) -> jax.Array:
+    """x: (B, S, H, D). positions: (B, S) int32, or (B, S, 3) for M-RoPE.
+
+    M-RoPE (Qwen2-VL): the rotary half-dims are split into
+    (temporal, height, width) sections, each rotated by its own position
+    stream. Text tokens carry identical t/h/w positions, reducing to RoPE.
+    """
+    d = x.shape[-1]
+    freqs = _rope_freqs(d, theta)  # (d/2,)
+    if mrope_sections is None:
+        if positions.ndim == 3:
+            positions = positions[..., 0]
+        ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,d/2)
+    else:
+        if positions.ndim == 2:  # text-only: same position for all sections
+            positions = jnp.broadcast_to(positions[..., None],
+                                         (*positions.shape, 3))
+        t_s, h_s, w_s = mrope_sections
+        assert t_s + h_s + w_s == d // 2, "mrope sections must cover d/2"
+        sec = jnp.concatenate([jnp.zeros(t_s, jnp.int32),
+                               jnp.ones(h_s, jnp.int32),
+                               jnp.full(w_s, 2, jnp.int32)])
+        pos = jnp.take_along_axis(
+            positions.astype(jnp.float32),
+            jnp.broadcast_to(sec[None, None], (*positions.shape[:2], d // 2)),
+            axis=-1)  # (B,S,d/2): per-freq position from its section stream
+        ang = pos * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_max, H_kv, D)
+    v: jax.Array
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, chunk: int = 1024) -> jax.Array:
+    """Flash recurrence in pure JAX: q/k/v (B,S,H,D), heads pre-repeated.
+
+    Scans KV chunks carrying (m, l, acc) — the dependence closure of the
+    query block — so compiled memory never holds (S x S) scores. Heads are
+    TP-sharded (the caller repeats GQA kv heads to full query heads; GSPMD
+    pads non-16-divisible head counts internally — the padding waste is
+    surfaced by the roofline's MODEL/HLO flop ratio).
+    """
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    assert hq == hkv, "repeat kv heads before chunked_attention"
+    qf = q.astype(jnp.float32) / math.sqrt(d)
+    chunk = min(chunk, sk)
+    pad = (-sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = (sk + pad) // chunk
+    kc = k.reshape(b, n_chunks, chunk, hq, d)
+    vc = v.reshape(b, n_chunks, chunk, hq, d)
+    q_ids = jnp.arange(sq)[:, None]
+    offset = sk - sq  # bottom-aligned causal (prefill continuation safe)
+
+    # checkpointed: backward recomputes the (B,H,S,K) score block instead of
+    # stacking it per kv chunk (the flash-attention backward trade).
+    @jax.checkpoint
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, c_idx = inp
+        s = jnp.einsum("bshd,bkhd->bhsk", qf, kb.astype(jnp.float32))
+        s = shard(s, "data", "model", None, None)
+        kv_ids = c_idx * chunk + jnp.arange(chunk)[None, :]
+        mask = kv_ids < sk  # padded tail
+        if causal:
+            mask = jnp.logical_and(mask, kv_ids <= q_ids + offset)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhsk,bkhd->bhsd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, hq, sq), NEG_INF, jnp.float32),
+            jnp.zeros((b, hq, sq), jnp.float32),
+            jnp.zeros((b, hq, sq, d), jnp.float32))
+    (m, l, acc), _ = lax.scan(
+        step, init,
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+         jnp.arange(n_chunks)))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l[..., None]).transpose(0, 2, 1, 3)  # (B,S,H,D)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     length: jax.Array) -> jax.Array:
+    """One-token attention against a cache: q (B,1,Hq,D), k/v (B,S,Hkv,D).
+
+    Plain einsum + masked softmax; when the cache's sequence dim is sharded
+    (decode_kv="seq"), GSPMD turns the max/sum reductions into the
+    flash-decoding partial-softmax combine automatically.
+    """
+    b, _, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    # contract in the cache dtype with fp32 accumulation: casting the cache
+    # itself (k.astype(f32)) materializes a full fp32 cache copy per layer
+    # (2x HBM read + 134MB/layer temps at moonshot decode scale).
+    qg = (q.reshape(b, hkv, g, d) / math.sqrt(d)).astype(k.dtype)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k,
+                   preferred_element_type=jnp.float32)
+    mask = jnp.arange(sk)[None, None, None, :] < length
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention sublayer (projections + rope + cache plumbing)
+# --------------------------------------------------------------------------
+
+def init_attention(key, cfg, d_model=None, dtype=jnp.bfloat16):
+    d = d_model or cfg.d_model
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(hq * dh)
+    p = {
+        "wq": jax.random.normal(ks[0], (d, hq * dh), dtype) * s_in,
+        "wk": jax.random.normal(ks[1], (d, hkv * dh), dtype) * s_in,
+        "wv": jax.random.normal(ks[2], (d, hkv * dh), dtype) * s_in,
+        "wo": jax.random.normal(ks[3], (hq * dh, d), dtype) * s_out,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    return p
+
+
+def attention_sublayer(p, x, cfg, positions, *, causal=True,
+                       cache: KVCache | None = None,
+                       cache_pos: jax.Array | None = None,
+                       kv_override: tuple[jax.Array, jax.Array] | None = None,
+                       rope: bool = True):
+    """Returns (y, new_cache).
+
+    Modes:
+      train/prefill: cache=None or fresh cache to fill; chunked attention.
+      decode: x is (B, 1, D); cache holds past KV; cache_pos scalar.
+      cross-attention: kv_override = (k, v) precomputed from the encoder.
+    """
+    b, s, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(b, s, hq, dh)
+    if kv_override is None:
+        k = x @ p["wk"]
+        v = x @ p["wv"]
+        if "bk" in p:
+            k, v = k + p["bk"], v + p["bv"]
+        k = k.reshape(b, s, hkv, dh)
+        v = v.reshape(b, s, hkv, dh)
+        if rope:
+            q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        k, v = kv_override
+
+    def full_attention(q_, k_, v_):
+        """Train/prefill path: repeat kv to query heads + TP-shard heads.
+
+        impl selection: REPRO_ATTN_IMPL=pallas routes through the Pallas
+        flash kernel (TPU target; interpret-mode on CPU) — same closure
+        math, MXU-tiled. Default is the XLA chunked-scan twin.
+        """
+        import os as _os
+
+        if _os.environ.get("REPRO_ATTN_IMPL") == "pallas":
+            from repro.kernels.flash_attention.ops import flash_attention
+
+            o_ = flash_attention(q_.transpose(0, 2, 1, 3),
+                                 k_.transpose(0, 2, 1, 3),
+                                 v_.transpose(0, 2, 1, 3), causal=causal)
+            return o_.transpose(0, 2, 1, 3)
+        g = hq // hkv
+        if g > 1:
+            k_ = jnp.repeat(k_, g, axis=2)
+            v_ = jnp.repeat(v_, g, axis=2)
+        q_ = shard(q_, "data", None, "model", None)
+        k_ = shard(k_, "data", None, "model", None)
+        v_ = shard(v_, "data", None, "model", None)
+        return chunked_attention(q_, k_, v_, causal=causal)
+
+    new_cache = None
+    if cache is not None and kv_override is None:
+        if s == 1:  # decode: insert at cache_pos
+            k_all = lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, cache_pos, 0, 0))
+            v_all = lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, cache_pos, 0, 0))
+            new_cache = KVCache(k_all, v_all)
+            o = decode_attention(q, k_all, v_all, cache_pos + 1)
+        else:  # prefill: write the whole prefix
+            k_all = lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0))
+            v_all = lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0))
+            new_cache = KVCache(k_all, v_all)
+            o = full_attention(q, k, v)
+    elif s == 1 and kv_override is not None:
+        # cross-attention decode: full memory, no growth
+        o = decode_attention(q, k, v, jnp.asarray(k.shape[1]))
+    else:
+        o = full_attention(q, k, v)
+    y = row_parallel(o.reshape(b, s, hq * dh), p["wo"])
+    return y, new_cache
+
+
+# --------------------------------------------------------------------------
+# Dense SwiGLU FFN
+# --------------------------------------------------------------------------
+
+def init_ffn(key, d_model: int, d_ff: int, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    si, so = 1.0 / math.sqrt(d_model), 1.0 / math.sqrt(d_ff)
+    return {
+        "w1": jax.random.normal(ks[0], (d_model, d_ff), dtype) * si,
+        "w3": jax.random.normal(ks[1], (d_model, d_ff), dtype) * si,
+        "w2": jax.random.normal(ks[2], (d_ff, d_model), dtype) * so,
+    }
+
+
+def row_parallel(h: jax.Array, w: jax.Array) -> jax.Array:
+    """Row-parallel projection with the cross-shard reduction in bf16.
+
+    Forcing the dot output dtype to the activation dtype makes GSPMD's
+    all-reduce carry bf16 partials instead of fp32 accumulations — half
+    the TP collective bytes per layer (Megatron's standard reduce dtype).
+    """
+    return jnp.einsum("...f,fd->...d", h, w, preferred_element_type=h.dtype)
+
+
+def ffn_sublayer(p, x):
+    h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    h = shard(h, "data", None, "model")
+    return row_parallel(h, p["w2"])

@@ -1,0 +1,220 @@
+"""Mamba-2 (SSD) block: chunked-scan train path + O(1)-state decode path.
+
+The XLA train path mirrors the Pallas kernel's math (see
+repro.kernels.ssd_scan): lax.scan over time chunks carrying the (N x P)
+state — a constant-size dependence closure. The chunk body is wrapped in
+jax.checkpoint so backward recomputes chunks instead of stashing the
+(B, H, Q, Q) intra-chunk kernels.
+
+Separate in-projections per component (z, x, B, C, dt) keep every weight
+cleanly TP-shardable (no mid-tensor splits of a sharded fused projection).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import rms_norm
+from .sharding import shard
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array   # (B, d_conv - 1, conv_ch)
+    state: jax.Array  # (B, G, rep, N, P) fp32
+
+
+def init_mamba(key, d_model: int, ssm, dtype=jnp.bfloat16):
+    di = ssm.d_inner(d_model)
+    nh = ssm.n_ssm_heads(d_model)
+    gn = ssm.n_groups * ssm.d_state
+    conv_ch = di + 2 * gn
+    ks = jax.random.split(key, 8)
+    si = 1.0 / math.sqrt(d_model)
+    return {
+        "wz": jax.random.normal(ks[0], (d_model, di), dtype) * si,
+        "wx": jax.random.normal(ks[1], (d_model, di), dtype) * si,
+        "wB": jax.random.normal(ks[2], (d_model, gn), dtype) * si,
+        "wC": jax.random.normal(ks[3], (d_model, gn), dtype) * si,
+        "wdt": jax.random.normal(ks[4], (d_model, nh), dtype) * si,
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),  # a = -exp(A_log)*dt
+        "D": jnp.ones((nh,), jnp.float32),
+        "conv_w": jax.random.normal(ks[5], (ssm.d_conv, conv_ch), dtype) * 0.2,
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "norm": jnp.ones((di,), dtype),
+        "wo": jax.random.normal(ks[6], (di, d_model), dtype) / math.sqrt(di),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d as K shift-MACs. x: (B, T, C), w: (K, C).
+
+    Written as k elementwise multiply-adds over shifted views instead of a
+    conv primitive: short depthwise convs fuse into VPU elementwise code,
+    shard trivially on C (model axis), and avoid XLA-CPU's dense
+    (C x C) conv-gradient expansion (observed 4 GiB kernels at jamba
+    scale)."""
+    k, c = w.shape
+    t = x.shape[1]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    acc = pad[:, k - 1:k - 1 + t] * w[k - 1]
+    for j in range(1, k):
+        acc = acc + pad[:, k - 1 - j:k - 1 - j + t] * w[k - 1 - j]
+    return jax.nn.silu(acc + b)
+
+
+@functools.partial(jax.checkpoint, static_argnums=(4,))
+def _ssd_chunk_step(state, xc, ac, bc_cc, chunk):
+    """One chunk of the SSD scan. state: (B, G, R, N, P) fp32.
+
+    xc: (B, Q, G, R, P); ac: (B, Q, G, R); bc_cc = (b, c): (B, Q, G, N).
+
+    SSD heads (R) are TP-sharded: the scan carry (the dependence closure)
+    and the (B, Q, Q, G, R) intra-chunk kernel both shard over the model
+    axis — without the explicit constraints GSPMD replicates the carried
+    state, which at jamba scale is ~1 GiB/chunk/device.
+    """
+    bc, cc = bc_cc
+    state = shard(state, "data", None, "model", None, None)
+    xc = shard(xc, "data", None, None, "model", None)
+    ac = shard(ac, "data", None, None, "model")
+    a_cum = jnp.cumsum(ac, axis=1)                           # (B,Q,G,R)
+    seg = a_cum[:, :, None] - a_cum[:, None, :]              # (B,Q,Q,G,R)
+    q_i = jnp.arange(chunk)
+    mask = (q_i[:, None] >= q_i[None, :])[None, :, :, None, None]
+    l_mat = jnp.where(mask, jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bqgn,bkgn->bqkg", cc, bc)           # (B,Q,Q,G)
+    y = jnp.einsum("bqkg,bqkgr,bkgrp->bqgrp", scores, l_mat, xc)
+    # incoming state contribution
+    y += jnp.exp(a_cum)[..., None] * jnp.einsum("bqgn,bgrnp->bqgrp", cc, state)
+    # state update
+    a_tot = a_cum[:, -1]                                     # (B,G,R)
+    decay_rem = jnp.exp(a_tot[:, None] - a_cum)              # (B,Q,G,R)
+    state = (jnp.exp(a_tot)[..., None, None] * state
+             + jnp.einsum("bkgn,bkgr,bkgrp->bgrnp", bc, decay_rem, xc))
+    state = shard(state, "data", None, "model", None, None)
+    y = shard(y, "data", None, None, "model", None)
+    return state, y
+
+
+def ssd_chunked(x, a, b, c, *, n_groups: int, chunk: int,
+                state0=None):
+    """x: (B,T,H,P) fp32; a: (B,T,H); b, c: (B,T,G,N). Returns (y, state)."""
+    bsz, t, h, p = x.shape
+    g = n_groups
+    r = h // g
+    n = b.shape[-1]
+    pad = (-t) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (t + pad) // chunk
+    xg = x.reshape(bsz, nc, chunk, g, r, p)
+    ag = a.reshape(bsz, nc, chunk, g, r)
+    bg = b.reshape(bsz, nc, chunk, g, n)
+    cg = c.reshape(bsz, nc, chunk, g, n)
+    if state0 is None:
+        state0 = jnp.zeros((bsz, g, r, n, p), jnp.float32)
+
+    def step(s, inp):
+        xc, ac, bc, cc = inp
+        s, y = _ssd_chunk_step(s, xc, ac, (bc, cc), chunk)
+        return s, y
+
+    state, ys = lax.scan(
+        step, state0,
+        (xg.transpose(1, 0, 2, 3, 4, 5), ag.transpose(1, 0, 2, 3, 4),
+         bg.transpose(1, 0, 2, 3, 4), cg.transpose(1, 0, 2, 3, 4)))
+    y = ys.transpose(1, 0, 2, 3, 4, 5).reshape(bsz, t + pad, h, p)[:, :t]
+    return y, state
+
+
+def mamba_sublayer(p, x: jax.Array, ssm, *, cache: SSMCache | None = None,
+                   cache_pos=None):
+    """x: (B, T, D) -> (y, new_cache). Decode mode when T == 1 and cache."""
+    bsz, t, d = x.shape
+    di = ssm.d_inner(d)
+    nh = ssm.n_ssm_heads(d)
+    g, n, ph = ssm.n_groups, ssm.d_state, ssm.head_dim
+    gn = g * n
+
+    z = x @ p["wz"]
+    xb = x @ p["wx"]
+    bp = x @ p["wB"]
+    cp = x @ p["wC"]
+    dt = jax.nn.softplus((x @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])
+
+    conv_in = jnp.concatenate([xb, bp, cp], axis=-1)  # (B,T,di+2gn)
+    new_cache = None
+    if cache is not None and t == 1:
+        # decode: window = conv state + current token
+        win = jnp.concatenate([cache.conv, conv_in], axis=1)  # (B,K,C)
+        y = jnp.einsum("bkc,kc->bc", win.astype(jnp.float32),
+                       p["conv_w"].astype(jnp.float32))
+        conv_out = jax.nn.silu(y + p["conv_b"].astype(jnp.float32))[:, None]
+        conv_out = conv_out.astype(x.dtype)
+        new_conv = win[:, 1:]
+    else:
+        conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+        new_conv = None
+        if cache is not None:  # prefill: stash the tail window
+            k = ssm.d_conv
+            new_conv = conv_in[:, -(k - 1):]
+            if t < k - 1:
+                new_conv = jnp.pad(conv_in, ((0, 0), (k - 1 - t, 0), (0, 0)))
+    xb = conv_out[..., :di]
+    bp = conv_out[..., di:di + gn].reshape(bsz, t, g, n)
+    cp = conv_out[..., di + gn:].reshape(bsz, t, g, n)
+
+    xh = xb.reshape(bsz, t, nh, ph).astype(jnp.float32)
+    a = -jnp.exp(p["A_log"]) * dt                     # (B,T,H) log decay
+    x_in = xh * dt[..., None]
+
+    if cache is not None and t == 1:
+        # single recurrence step on the cached state
+        r = nh // g
+        s_prev = cache.state                          # (B,G,R,N,P)
+        ar = a[:, 0].reshape(bsz, g, r)
+        xr = x_in[:, 0].reshape(bsz, g, r, ph)
+        b0 = bp[:, 0].astype(jnp.float32)             # (B,G,N)
+        c0 = cp[:, 0].astype(jnp.float32)
+        s_new = (jnp.exp(ar)[..., None, None] * s_prev
+                 + jnp.einsum("bgn,bgrp->bgrnp", b0, xr))
+        y = jnp.einsum("bgn,bgrnp->bgrp", c0, s_new).reshape(bsz, 1, nh, ph)
+        new_state = s_new
+    else:
+        y, new_state = ssd_chunked(
+            x_in, a, bp.astype(jnp.float32), cp.astype(jnp.float32),
+            n_groups=g, chunk=ssm.chunk,
+            state0=cache.state if cache is not None else None)
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(bsz, t, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], 1e-5)
+    y = shard(y, "data", None, "model")
+    from .layers import row_parallel
+
+    out = row_parallel(y, p["wo"])
+    if cache is not None:
+        new_cache = SSMCache(conv=new_conv.astype(x.dtype), state=new_state)
+    return out, new_cache
+
+
+def init_ssm_cache(cfg, batch: int, dtype=jnp.bfloat16) -> SSMCache:
+    ssm = cfg.ssm
+    d = cfg.d_model
+    di = ssm.d_inner(d)
+    gn = ssm.n_groups * ssm.d_state
+    nh = ssm.n_ssm_heads(d)
+    r = nh // ssm.n_groups
+    return SSMCache(
+        conv=jnp.zeros((batch, ssm.d_conv - 1, di + 2 * gn), dtype),
+        state=jnp.zeros((batch, ssm.n_groups, r, ssm.d_state, ssm.head_dim),
+                        jnp.float32),
+    )

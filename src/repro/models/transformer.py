@@ -1,0 +1,357 @@
+"""Decoder-only LM stack built from scanned *periods* of sublayers.
+
+A period is the repeating unit of the architecture (1 layer for uniform
+stacks; 8 for Jamba's mamba/attn 7:1 interleave). Period parameters are
+stacked on a leading axis and the stack is a single ``lax.scan`` — HLO size
+is O(period), independent of depth, which keeps 72-layer x 512-device
+dry-run compiles tractable. The period body is ``jax.checkpoint``-ed
+(full per-period remat, the production default for long-sequence training).
+
+Parameter sharding is rule-based (``param_spec_tree``): Megatron TP on the
+model axis + ZeRO/FSDP on the data axis, with MoE experts EP-sharded.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelCfg
+from . import layers, mamba, moe
+from .layers import KVCache
+from .sharding import shard
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+def _init_sublayer(key, cfg: ModelCfg, sub_idx: int, dtype):
+    mixer_kind = "attn" if sub_idx in cfg.attn_every else "ssm"
+    _, ffn_kind = cfg.layer_kind(sub_idx)
+    ks = jax.random.split(key, 3)
+    p: dict[str, Any] = {"norm1": jnp.ones((cfg.d_model,), dtype)}
+    if mixer_kind == "attn":
+        p["attn"] = layers.init_attention(ks[0], cfg, dtype=dtype)
+    else:
+        p["ssm"] = mamba.init_mamba(ks[0], cfg.d_model, cfg.ssm, dtype)
+    if ffn_kind == "dense":
+        p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+        p["ffn"] = layers.init_ffn(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    elif ffn_kind == "moe":
+        p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+        p["moe"] = moe.init_moe(ks[1], cfg.d_model, cfg.moe, dtype)
+    return p
+
+
+def init_decoder_params(cfg: ModelCfg, key: jax.Array,
+                        dtype=jnp.bfloat16) -> dict:
+    keys = jax.random.split(key, 3 + cfg.period)
+    vp, d = cfg.vocab_padded, cfg.d_model
+    params: dict[str, Any] = {
+        "embed": jax.random.normal(keys[0], (vp, d), dtype) * 0.02,
+        "final_norm": jnp.ones((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(keys[1], (d, vp), dtype)
+                             / math.sqrt(d))
+    periods: dict[str, Any] = {}
+    for i in range(cfg.period):
+        sub_keys = jax.random.split(keys[3 + i], cfg.n_periods)
+        periods[f"sub_{i}"] = jax.vmap(
+            lambda k: _init_sublayer(k, cfg, i, dtype))(sub_keys)
+    params["periods"] = periods
+    return params
+
+
+# --------------------------------------------------------------------------
+# Sharding rules (symbolic; resolved by repro.models.sharding)
+# --------------------------------------------------------------------------
+
+_COL = ("data", "model")     # column-parallel: (in=FSDP, out=TP)
+_ROW = ("model", "data")     # row-parallel:    (in=TP, out=FSDP)
+
+_RULES_2D = {
+    "wq": _COL, "wk": _COL, "wv": _COL, "w1": _COL, "w3": _COL,
+    "wz": _COL, "wx": _COL, "wB": _COL, "wC": _COL, "wdt": _COL,
+    "wo": _ROW, "w2": _ROW,
+    # embed: vocab REPLICATED, d_model TP-sharded — the token gather and its
+    # backward scatter-add stay local (a vocab-sharded table makes GSPMD
+    # replicate the (V, D) fp32 gradient: 4 x 2 GiB/device at jamba scale).
+    "embed": (None, "model"), "lm_head": ("data", "model"),
+    "router": ("data", None), "conv_w": (None, "model"),
+}
+_RULES_1D = {
+    "bq": ("model",), "bk": ("model",), "bv": ("model",),
+    "conv_b": ("model",), "norm": ("model",),
+    "dt_bias": ("model",), "A_log": ("model",), "D": ("model",),
+    "final_norm": (None,), "norm1": (None,), "norm2": (None,),
+    "norm_x": (None,), "enc_norm": (None,),
+}
+_RULES_3D_MOE = {  # (E, D, F) / (E, F, D)
+    "w1": ("model", "data", None), "w3": ("model", "data", None),
+    "w2": ("model", None, "data"),
+}
+
+
+def param_spec_tree(params) -> Any:
+    """Symbolic PartitionSpec tuples matching the params pytree."""
+
+    def rule(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        name = names[-1]
+        stacked = "periods" in names
+        in_moe = "moe" in names
+        nd = leaf.ndim - (1 if stacked else 0)
+        if in_moe and nd == 3 and name in _RULES_3D_MOE:
+            spec = _RULES_3D_MOE[name]
+        elif nd == 2 and name in _RULES_2D:
+            spec = _RULES_2D[name]
+        elif nd == 1 and name in _RULES_1D:
+            spec = _RULES_1D[name]
+        elif nd <= 1:
+            spec = (None,) * nd
+        else:
+            raise ValueError(f"no sharding rule for {names} ndim={leaf.ndim}")
+        return ((None,) + spec) if stacked else spec
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+def _sublayer_apply(sub_params, x, cfg: ModelCfg, sub_idx: int, positions,
+                    cache, cache_pos):
+    """One sublayer: mixer + optional FFN. Returns (x, new_cache, aux)."""
+    aux = {}
+    h = layers.rms_norm(x, sub_params["norm1"], cfg.norm_eps)
+    if "attn" in sub_params:
+        y, new_cache = layers.attention_sublayer(
+            sub_params["attn"], h, cfg, positions, causal=True,
+            cache=cache if isinstance(cache, KVCache) else None,
+            cache_pos=cache_pos)
+    else:
+        y, new_cache = mamba.mamba_sublayer(
+            sub_params["ssm"], h, cfg.ssm,
+            cache=cache if isinstance(cache, mamba.SSMCache) else None,
+            cache_pos=cache_pos)
+    x = x + y
+    x = shard(x, "data", None, None)
+    if "ffn" in sub_params or "moe" in sub_params:
+        h = layers.rms_norm(x, sub_params["norm2"], cfg.norm_eps)
+        if "moe" in sub_params:
+            y, aux = moe.moe_sublayer(sub_params["moe"], h, cfg.moe)
+        else:
+            y = layers.ffn_sublayer(sub_params["ffn"], h)
+        x = x + y
+        x = shard(x, "data", None, None)
+    return x, new_cache, aux
+
+
+def decoder_stack(params, x, cfg: ModelCfg, positions, caches=None,
+                  cache_pos=None, remat: bool = True):
+    """Run all periods. Returns (x, new_caches, aux_losses)."""
+
+    def period_body(carry, xs):
+        # Barrier pins the saved scan carry to bf16: without it XLA hoists
+        # the rms_norm bf16->f32 convert across the while boundary and
+        # stores the whole (n_periods, B, S, D) residual stack in f32 —
+        # a 2x remat-memory pessimization (observed on the CPU backend).
+        x = lax.optimization_barrier(carry)
+        pp, pc = xs
+        new_caches = {}
+        aux_acc = jnp.zeros((2,), jnp.float32)
+        for i in range(cfg.period):
+            sub = pp[f"sub_{i}"]
+            cache_i = pc.get(f"sub_{i}") if pc is not None else None
+            # Nested remat: per-sublayer checkpoints inside the per-period
+            # checkpoint, so the period backward holds ONE sublayer's
+            # residuals at a time (sum -> max: 8 x ~18 GiB -> ~18 GiB at
+            # jamba scale).
+            sub_fn = jax.checkpoint(_sublayer_apply, static_argnums=(2, 3))
+            x, nc, aux = sub_fn(sub, x, cfg, i, positions,
+                                cache_i, cache_pos)
+            if nc is not None:
+                new_caches[f"sub_{i}"] = nc
+            if aux:
+                aux_acc = aux_acc + jnp.stack(
+                    [aux["load_balance_loss"], aux["router_z_loss"]])
+        # Sequence-parallel residual stream (Megatron-SP): the scan carry —
+        # and therefore the per-period remat stack — shards its sequence
+        # dim over the model axis ("act_seq" symbol; None disables).
+        x = shard(x, "data", "act_seq", None)
+        return x, (new_caches, aux_acc)
+
+    if caches is None:
+        body = jax.checkpoint(period_body) if remat else period_body
+        x, (_, aux) = lax.scan(body, x, (params["periods"], None))
+        aux_losses = {"load_balance_loss": aux[:, 0].sum(),
+                      "router_z_loss": aux[:, 1].sum()}
+        return x, None, aux_losses
+
+    # Serving path (prefill/decode): the stacked caches live in the scan
+    # CARRY and are updated with dynamic_update_index_in_dim — XLA keeps
+    # the loop-carried buffer in place. Passing caches as xs/ys instead
+    # makes scan re-stack the WHOLE (P, B, S, H, D) cache every layer
+    # (observed: 2 x 625 GB/step of cache copies at moonshot decode_32k).
+    def serve_body(carry, xs):
+        x, cstack = carry
+        pp, idx = xs
+        pc = jax.tree.map(
+            lambda c: lax.dynamic_index_in_dim(c, idx, 0, keepdims=False),
+            cstack)
+        x, (new_pc, aux) = period_body(x, (pp, pc))
+        cstack = jax.tree.map(
+            lambda c, n: lax.dynamic_update_index_in_dim(
+                c, n.astype(c.dtype), idx, 0), cstack, new_pc)
+        return (x, cstack), aux
+
+    (x, new_caches), aux = lax.scan(
+        serve_body, (x, caches),
+        (params["periods"], jnp.arange(cfg.n_periods)))
+    aux_losses = {"load_balance_loss": aux[:, 0].sum(),
+                  "router_z_loss": aux[:, 1].sum()}
+    return x, new_caches, aux_losses
+
+
+def embed_tokens(params, tokens, cfg: ModelCfg):
+    x = params["embed"][tokens]
+    return shard(x, "data", None, None)
+
+
+def unembed(params, x, cfg: ModelCfg):
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ w
+
+
+# --------------------------------------------------------------------------
+# Losses / serving entry points
+# --------------------------------------------------------------------------
+
+def chunked_cross_entropy(params, x, labels, cfg: ModelCfg,
+                          chunk: int = 1024) -> jax.Array:
+    """Final-norm + LM head + CE, scanned over sequence chunks so the
+    (B, S, V) logits are never materialized at once."""
+    b, s, d = x.shape
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (s + pad) // chunk
+    xcs = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    lcs = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def step2(tot_cnt, inp):
+        xc, lc = inp
+        valid = (lc >= 0).astype(jnp.float32)
+        logits = (xc @ w).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, jnp.maximum(lc, 0)[..., None],
+                                 axis=-1)[..., 0]
+        tot, cnt = tot_cnt
+        return (tot + ((lse - ll) * valid).sum(), cnt + valid.sum()), None
+
+    step2 = jax.checkpoint(step2)
+    (tot, cnt), _ = lax.scan(step2, (jnp.zeros(()), jnp.zeros(())), (xcs, lcs))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def decoder_lm_loss(params, batch: dict, cfg: ModelCfg,
+                    lb_coef: float = 0.01, z_coef: float = 1e-3):
+    """Next-token CE (+ MoE aux). batch: tokens/embeds, labels, positions?"""
+    if "embeds" in batch:
+        x = shard(batch["embeds"], "data", None, None)
+    else:
+        x = embed_tokens(params, batch["tokens"], cfg)
+    b, s = x.shape[0], x.shape[1]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x, _, aux = decoder_stack(params, x, cfg, positions)
+    ce = chunked_cross_entropy(params, x, batch["labels"], cfg)
+    loss = ce + lb_coef * aux["load_balance_loss"] + z_coef * aux["router_z_loss"]
+    return loss, {"ce": ce, **aux}
+
+
+def init_decoder_caches(cfg: ModelCfg, batch: int, s_max: int,
+                        dtype=jnp.bfloat16):
+    """Stacked per-period cache pytree matching the scan structure."""
+    caches: dict[str, Any] = {}
+    for i in range(cfg.period):
+        if i in cfg.attn_every:
+            kv = KVCache(
+                k=jnp.zeros((cfg.n_periods, batch, s_max, cfg.n_kv_heads,
+                             cfg.d_head), dtype),
+                v=jnp.zeros((cfg.n_periods, batch, s_max, cfg.n_kv_heads,
+                             cfg.d_head), dtype))
+            caches[f"sub_{i}"] = kv
+        else:
+            c = mamba.init_ssm_cache(cfg, batch, dtype)
+            caches[f"sub_{i}"] = mamba.SSMCache(
+                conv=jnp.broadcast_to(c.conv, (cfg.n_periods, *c.conv.shape)),
+                state=jnp.broadcast_to(c.state,
+                                       (cfg.n_periods, *c.state.shape)))
+    return caches
+
+
+def decoder_prefill(params, batch: dict, cfg: ModelCfg, s_max: int):
+    """Run the prompt, fill caches, return last-token logits + caches."""
+    if "embeds" in batch:
+        x = shard(batch["embeds"], "data", None, None)
+    else:
+        x = embed_tokens(params, batch["tokens"], cfg)
+    b, s = x.shape[0], x.shape[1]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    caches = init_decoder_caches(cfg, b, s_max, x.dtype)
+    caches = shard_caches(caches)
+    x, new_caches, _ = decoder_stack(params, x, cfg, positions, caches,
+                                     cache_pos=None)
+    logits = unembed(params, x[:, -1:, :], cfg)
+    return logits, new_caches
+
+
+def decoder_decode_step(params, tokens, caches, pos, cfg: ModelCfg):
+    """One token step. tokens: (B, 1); pos: scalar int32 (current length)."""
+    x = embed_tokens(params, tokens, cfg)
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    x, new_caches, _ = decoder_stack(params, x, cfg, positions, caches,
+                                     cache_pos=pos)
+    logits = unembed(params, x, cfg)
+    return logits, new_caches
+
+
+def cache_axes(leaf_ndim: int) -> tuple | None:
+    """Symbolic layout per cache leaf (by rank).
+
+    Defaults (overridable via ShardCtx symbols): cache batch on "cache_b"
+    (data axes when the batch divides, else replicated — long_500k B=1),
+    KV sequence on "cache_s" (model axis: flash-decoding style, valid for
+    any head count; all data+model axes when the batch can't shard)."""
+    if leaf_ndim == 5:   # stacked KV: (P, B, S, H, D)
+        return (None, "cache_b", "cache_s", None, None)
+    if leaf_ndim == 6:   # stacked SSM state: (P, B, G, R, N, Ph)
+        return (None, "cache_b", None, "model", None, None)
+    if leaf_ndim == 4:   # stacked conv state: (P, B, K, C)
+        return (None, "cache_b", None, "model")
+    return None
+
+
+def shard_caches(caches):
+    def f(_path, leaf):
+        axes = cache_axes(leaf.ndim)
+        return shard(leaf, *axes) if axes else leaf
+
+    return jax.tree_util.tree_map_with_path(f, caches)

@@ -1,0 +1,86 @@
+"""Self-contained AdamW + cosine schedule + global-norm clipping.
+
+Optimizer state is a pytree congruent with params (same sharding specs
+apply — ZeRO: m/v shard exactly like their parameters over data x model),
+so the dry-run's train_step carries the full production memory footprint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+    count: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def _lr(self, count: jax.Array) -> jax.Array:
+        if callable(self.learning_rate):
+            return self.learning_rate(count)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, grads, state: AdamWState, params):
+        count = state.count + 1
+        cf = count.astype(jnp.float32)
+        gnorm = global_norm(grads)
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state.m, grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)), state.v, grads)
+        mhat_scale = 1.0 / (1 - b1 ** cf)
+        vhat_scale = 1.0 / (1 - b2 ** cf)
+        lr = self._lr(count)
+
+        def upd(p, m_, v_):
+            step = m_ * mhat_scale / (jnp.sqrt(v_ * vhat_scale) + self.eps)
+            step = step + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamWState(m, v, count), {"grad_norm": gnorm,
+                                                     "lr": lr}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def cosine_schedule(peak: float, warmup: int, total: int,
+                    floor: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def lr(count):
+        c = count.astype(jnp.float32)
+        warm = peak * c / max(warmup, 1)
+        prog = jnp.clip((c - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(math.pi * prog)))
+        return jnp.where(c < warmup, warm, cos)
+
+    return lr

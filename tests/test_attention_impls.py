@@ -1,0 +1,28 @@
+"""Attention impl selection: the Pallas flash kernel integrated in the
+model path (REPRO_ATTN_IMPL=pallas, interpret mode on CPU) must match the
+XLA chunked-scan path end-to-end through a full model forward."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models.api import build_model, make_batch
+
+
+def test_pallas_attention_matches_xla_end_to_end():
+    cfg = get_smoke("internlm2-1.8b")
+    api = build_model(cfg, dtype=jnp.float32)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 2, 32, dtype=jnp.float32)
+
+    assert "REPRO_ATTN_IMPL" not in os.environ
+    loss_xla, _ = api.train_loss(params, batch)
+    try:
+        os.environ["REPRO_ATTN_IMPL"] = "pallas"
+        loss_pl, _ = api.train_loss(params, batch)
+    finally:
+        del os.environ["REPRO_ATTN_IMPL"]
+    np.testing.assert_allclose(float(loss_xla), float(loss_pl),
+                               rtol=1e-4, atol=1e-5)

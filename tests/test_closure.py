@@ -1,0 +1,133 @@
+"""Unit + property tests for dependence-closure arithmetic (paper §III-A/B/C)."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import closure
+from repro.core.graph import NetSpec, chain
+
+C, P = "conv", "pool"
+
+
+def tiny_net(strides=(1, 2, 1), ks=(3, 3, 3), chans=(4, 4, 8), in_hw=13, in_ch=4):
+    spec = [(C, k, s, 0 if s > 1 else k // 2, c)
+            for k, s, c in zip(ks, strides, chans)]
+    return chain("tiny", spec, in_h=in_hw, in_w=in_hw, in_ch=in_ch)
+
+
+def test_single_layer_closure_is_k_rows():
+    """Paper Fig. 4: DC(0,1) for a 3x3 conv on a 13x13x4 map = 3 row-planes
+    = 3 * 13 * 4 = 156 elements."""
+    net = chain("fig4", [(C, 3, 1, 1, 4)], in_h=13, in_w=13, in_ch=4)
+    assert closure.span_row_counts(net, 0, 1) == [3]
+    assert closure.span_closure_elems(net, 0, 1) == 156
+
+
+def test_two_layer_closure_arithmetic_sequence():
+    """Paper §III-C: 'one row-plane of output depends on three row-planes of
+    input which together depend on five row-planes of the previous layer's
+    input' (stride-1 3x3 convs)."""
+    net = chain("seq", [(C, 3, 1, 1, 4), (C, 3, 1, 1, 4)],
+                in_h=13, in_w=13, in_ch=4)
+    assert closure.span_row_counts(net, 0, 2) == [5, 3]
+    # Fig. 4's DC(0,2)=416 = (5 + 3) * 13 * 4 with stride pattern (1, 2):
+    net2 = chain("fig4b", [(C, 3, 1, 1, 4), (C, 3, 2, 1, 4)],
+                 in_h=13, in_w=13, in_ch=4)
+    assert closure.span_closure_elems(net2, 0, 2) == 416
+
+
+def test_stride_multiplies_row_growth():
+    net = tiny_net(strides=(2, 2, 1), in_hw=64)
+    rows = closure.span_row_counts(net, 0, 3)
+    # backward: r3=1 -> r2=(1-1)*1+3=3 -> r1=(3-1)*2+3=7 -> r0=(7-1)*2+3=15
+    assert rows == [15, 7, 3]
+    # and with a short input the counts clamp to real map heights
+    small = tiny_net(strides=(2, 2, 1), in_hw=13)
+    clamped = closure.span_row_counts(small, 0, 3)
+    heights = [small.map_shape(l)[0] for l in range(3)]
+    assert all(r <= h for r, h in zip(clamped, heights))
+
+
+def test_row_counts_clamp_to_map_height():
+    net = tiny_net(in_hw=5)
+    for i in range(net.n_layers):
+        for j in range(i + 1, net.n_layers + 1):
+            for off, r in enumerate(closure.span_row_counts(net, i, j)):
+                assert 1 <= r <= net.map_shape(i + off)[0]
+
+
+def test_closure_counts_input_buffers_only():
+    """DC sums circular buffers at L_i .. L_{j-1}; the span output streams."""
+    net = tiny_net()
+    counts = closure.span_row_counts(net, 0, 3)
+    expect = sum(r * net.map_shape(l)[1] * net.map_shape(l)[2]
+                 for l, r in enumerate(counts))
+    assert closure.span_closure_elems(net, 0, 3) == expect
+
+
+def test_max_tile_rows_monotone_in_capacity():
+    net = tiny_net()
+    t_small = closure.max_tile_rows(net, 0, 3, 2_000)
+    t_big = closure.max_tile_rows(net, 0, 3, 20_000)
+    assert t_big >= t_small >= 0
+
+
+def test_max_tile_rows_footprint_fits():
+    net = tiny_net()
+    cap = 3_000
+    t = closure.max_tile_rows(net, 0, 3, cap)
+    assert t >= 1
+    assert closure.span_footprint_elems(net, 0, 3, t) <= cap
+    out_h = net.map_shape(3)[0]
+    if t < out_h:
+        assert closure.span_footprint_elems(net, 0, 3, t + 1) > cap
+
+
+def test_recompute_factor_exact_at_full_tile():
+    net = tiny_net()
+    out_h = net.map_shape(3)[0]
+    assert closure.recompute_factor_square(net, 0, 3, out_h) == pytest.approx(1.0)
+
+
+def test_recompute_factor_grows_for_small_tiles():
+    net = tiny_net(strides=(1, 1, 1))
+    f1 = closure.recompute_factor_square(net, 0, 3, 1)
+    f4 = closure.recompute_factor_square(net, 0, 3, 4)
+    assert f1 > f4 >= 1.0
+
+
+@st.composite
+def random_net(draw):
+    n = draw(st.integers(2, 5))
+    in_hw = draw(st.integers(8, 32))
+    specs, h = [], in_hw
+    for _ in range(n):
+        k = draw(st.sampled_from([1, 3, 5]))
+        s = draw(st.sampled_from([1, 1, 2]))
+        if (h + 2 * (k // 2) - k) // s + 1 < 1:
+            s = 1
+        specs.append((C, k, s, k // 2, draw(st.sampled_from([2, 4, 8]))))
+        h = (h + 2 * (k // 2) - k) // s + 1
+        if h < 3:
+            break
+    return chain("rand", specs, in_h=in_hw, in_w=in_hw, in_ch=3)
+
+
+@given(random_net(), st.integers(1, 4))
+@settings(max_examples=50, deadline=None)
+def test_property_closure_monotone_in_span_and_rows(net, t):
+    """Closure grows (weakly) with span extension and with tile rows."""
+    n = net.n_layers
+    for i in range(n):
+        for j in range(i + 1, n + 1):
+            c1 = closure.span_closure_elems(net, i, j, 1)
+            ct = closure.span_closure_elems(net, i, j, t)
+            assert ct >= c1 > 0
+            if j < n:  # extending the span adds a buffer
+                assert closure.span_closure_elems(net, i, j + 1) > 0
+    # necessary condition: every buffer holds FULL rows (row-plane tiles)
+    for i in range(n):
+        rows = closure.span_row_counts(net, i, n)
+        for off, r in enumerate(rows):
+            h, w, c = net.map_shape(i + off)
+            assert r * w * c % (w * c) == 0  # whole row-planes only

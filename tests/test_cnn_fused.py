@@ -1,0 +1,133 @@
+"""Machine-vs-model tests: Occam's streaming execution == layer-by-layer
+oracle, rings sized by the closure are exactly sufficient (and one row less
+is NOT — the necessary condition), and measured off-chip transfers equal the
+DP's cost model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import closure
+from repro.core.graph import chain
+from repro.core.partition import partition_cnn
+from repro.models import cnn
+
+C, P = "conv", "pool"
+
+
+def make(specs, hw=12, ch=3, edges=()):
+    return chain("t", specs, in_h=hw, in_w=hw, in_ch=ch,
+                 residual_edges=tuple(edges))
+
+
+def run_both(net, boundaries=None, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = cnn.init_params(key, net)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                          (net.layers[0].in_h, net.layers[0].in_w,
+                           net.layers[0].in_ch))
+    ref = cnn.reference_forward(params, x, net)
+    ctr = cnn.TrafficCounter()
+    got = cnn.occam_forward(params, x, net, boundaries, ctr)
+    return ref, got, ctr
+
+
+def test_plain_chain_single_span():
+    net = make([(C, 3, 1, 1, 4), (C, 3, 1, 1, 8), (C, 3, 1, 1, 4)])
+    ref, got, _ = run_both(net)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got), rtol=1e-5)
+
+
+def test_strided_convs():
+    net = make([(C, 3, 2, 1, 4), (C, 3, 1, 1, 8), (C, 3, 2, 1, 8)], hw=16)
+    ref, got, _ = run_both(net)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got), rtol=1e-5)
+
+
+def test_pooling_layers():
+    net = make([(C, 5, 1, 2, 4), (P, 2, 2, 0, 0), (C, 3, 1, 1, 8),
+                (P, 3, 2, 1, 0)], hw=16)
+    ref, got, _ = run_both(net)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got), rtol=1e-5)
+
+
+def test_partitioned_execution_matches():
+    net = make([(C, 3, 1, 1, 4)] * 5, hw=10)
+    for bounds in ([2], [1, 3], [1, 2, 3, 4]):
+        ref, got, _ = run_both(net, bounds)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(got),
+                                   rtol=1e-5, err_msg=str(bounds))
+
+
+def test_residual_inside_span():
+    net = make([(C, 3, 1, 1, 4), (C, 3, 1, 1, 4), (C, 3, 1, 1, 4)],
+               edges=[(0, 2), (1, 3)])
+    ref, got, _ = run_both(net)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got), rtol=1e-5)
+
+
+def test_residual_downsample_block():
+    """ResNet-style stride-2 block: shortcut subsamples + channel-pads."""
+    net = make([(C, 3, 2, 1, 8), (C, 3, 1, 1, 8)], hw=12, ch=4,
+               edges=[(0, 2)])
+    ref, got, _ = run_both(net)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got), rtol=1e-5)
+
+
+def test_residual_crossing_boundary():
+    """Edge (1, 4) crossing the cut at 2: the source map is spilled by the
+    producer span and read back by the consumer span."""
+    net = make([(C, 3, 1, 1, 4)] * 4, edges=[(1, 4)])
+    ref, got, ctr = run_both(net, boundaries=[2])
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got), rtol=1e-5)
+    assert ctr.total == cnn.predicted_transfers(net, [2])
+
+
+def test_traffic_counter_matches_dp_model():
+    """Measured streaming transfers == the DP's OP[0, n].X (model==machine)."""
+    net = make([(C, 3, 1, 1, 4), (C, 3, 2, 1, 8), (C, 3, 1, 1, 8),
+                (C, 3, 1, 1, 4)], hw=16)
+    for bounds in ([], [1], [2], [1, 3]):
+        _, _, ctr = run_both(net, bounds)
+        assert ctr.total == cnn.predicted_transfers(net, bounds), bounds
+
+
+def test_dp_partition_executes_and_matches_cost():
+    net = make([(C, 3, 1, 1, 8), (C, 3, 1, 1, 8), (P, 2, 2, 0, 0),
+                (C, 3, 1, 1, 16), (C, 3, 1, 1, 8)], hw=16, ch=4)
+    cap = 3000
+    res = partition_cnn(net, cap)
+    assert res.n_spans >= 2  # capacity actually forces a split
+    ref, got, ctr = run_both(net, res.boundaries)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got), rtol=1e-5)
+    assert ctr.total == res.transfers
+
+
+def test_ring_one_row_smaller_fails():
+    """Necessity: shrink every ring by one row-plane and the streaming
+    execution must hit a retention violation — the closure is *minimal*."""
+    net = make([(C, 3, 1, 1, 4), (C, 3, 1, 1, 4)], hw=10)
+    key = jax.random.PRNGKey(0)
+    params = cnn.init_params(key, net)
+    x = jax.random.normal(jax.random.PRNGKey(1), (10, 10, 3))
+    real = closure.span_row_counts
+
+    def starved(n, i, j, out_rows=1):
+        return [max(r - 1, 1) for r in real(n, i, j, out_rows)]
+
+    closure.span_row_counts = starved
+    try:
+        with pytest.raises(AssertionError, match="ring violation"):
+            cnn.occam_forward(params, x, net)
+    finally:
+        closure.span_row_counts = real
+
+
+def test_batched_via_vmap():
+    net = make([(C, 3, 1, 1, 4), (C, 3, 2, 1, 8)], hw=12)
+    key = jax.random.PRNGKey(0)
+    params = cnn.init_params(key, net)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (3, 12, 12, 3))
+    ref = jax.vmap(lambda im: cnn.reference_forward(params, im, net))(xs)
+    got = jnp.stack([cnn.occam_forward(params, xs[i], net) for i in range(3)])
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got), rtol=1e-5)

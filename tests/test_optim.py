@@ -1,0 +1,78 @@
+"""AdamW + schedule + compression-free optimizer tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.adamw import AdamW, cosine_schedule, global_norm
+
+
+def quad_loss(p):
+    return jnp.sum((p["w"] - 3.0) ** 2) + jnp.sum((p["b"] + 1.0) ** 2)
+
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.zeros((4,)), "b": jnp.zeros((2,))}
+    opt = AdamW(learning_rate=0.1, weight_decay=0.0, clip_norm=None)
+    state = opt.init(params)
+    for _ in range(300):
+        grads = jax.grad(quad_loss)(params)
+        params, state, _ = opt.update(grads, state, params)
+    np.testing.assert_allclose(np.asarray(params["w"]), 3.0, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(params["b"]), -1.0, atol=1e-2)
+
+
+def test_adamw_matches_reference_step():
+    """First step equals the textbook formula (bias-corrected)."""
+    p = {"w": jnp.asarray([1.0, 2.0])}
+    g = {"w": jnp.asarray([0.5, -1.0])}
+    opt = AdamW(learning_rate=0.01, b1=0.9, b2=0.999, eps=1e-8,
+                weight_decay=0.0, clip_norm=None)
+    state = opt.init(p)
+    new_p, state, _ = opt.update(g, state, p)
+    # m_hat = g, v_hat = g^2 -> step = g / (|g| + eps) = sign(g)
+    expect = np.asarray([1.0, 2.0]) - 0.01 * np.sign([0.5, -1.0])
+    np.testing.assert_allclose(np.asarray(new_p["w"]), expect, rtol=1e-5)
+
+
+def test_weight_decay_is_decoupled():
+    p = {"w": jnp.asarray([2.0])}
+    g = {"w": jnp.asarray([0.0])}
+    opt = AdamW(learning_rate=0.1, weight_decay=0.5, clip_norm=None)
+    state = opt.init(p)
+    new_p, _, _ = opt.update(g, state, p)
+    # pure decay: w - lr * wd * w
+    np.testing.assert_allclose(np.asarray(new_p["w"]), [2.0 - 0.1 * 0.5 * 2.0],
+                               rtol=1e-5)
+
+
+def test_grad_clipping():
+    p = {"w": jnp.zeros((3,))}
+    g = {"w": jnp.asarray([30.0, 40.0, 0.0])}  # norm 50
+    opt = AdamW(learning_rate=1.0, clip_norm=1.0, weight_decay=0.0)
+    state = opt.init(p)
+    _, _, metrics = opt.update(g, state, p)
+    assert metrics["grad_norm"] == pytest.approx(50.0)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100, floor=0.1)
+    assert float(lr(jnp.asarray(0))) == pytest.approx(0.0)
+    assert float(lr(jnp.asarray(10))) == pytest.approx(1.0, rel=1e-2)
+    assert float(lr(jnp.asarray(100))) == pytest.approx(0.1, rel=1e-2)
+    assert float(lr(jnp.asarray(55))) > float(lr(jnp.asarray(90)))
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert float(global_norm(t)) == pytest.approx(5.0)
+
+
+def test_bf16_params_fp32_state():
+    p = {"w": jnp.ones((4,), jnp.bfloat16)}
+    opt = AdamW(learning_rate=0.1)
+    state = opt.init(p)
+    assert state.m["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((4,), jnp.bfloat16)}
+    new_p, state, _ = opt.update(g, state, p)
+    assert new_p["w"].dtype == jnp.bfloat16

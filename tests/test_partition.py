@@ -1,0 +1,144 @@
+"""DP optimal partitioner tests (paper §III-D): optimality vs brute force,
+capacity feasibility, residual accounting, transformer reuse."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import closure
+from repro.core.graph import chain
+from repro.core.partition import (
+    CNNPartitionProblem,
+    brute_force_partition,
+    optimal_partition,
+    partition_cnn,
+    partition_report,
+    partition_transformer,
+)
+
+C, P = "conv", "pool"
+
+
+def small_net(n=4, ch=8, hw=16):
+    return chain("small", [(C, 3, 1, 1, ch)] * n, in_h=hw, in_w=hw, in_ch=4)
+
+
+def test_whole_net_fits_no_partition():
+    net = small_net(3)
+    res = partition_cnn(net, capacity_elems=10**9)
+    assert res.boundaries == []
+    assert res.n_spans == 1
+    # bare minimum transfers: read input once + write output once (Eqn. 2)
+    assert res.transfers == net.map_elems(0) + net.map_elems(net.n_layers)
+
+
+def test_partitions_fit_capacity():
+    net = small_net(6, ch=16, hw=32)
+    cap = 40_000
+    res = partition_cnn(net, cap)
+    prob = CNNPartitionProblem(net, cap)
+    for sp in res.spans:
+        if sp.end - sp.start > 1:
+            assert prob.span_fits(sp.start, sp.end)
+
+
+def test_oversized_single_layer_lower_bound():
+    """Paper §V-B1 (VGG): single layers too big for the cache keep the
+    base-case lower bound rather than failing."""
+    net = chain("fat", [(C, 3, 1, 1, 512), (C, 3, 1, 1, 512)],
+                in_h=64, in_w=64, in_ch=512)
+    res = partition_cnn(net, capacity_elems=1000)  # nothing fits
+    assert res.n_spans == 2
+    assert not res.spans[0].fits and not res.spans[1].fits
+    # transfers = per-layer io (every map read+written at boundaries)
+    expect = (net.map_elems(0) + 2 * net.map_elems(1) + net.map_elems(2))
+    assert res.transfers == expect
+
+
+def test_batched_inference_scales_feature_transfers():
+    """Eqn. 6: transfers scale with b; filters shared across the minibatch."""
+    net = small_net(4)
+    cap = closure.span_footprint_elems(net, 0, 4) + net.total_weight_elems()
+    r1 = partition_cnn(net, cap, batch=1)
+    r4 = partition_cnn(net, cap, batch=4)
+    assert r4.transfers >= r1.transfers  # more transfers and maybe more cuts
+    if r4.boundaries == r1.boundaries:
+        assert r4.transfers == 4 * r1.transfers
+
+
+def test_residual_edge_steers_partition():
+    """A residual edge makes cutting inside (s, t) cost 2|L_s| extra — the
+    DP must prefer an equivalent cut outside the edge."""
+    net = chain("res", [(C, 3, 1, 1, 8)] * 4, in_h=16, in_w=16, in_ch=8,
+                residual_edges=((1, 3),))
+    prob = CNNPartitionProblem(net, capacity_elems=1)  # force singleton spans
+    # With capacity 1 all spans are singletons: every boundary exists, and
+    # the edge (1, 3) is cut => exactly one 2|L_1| penalty via outermost cut.
+    res = optimal_partition(prob)
+    bf_cost, _ = brute_force_partition(prob)
+    assert res.transfers == pytest.approx(bf_cost)
+
+
+@st.composite
+def random_problem(draw):
+    n = draw(st.integers(2, 7))
+    net = chain("rp", [(C, 3, 1, 1, draw(st.sampled_from([4, 8, 16])))
+                       for _ in range(n)],
+                in_h=16, in_w=16, in_ch=4,
+                residual_edges=tuple(
+                    (s, t) for s, t in draw(st.lists(
+                        st.tuples(st.integers(0, n - 1), st.integers(1, n)),
+                        max_size=2)) if s < t))
+    cap = draw(st.integers(500, 60_000))
+    batch = draw(st.sampled_from([1, 2, 8]))
+    return CNNPartitionProblem(net, cap, batch)
+
+
+@given(random_problem())
+@settings(max_examples=60, deadline=None)
+def test_property_dp_matches_brute_force(prob):
+    """The DP is provably optimal — cross-check against exhaustive search
+    (Layer Fusion's approach, feasible only for small n)."""
+    res = optimal_partition(prob)
+    bf_cost, _bf_cuts = brute_force_partition(prob)
+    assert res.transfers == pytest.approx(bf_cost)
+
+
+@given(random_problem(), st.integers(1, 3))
+@settings(max_examples=30, deadline=None)
+def test_property_more_capacity_never_hurts(prob, factor):
+    res1 = optimal_partition(prob)
+    prob2 = CNNPartitionProblem(prob.net, prob.capacity_elems * (factor + 1),
+                                prob.batch)
+    res2 = optimal_partition(prob2)
+    assert res2.transfers <= res1.transfers
+
+
+def test_partition_report_columns():
+    net = small_net(5, ch=16, hw=32)
+    rep = partition_report(net, 20_000)
+    assert all({"start", "end", "occam_tile_rows", "lf_square_tile",
+                "closure_elems", "weight_elems"} <= set(r) for r in rep)
+    assert rep[0]["start"] == 0 and rep[-1]["end"] == net.n_layers
+
+
+def test_transformer_partition_balances_capacity():
+    """16 uniform layers, capacity for 4 per stage -> 4 stages, uniform."""
+    w = [100.0] * 16
+    a = [10.0] * 16
+    res = partition_transformer(w, a, boundary_act_bytes=1.0,
+                                stage_capacity_bytes=440.0)
+    assert res.n_spans == 4
+    assert all(sp.end - sp.start == 4 for sp in res.spans)
+
+
+def test_transformer_partition_heterogeneous():
+    """MoE layers are 10x bigger: the DP packs many thin layers per stage and
+    isolates fat ones — boundary count still minimal."""
+    w = [100.0, 100.0, 1000.0, 100.0, 100.0, 1000.0, 100.0, 100.0]
+    a = [0.0] * 8
+    res = partition_transformer(w, a, boundary_act_bytes=5.0,
+                                stage_capacity_bytes=1200.0)
+    for sp in res.spans:
+        assert sum(w[sp.start:sp.end]) <= 1200.0
+    # optimality: fewest cuts possible given capacity
+    assert res.n_spans == 3

@@ -1,0 +1,104 @@
+"""Hypothesis property tests for LM-substrate invariants."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.models import layers
+from repro.models.moe import capacity
+from repro.models.transformer import chunked_cross_entropy
+
+
+@given(st.integers(1, 64), st.integers(2, 16), st.sampled_from([64, 128]),
+       st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_rope_preserves_norm_and_relative_phase(seq, heads, d, shift):
+    """RoPE is a rotation: norms invariant; q.k depends only on relative
+    position (shifting both by the same offset keeps scores)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    q = jax.random.normal(k1, (1, seq, heads, d))
+    k = jax.random.normal(k2, (1, seq, heads, d))
+    pos = jnp.arange(seq)[None, :]
+    qr = layers.apply_rope(q, pos, 1e4)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(qr), axis=-1),
+        np.linalg.norm(np.asarray(q), axis=-1), rtol=1e-4)
+    qr2 = layers.apply_rope(q, pos + shift, 1e4)
+    kr = layers.apply_rope(k, pos, 1e4)
+    kr2 = layers.apply_rope(k, pos + shift, 1e4)
+    s1 = np.einsum("bqhd,bkhd->bhqk", np.asarray(qr), np.asarray(kr))
+    s2 = np.einsum("bqhd,bkhd->bhqk", np.asarray(qr2), np.asarray(kr2))
+    np.testing.assert_allclose(s1, s2, rtol=2e-3, atol=2e-4)
+
+
+@given(st.integers(8, 96), st.integers(2, 8), st.sampled_from([16, 32]),
+       st.booleans())
+@settings(max_examples=20, deadline=None)
+def test_chunked_attention_matches_reference(seq, heads, d, causal):
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    ks = jax.random.split(jax.random.PRNGKey(seq * heads), 3)
+    q = jax.random.normal(ks[0], (2, heads, seq, d))
+    k = jax.random.normal(ks[1], (2, heads, seq, d))
+    v = jax.random.normal(ks[2], (2, heads, seq, d))
+    # layers.chunked_attention takes (B, S, H, D)
+    got = layers.chunked_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, chunk=16)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got.transpose(0, 2, 1, 3)),
+                               np.asarray(ref), rtol=3e-5, atol=3e-5)
+
+
+@given(st.integers(1, 4096), st.integers(2, 128), st.integers(1, 8),
+       st.floats(1.0, 2.0))
+@settings(max_examples=60, deadline=None)
+def test_capacity_bounds(tokens, experts, k, factor):
+    """Capacity covers perfectly balanced routing and never exceeds the
+    all-tokens-to-one-expert worst case by more than the factor."""
+    c = capacity(tokens, experts, k, factor)
+    assert c >= 1
+    assert c * experts >= tokens * k  # no drops under perfect balance
+    assert c <= max(1, int(np.ceil(tokens * k / experts * factor)))
+
+
+@given(st.integers(2, 6), st.integers(8, 64), st.sampled_from([32, 64]),
+       st.integers(17, 51))
+@settings(max_examples=15, deadline=None)
+def test_chunked_ce_matches_direct(batch, seq, d, vocab):
+    """Sequence-chunked CE == direct full-logits CE (incl. ragged pads)."""
+    ks = jax.random.split(jax.random.PRNGKey(batch * seq), 3)
+    x = jax.random.normal(ks[0], (batch, seq, d), jnp.float32)
+    w = jax.random.normal(ks[1], (d, vocab), jnp.float32) * 0.1
+    labels = jax.random.randint(ks[2], (batch, seq), 0, vocab)
+    params = {"final_norm": jnp.ones((d,)), "lm_head": w}
+
+    class Cfg:
+        norm_eps = 1e-5
+        tie_embeddings = False
+
+    got = chunked_cross_entropy(params, x, labels, Cfg(), chunk=16)
+    xn = layers.rms_norm(x, params["final_norm"], 1e-5)
+    logits = (xn @ w).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    want = (lse - ll).mean()
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+@given(st.integers(1, 40), st.integers(1, 6))
+@settings(max_examples=25, deadline=None)
+def test_stap_replication_monotone_throughput(seed, extra):
+    """More chips never hurt; throughput is exactly min_i r_i/t_i."""
+    from repro.core.stap import plan_replication
+
+    rng = np.random.default_rng(seed)
+    times = list(rng.uniform(1, 50, size=rng.integers(1, 6)))
+    prev = 0.0
+    for budget in range(len(times), len(times) + extra + 1):
+        plan = plan_replication(times, max_chips=budget)
+        assert plan.throughput >= prev - 1e-12
+        prev = plan.throughput
+        want = min(r / t for r, t in zip(plan.replicas, plan.stage_times))
+        assert abs(plan.throughput - want) < 1e-9

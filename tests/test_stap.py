@@ -1,0 +1,63 @@
+"""STAP scheduler + discrete-event simulator tests (paper §III-E)."""
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.core.stap import paper_example, plan_replication, simulate
+
+
+def test_paper_example_unreplicated():
+    base, _ = paper_example()
+    assert base.latency == 100
+    assert base.throughput == pytest.approx(1 / 40)
+
+
+def test_paper_example_replicated():
+    """Replicating stages 2 and 3 -> one inference per 20 units (§III-E)."""
+    _, staged = paper_example()
+    assert staged.replicas == (1, 2, 2, 1)
+    assert staged.throughput == pytest.approx(1 / 20)
+    assert staged.latency == 100  # latency unaffected
+
+
+def test_simulation_matches_closed_form():
+    _, staged = paper_example()
+    stats = simulate(staged, n_jobs=200)
+    assert stats.throughput == pytest.approx(staged.throughput, rel=0.05)
+
+
+def test_latency_unaffected_below_bottleneck_rate():
+    """Asynchronous stages: at sub-bottleneck arrival rates the latency is
+    the bare pipeline sum (no queueing)."""
+    _, staged = paper_example()
+    stats = simulate(staged, n_jobs=50,
+                     arrival_period=staged.bottleneck_period * 1.01)
+    assert stats.mean_latency == pytest.approx(staged.latency, rel=1e-6)
+    assert stats.max_latency == pytest.approx(staged.latency, rel=1e-6)
+
+
+def test_budgeted_replication_greedy():
+    plan = plan_replication([10, 30, 20], max_chips=6)
+    assert sum(plan.replicas) == 6
+    # greedy water-fill: bottleneck 30 gets 2, then 20 and 30/2=15 compete
+    assert plan.replicas[1] >= 2
+    assert plan.throughput >= 1 / 30
+
+
+def test_replication_never_reduces_throughput():
+    base = plan_replication([15, 35, 40, 10])
+    for chips in range(4, 12):
+        plan = plan_replication([15, 35, 40, 10], max_chips=chips)
+        assert plan.throughput >= base.throughput - 1e-12
+
+
+@given(st.lists(st.floats(1.0, 100.0), min_size=1, max_size=6),
+       st.integers(1, 3))
+@settings(max_examples=40, deadline=None)
+def test_property_sim_throughput_equals_plan(times, extra):
+    plan = plan_replication(times, max_chips=len(times) + extra)
+    stats = simulate(plan, n_jobs=300)
+    # steady-state throughput == min_i r_i / t_i
+    assert stats.throughput == pytest.approx(plan.throughput, rel=0.05)
+    # work conservation: makespan >= jobs / throughput
+    assert stats.makespan >= 300 / plan.throughput * 0.95

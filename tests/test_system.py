@@ -1,0 +1,79 @@
+"""End-to-end behaviour tests: training converges, generation runs, a
+killed run resumes from its checkpoint bit-exactly (data replay included),
+and the paper's full pipeline (partition -> stream -> STAP) holds together.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.train import train
+from repro.launch.serve import serve
+
+
+def test_training_reduces_loss():
+    _, losses = train("llama3.2-1b", smoke=True, steps=40, batch=8, seq=64,
+                      lr=3e-3, log_every=1000)
+    assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
+
+
+def test_training_with_microbatches_matches_trend():
+    _, l1 = train("internlm2-1.8b", smoke=True, steps=30, batch=8, seq=32,
+                  lr=3e-3, microbatches=1, log_every=1000)
+    _, l2 = train("internlm2-1.8b", smoke=True, steps=30, batch=8, seq=32,
+                  lr=3e-3, microbatches=2, log_every=1000)
+    # same data, same objective: both make comparable progress
+    assert l2[-1] < l2[0] - 0.3
+    assert abs(l1[-1] - l2[-1]) < 0.5
+
+
+def test_checkpoint_restart_is_exact(tmp_path):
+    """Kill/restart: continuing from a checkpoint reproduces the same
+    final loss as an uninterrupted run (deterministic data replay)."""
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+    _, full = train("llama3.2-1b", smoke=True, steps=20, batch=4, seq=32,
+                    ckpt_dir=d1, ckpt_every=10, log_every=1000)
+    # interrupted run: first 10 steps (schedule shaped for the full 20),
+    # then resume to 20
+    train("llama3.2-1b", smoke=True, steps=10, batch=4, seq=32,
+          ckpt_dir=d2, ckpt_every=10, log_every=1000, total_steps=20)
+    _, resumed = train("llama3.2-1b", smoke=True, steps=20, batch=4, seq=32,
+                       ckpt_dir=d2, ckpt_every=10, log_every=1000)
+    assert resumed[-1] == pytest.approx(full[-1], rel=1e-3)
+
+
+def test_generation_runs_all_families():
+    for arch in ("llama3.2-1b", "mamba2-1.3b", "jamba-1.5-large-398b",
+                 "seamless-m4t-large-v2"):
+        r = serve(arch, smoke=True, batch=2, prompt_len=16, gen=8)
+        assert r["tokens"].shape == (2, 8)
+        assert int(r["tokens"].max()) >= 0
+
+
+def test_full_paper_pipeline_consistency():
+    """partition -> streaming execution -> measured == predicted traffic ->
+    STAP plan — the paper's chain on one net."""
+    from repro.core.graph import chain
+    from repro.core.partition import partition_cnn
+    from repro.core.stap import plan_replication, simulate
+    from repro.models import cnn
+
+    net = chain("sys", [("conv", 3, 1, 1, 8), ("conv", 3, 1, 1, 8),
+                        ("pool", 2, 2, 0, 0), ("conv", 3, 1, 1, 16),
+                        ("conv", 3, 1, 1, 8)], in_h=16, in_w=16, in_ch=3,
+                residual_edges=((0, 2),))
+    res = partition_cnn(net, 2500)
+    params = cnn.init_params(jax.random.PRNGKey(0), net)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 16, 3))
+    ctr = cnn.TrafficCounter()
+    y = cnn.occam_forward(params, x, net, res.boundaries, ctr)
+    ref = cnn.reference_forward(params, x, net)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-5)
+    assert ctr.total == res.transfers
+    times = [sum(net.layers[i].macs for i in range(sp.start, sp.end)) or 1
+             for sp in res.spans]
+    plan = plan_replication(times, max_chips=len(times) + 2)
+    stats = simulate(plan, 100)
+    assert stats.throughput == pytest.approx(plan.throughput, rel=0.05)
