@@ -1,0 +1,17 @@
+# Tier-1 entry points. PYTHONPATH=src is pinned here so the suite is one
+# command from a fresh checkout.
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test-fast test bench
+
+# Fast tier: everything but the @pytest.mark.slow sweeps (< 2 min).
+test-fast:
+	$(PY) -m pytest -q -m "not slow"
+
+# Full suite, fail-fast (the ROADMAP tier-1 verify command).
+test:
+	$(PY) -m pytest -x -q
+
+bench:
+	$(PY) -m benchmarks.run

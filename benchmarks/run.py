@@ -32,6 +32,8 @@ BENCHES = [
      "mean energy saving (paper 0.33)"),
     ("cache_sensitivity", tables.cache_sensitivity,
      "traffic ratio 3MB/6MB (>1 per paper §V-B2)"),
+    ("occam_span_engine", tables.occam_span_engine,
+     "compiled-engine speedup vs interpreted streaming (floor 10x)"),
     ("stap_example", tables.stap_example,
      "sim/paper throughput ratio (1.0 = exact)"),
 ]

@@ -1,9 +1,14 @@
-"""One benchmark per paper table/figure (analytical reproduction).
+"""One benchmark per paper table/figure (analytical reproduction) + the
+span-engine execution benchmark (measured, not modeled).
 
 Each function returns (rows, derived) where ``derived`` is the headline
 number the paper reports for that artifact.
 """
 from __future__ import annotations
+
+import json
+import os
+import time
 
 from repro.core.partition import partition_cnn, partition_report
 from repro.core.stap import paper_example, plan_replication, simulate
@@ -110,6 +115,82 @@ def cache_sensitivity():
         rows.append({"network": name, "traffic_3mb": t3, "traffic_6mb": t6,
                      "ratio": round(t3 / t6, 2)})
     return rows, sum(r["ratio"] for r in rows) / len(rows)
+
+
+def occam_span_engine(hw: int = 32, reps: int = 5, pallas: bool = True,
+                      out_json: str | None = None):
+    """Measured span-engine trajectory: us/image on a VGG-style stack for
+    oracle vs interpreted RowRing vs compiled scan vs Pallas-interpret.
+
+    Emits machine-readable results to ``results/BENCH_span_engine.json`` so
+    later PRs can track regressions. ``derived`` is the compiled-engine
+    speedup over the interpreted streaming path (acceptance floor: 10x).
+    """
+    import jax
+    from repro.core.graph import chain
+    from repro.models import cnn
+    from repro.runtime import span_engine
+
+    C, P = "conv", "pool"
+    specs = [(C, 3, 1, 1, 16), (C, 3, 1, 1, 16), (P, 2, 2, 0, 0),
+             (C, 3, 1, 1, 32), (C, 3, 1, 1, 32), (P, 2, 2, 0, 0),
+             (C, 3, 1, 1, 32)]
+    net = chain("vgg_mini", specs, in_h=hw, in_w=hw, in_ch=3)
+    res = partition_cnn(net, 24 * 1024)  # forces a 3-span partition @hw=32
+    params = cnn.init_params(jax.random.PRNGKey(0), net)
+    x = jax.random.normal(jax.random.PRNGKey(1), (hw, hw, 3))
+
+    def timed(fn, n=reps, warm=1):
+        for _ in range(warm):
+            jax.block_until_ready(fn())
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(fn())
+        return (time.perf_counter() - t0) / n * 1e6
+
+    oracle = jax.jit(lambda p, im: cnn.reference_forward(p, im, net))
+    us_oracle = timed(lambda: oracle(params, x))
+    # interpreted: warm once so one-time eager-op compilation doesn't
+    # inflate the tracked speedup, then time one dispatch-bound run
+    jax.block_until_ready(
+        cnn.occam_forward(params, x, net, res.boundaries,
+                          mode="interpreted"))
+    t0 = time.perf_counter()
+    jax.block_until_ready(
+        cnn.occam_forward(params, x, net, res.boundaries,
+                          mode="interpreted"))
+    us_interp = (time.perf_counter() - t0) * 1e6
+    us_comp = timed(lambda: cnn.occam_forward(params, x, net, res.boundaries,
+                                              mode="compiled"))
+    us_jit = timed(lambda: cnn.occam_forward_jit(params, x, net,
+                                                 tuple(res.boundaries)))
+    routes = span_engine.plan_routes(net, res)
+    kernel_spans = sum(r.route == span_engine.ROUTE_PALLAS for r in routes)
+    us_pallas = None
+    if pallas:  # interpret-mode kernel: correctness path, one run
+        t0 = time.perf_counter()
+        jax.block_until_ready(span_engine.execute_partition(
+            params, x, net, res, interpret=True))
+        us_pallas = (time.perf_counter() - t0) * 1e6
+    derived = us_interp / us_comp
+    row = {
+        "net": net.name, "layers": net.n_layers, "hw": hw,
+        "boundaries": list(res.boundaries),
+        "spans_on_pallas_kernel": kernel_spans, "spans_total": len(routes),
+        "us_oracle_jit": round(us_oracle, 1),
+        "us_interpreted": round(us_interp, 1),
+        "us_compiled": round(us_comp, 1),
+        "us_whole_net_jit": round(us_jit, 1),
+        "us_pallas_interpret": round(us_pallas, 1) if us_pallas else None,
+        "speedup_compiled_vs_interpreted": round(derived, 1),
+    }
+    path = out_json or os.path.join(os.path.dirname(__file__), "..",
+                                    "results", "BENCH_span_engine.json")
+    if os.path.dirname(path):
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(row, f, indent=2)
+    return [row], derived
 
 
 def stap_example():

@@ -51,7 +51,7 @@ ctr = cnn.TrafficCounter()
 y_stream = cnn.occam_forward(params, x, tiny, res.boundaries, ctr)
 y_ref = cnn.reference_forward(params, x, tiny)
 np.testing.assert_allclose(np.asarray(y_stream), np.asarray(y_ref),
-                           rtol=1e-5)
+                           rtol=1e-5, atol=1e-5)
 assert ctr.total == res.transfers
 print(f"streaming execution == oracle; measured transfers "
       f"{ctr.total} == DP prediction {int(res.transfers)}")

@@ -22,6 +22,8 @@ already present as a previous layer's non-residual input).
 """
 from __future__ import annotations
 
+import dataclasses
+
 from .graph import NetSpec
 
 
@@ -81,6 +83,213 @@ def max_tile_rows(net: NetSpec, i: int, j: int, capacity: int,
         else:
             hi = mid - 1
     return best
+
+
+# --------------------------------------------------------------------------
+# Static row-streaming schedules (compiled span engine)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SpanSchedule:
+    """A fully static row-streaming schedule for SPAN(a, b).
+
+    Grid step ``t`` consumes input row-plane ``t`` (while ``t < heights[0]``)
+    and performs ``steps[t]`` — per produced map ``L_{a+1} .. L_b`` the tuple
+    of row indices computed at that step, in dependency (map-ascending)
+    order. Production is *demand-driven*: a row of an interior map is
+    scheduled only in the step where a downstream row first needs it, so the
+    closure-sized rings (``ring_caps``, from :func:`span_row_counts`) are
+    provably sufficient — the builder replays the schedule and raises
+    ``AssertionError("ring violation …")`` if any read would touch an
+    evicted row. That replay is the compiled-engine form of the RowRing
+    retention assertion (proof-by-execution of the sufficient condition).
+
+    The final map is throttled to one row per step, so consumers can stream
+    the output with a one-row block per grid step.
+
+    Hashable (all-tuple fields) so it can key ``jax.jit`` static arguments.
+    """
+
+    a: int
+    b: int
+    ring_caps: tuple[int, ...]   # rings for maps a .. b-1
+    heights: tuple[int, ...]     # map heights a .. b
+    slots: tuple[int, ...]       # max rows/step for maps a+1 .. b
+    steps: tuple[tuple[tuple[int, ...], ...], ...]
+
+    @property
+    def n_steps(self) -> int:
+        return len(self.steps)
+
+    @property
+    def total_slots(self) -> int:
+        return sum(self.slots)
+
+    def slot_table(self) -> list[list[int]]:
+        """(n_steps, total_slots) row indices, -1 padded, map-major order."""
+        table = []
+        for ops in self.steps:
+            row: list[int] = []
+            for off, u in enumerate(self.slots):
+                got = list(ops[off])
+                row += got + [-1] * (u - len(got))
+            table.append(row)
+        return table
+
+    def out_row_table(self) -> list[int]:
+        """Per step: the last output row produced so far (clamped >= 0) —
+        the output BlockSpec index map for a one-row-per-step stream."""
+        out, last = [], 0
+        for ops in self.steps:
+            if ops[-1]:
+                last = ops[-1][-1]
+            out.append(last)
+        return out
+
+    def scratch_elems(self) -> int:
+        """Ring-buffer elements the schedule requires — by construction
+        exactly |DC(a, b)| (verified by tests against span_closure_elems)."""
+        total = 0
+        for off, cap in enumerate(self.ring_caps):
+            total += cap * self._wc[off]
+        return total
+
+    # widths*chans per ring, stashed at build time (tuple -> hashable)
+    _wc: tuple[int, ...] = ()
+
+
+_schedule_cache: dict = {}
+
+
+def span_schedule(net: NetSpec, i: int, j: int,
+                  spill: frozenset[int] | tuple[int, ...] = ()) -> SpanSchedule:
+    """Build + validate the demand-driven streaming schedule for SPAN(i, j).
+
+    ``spill``: interior maps (sources of partition-crossing residual edges)
+    that must be fully materialized; they are drained after the span output
+    completes so early drainage can never evict rows the chain still needs.
+
+    Raises AssertionError("ring violation …") if the ring capacities from
+    ``span_row_counts`` would not retain every row the schedule reads — the
+    compiled engine's executable form of the necessity/sufficiency check.
+
+    The expensive build + replay validation is memoized; the cache key
+    includes the *current* ring capacities, so a changed (or monkeypatched)
+    ``span_row_counts`` always re-validates instead of hitting stale state.
+    """
+    caps = span_row_counts(net, i, j)
+    key = (net, i, j, tuple(sorted(set(spill))), tuple(caps))
+    cached = _schedule_cache.get(key)
+    if cached is not None:
+        return cached
+    sched = _build_span_schedule(net, i, j, spill, caps)
+    _schedule_cache[key] = sched
+    return sched
+
+
+def _build_span_schedule(net: NetSpec, i: int, j: int, spill,
+                         caps: list[int]) -> SpanSchedule:
+    n_maps = j - i + 1
+    h = [net.map_shape(i + off)[0] for off in range(n_maps)]
+    in_span_spill = sorted(m for m in set(spill) if i < m < j)
+    produced = [0] * n_maps
+    steps: list[tuple[tuple[int, ...], ...]] = []
+
+    def computable(off: int, n_prev: int) -> int:
+        """Rows of map i+off computable from n_prev rows of map i+off-1
+        (bottom rows unlock all at once: the remaining halo is padding)."""
+        lay = net.layers[i + off - 1]
+        if n_prev >= h[off - 1]:
+            return h[off]
+        return max(0, min(h[off], (n_prev + lay.padding - lay.k)
+                          // lay.stride + 1))
+
+    def ensure(off: int, upto: int, ops: list[list[int]]) -> None:
+        upto = min(upto, h[off])
+        if produced[off] >= upto:
+            return
+        if off == 0:
+            raise AssertionError(
+                f"span_schedule: demand for input row {upto - 1} of map "
+                f"{i} precedes its arrival")
+        lay = net.layers[i + off - 1]
+        hi = (upto - 1) * lay.stride - lay.padding + lay.k
+        ensure(off - 1, min(hi, h[off - 1]), ops)
+        for r in range(produced[off], upto):
+            for (s, t) in net.residual_edges:  # in-span residual sources
+                if t == i + off and s >= i:
+                    sh = max(net.map_shape(s)[0] // h[off], 1)
+                    ensure(s - i, min(r * sh, net.map_shape(s)[0] - 1) + 1,
+                           ops)
+            ops[off - 1].append(r)
+        produced[off] = upto
+
+    limit = h[0] + sum(h) + 16
+    while produced[-1] < h[-1] or any(
+            produced[m - i] < h[m - i] for m in in_span_spill):
+        t = len(steps)
+        ops: list[list[int]] = [[] for _ in range(n_maps - 1)]
+        if t < h[0]:
+            produced[0] = t + 1
+        target = produced[0]
+        for off in range(1, n_maps):
+            target = computable(off, target)
+        ensure(n_maps - 1, min(target, produced[-1] + 1), ops)
+        if produced[-1] >= h[-1]:
+            # chain done: drain spilled maps one row/step (never earlier —
+            # early drainage could evict rows the chain still needs)
+            for m in in_span_spill:
+                ensure(m - i, produced[m - i] + 1, ops)
+        steps.append(tuple(tuple(o) for o in ops))
+        if t > limit:
+            raise RuntimeError(f"span_schedule({i},{j}) failed to converge")
+
+    _validate_schedule(net, i, j, caps, h, steps)
+    slots = tuple(max((len(s[off]) for s in steps), default=0)
+                  for off in range(n_maps - 1))
+    wc = tuple(net.map_shape(i + off)[1] * net.map_shape(i + off)[2]
+               for off in range(n_maps - 1))
+    return SpanSchedule(i, j, tuple(caps), tuple(h), slots, tuple(steps),
+                        _wc=wc)
+
+
+def _validate_schedule(net: NetSpec, i: int, j: int, caps: list[int],
+                       h: list[int], steps) -> None:
+    """Replay the schedule in execution order; every ring read must hit a
+    resident row (retention invariant) and production must be sequential."""
+    n_maps = j - i + 1
+    produced = [0] * n_maps
+    for t, ops in enumerate(steps):
+        if t < h[0]:
+            produced[0] = t + 1
+        for off in range(1, n_maps):
+            lay = net.layers[i + off - 1]
+            for r in ops[off - 1]:
+                if r != produced[off]:
+                    raise AssertionError(
+                        f"schedule out of order: map {i + off} row {r} "
+                        f"(expected {produced[off]})")
+                lo = max(r * lay.stride - lay.padding, 0)
+                hi = min(r * lay.stride - lay.padding + lay.k, h[off - 1])
+                live = produced[off - 1] - caps[off - 1]
+                if lo < live or hi > produced[off - 1]:
+                    raise AssertionError(
+                        f"ring violation: rows [{lo}, {hi}) of map "
+                        f"{i + off - 1} not resident "
+                        f"(have [{live}, {produced[off - 1]}))")
+                for (s, tt) in net.residual_edges:
+                    if tt == i + off and s >= i:
+                        h_s = net.map_shape(s)[0]
+                        src = min(r * max(h_s // h[off], 1), h_s - 1)
+                        s_off = s - i
+                        if s_off < n_maps - 1:
+                            live_s = produced[s_off] - caps[s_off]
+                            if src < live_s or src >= produced[s_off]:
+                                raise AssertionError(
+                                    f"ring violation: residual source row "
+                                    f"{src} of map {s} not resident "
+                                    f"(have [{live_s}, {produced[s_off]}))")
+                produced[off] += 1
 
 
 # --------------------------------------------------------------------------

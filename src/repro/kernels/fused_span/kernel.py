@@ -1,35 +1,36 @@
-"""Occam fused-span Pallas kernel: a two-conv span streamed row-by-row with
-the dependence closure held in VMEM scratch.
+"""Occam N-layer fused-span Pallas kernel generator: a DP-chosen span of
+conv/pool layers streamed row-by-row with the dependence closure in VMEM.
 
-This is the paper's contribution C1+C2 as a TPU kernel, *not* a CUDA port:
+This is the paper's contribution C1+C2 as a *generated* TPU kernel — given
+any span ``(a, b)`` of a :class:`~repro.core.graph.NetSpec` (conv and
+maxpool, any per-layer k / stride >= 1 / same-padding) it emits one
+``pallas_call``:
 
 * Necessary condition (C1): the tile is one full input **row-plane**
   (1 x W x C_in) per grid step — the BlockSpec shape. Nothing narrower
   enters VMEM; nothing is ever re-read from HBM (contrast Layer Fusion's
   square tiles, which re-fetch/recompute halos).
-* Sufficient condition (C2): the two circular row buffers (`ring_in`,
-  `ring_mid`) hold exactly the dependence closure of one output row-plane —
-  sized (k, W, C) by the closure arithmetic — in VMEM scratch, which
-  persists across the *sequential* TPU grid. Software-managed VMEM makes
-  the closure an allocation, not a cache-hit hope (the paper's GPU pain).
-* Filters stay VMEM-resident for the whole kernel (cross-row filter reuse;
-  the multi-chip pipeline extends this to cross-image reuse).
+* Sufficient condition (C2): one circular row buffer per map
+  ``L_a .. L_{b-1}``, sized by ``closure.span_row_counts`` — the exact
+  dependence closure — lives in VMEM scratch, persisting across the
+  *sequential* TPU grid. Software-managed VMEM makes the closure an
+  allocation, not a cache-hit hope (the paper's GPU pain).
+* Cross-image filter reuse (Eqn. 6): the grid's **leading dimension is the
+  batch**; filters are whole-array VMEM blocks with a constant index map,
+  so they are fetched once and stay chip-resident across all images.
 
-The convolution itself is executed as k*k MXU matmuls (W, C_in) @
-(C_in, C_out) over shifted row windows — channels-minor layout, contraction
-dims padded to the 128-lane MXU by the wrapper in ops.py.
+Scheduling: the per-step work (which rows of which interior maps become
+computable as input rows arrive) is precomputed by
+``closure.span_schedule`` — demand-driven and replay-validated against ring
+retention — then shipped to the kernel as scalar-prefetch tables
+(``PrefetchScalarGridSpec``). The kernel body is a static nest over maps
+and slots; each slot reads its scheduled row index from SMEM and is
+``pl.when``-guarded. The output BlockSpec index map also reads the
+schedule, streaming exactly one output row-plane per producing step.
 
-Restrictions (asserted in ops.py): stride 1, odd k, same-padding, two conv
-layers with ReLU. General spans/strides run on the pure-JAX streaming path
-(repro.models.cnn.occam_forward); this kernel covers the paper's hot case
-(VGG-style 3x3 stacks dominate the fused spans in Table II).
-
-Pipeline (h = k // 2): at grid step i
-    row i of the input arrives in VMEM            (i < H)
-    mid row  m = i - h   becomes computable  ->  ring_mid
-    out row  o = i - 2h  becomes computable  ->  written to HBM
-so the grid has H + 2h steps; the first 2h output writes land on row 0 and
-are overwritten by the first valid write (sequential grid semantics).
+Spans carrying residual edges are *not* lowered here — they run on the
+jitted scan path (``repro.models.cnn``); the dispatcher in
+``repro.runtime.span_engine`` routes each DP span automatically.
 """
 from __future__ import annotations
 
@@ -37,105 +38,137 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.core import closure
+from repro.core.graph import NetSpec
 
-def _row_conv(window: jax.Array, w: jax.Array, b: jax.Array, k: int,
-              width: int) -> jax.Array:
-    """One output row from a (k, W + 2h, C_in) padded window: k*k matmuls.
-
-    window is already horizontally zero-padded; w: (k, k, C_in, C_out).
-    """
-    acc = jnp.zeros((width, w.shape[-1]), jnp.float32)
-    for dy in range(k):
-        for dx in range(k):
-            acc += jnp.dot(window[dy, dx:dx + width, :].astype(jnp.float32),
-                           w[dy, dx].astype(jnp.float32),
-                           preferred_element_type=jnp.float32)
-    return jax.nn.relu(acc + b.astype(jnp.float32))
+from .rowops import NEG_INF, conv_row, pool_row, ring_window
 
 
-def _fused_span_kernel(x_row, w1, b1, w2, b2, out_row,
-                       ring_in, ring_mid, *, k: int, height: int, width: int):
-    h = k // 2
-    i = pl.program_id(0)
+def _span_kernel(sched_ref, outrow_ref, x_ref, *refs, net: NetSpec, a: int,
+                 b: int, schedule: closure.SpanSchedule, n_wb: int):
+    del outrow_ref  # consumed by the output BlockSpec index map
+    wb_refs, out_ref, rings = refs[:n_wb], refs[n_wb], refs[n_wb + 1:]
+    caps, h = schedule.ring_caps, schedule.heights
+    n_maps = len(h)
+    i = pl.program_id(1)
 
-    # --- stage 0: the arriving input row-plane joins the closure ----------
-    @pl.when(i < height)
+    # --- arrival: input row-plane i joins the closure ring ----------------
+    @pl.when(i < h[0])
     def _store_input():
-        ring_in[i % k] = x_row[0]
+        rings[0][(i % caps[0]).astype(jnp.int32)] = x_ref[0, 0]
 
-    def window(ring, row_idx, n_valid_rows):
-        """(k, W + 2h, C) window of rows row_idx-h .. row_idx+h with zero
-        padding outside [0, n_valid_rows)."""
-        rows = []
-        for dy in range(-h, h + 1):
-            r = row_idx + dy
-            valid = jnp.logical_and(r >= 0, r < n_valid_rows)
-            data = ring[(r % k).astype(jnp.int32)]
-            rows.append(jnp.where(valid, data, jnp.zeros_like(data)))
-        win = jnp.stack(rows)
-        return jnp.pad(win, ((0, 0), (h, h), (0, 0)))
+    # --- scheduled production: maps a+1 .. b in dependency order ----------
+    slot = 0
+    wb_idx = 0
+    for off in range(1, n_maps):
+        layer = net.layers[a + off - 1]
+        if layer.kind == "conv":
+            w_ref, b_ref = wb_refs[wb_idx], wb_refs[wb_idx + 1]
+            wb_idx += 2
+        else:
+            w_ref = b_ref = None
+        for _ in range(schedule.slots[off - 1]):
+            r = sched_ref[i, slot]
+            slot += 1
 
-    # --- stage 1: mid row m = i - h --------------------------------------
-    m = i - h
-
-    @pl.when(jnp.logical_and(m >= 0, m < height))
-    def _compute_mid():
-        win = window(ring_in, m, height)
-        ring_mid[m % k] = _row_conv(win, w1[...], b1[...], k, width
-                                    ).astype(ring_mid.dtype)
-
-    # --- stage 2: out row o = i - 2h --------------------------------------
-    o = i - 2 * h
-
-    @pl.when(jnp.logical_and(o >= 0, o < height))
-    def _compute_out():
-        win = window(ring_mid, o, height)
-        out_row[0] = _row_conv(win, w2[...], b2[...], k, width
-                               ).astype(out_row.dtype)
-
-
-@functools.partial(jax.jit, static_argnames=("k", "interpret"))
-def fused_span_call(x: jax.Array, w1: jax.Array, b1: jax.Array,
-                    w2: jax.Array, b2: jax.Array, *, k: int,
-                    interpret: bool = False) -> jax.Array:
-    """x: (H, W, C_in) -> (H, W, C_out2). See module docstring."""
-    height, width, c_in = x.shape
-    c_mid = w1.shape[-1]
-    c_out = w2.shape[-1]
-    h = k // 2
-    grid = (height + 2 * h,)
-
-    kernel = functools.partial(_fused_span_kernel, k=k, height=height,
-                               width=width)
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            # one full input row-plane per step — the C1 tile shape
-            pl.BlockSpec((1, width, c_in),
-                         lambda i: (jnp.minimum(i, height - 1), 0, 0)),
-            # chip-resident filters: whole arrays in VMEM for every step
-            pl.BlockSpec((k, k, c_in, c_mid), lambda i: (0, 0, 0, 0)),
-            pl.BlockSpec((c_mid,), lambda i: (0,)),
-            pl.BlockSpec((k, k, c_mid, c_out), lambda i: (0, 0, 0, 0)),
-            pl.BlockSpec((c_out,), lambda i: (0,)),
-        ],
-        out_specs=pl.BlockSpec(
-            (1, width, c_out),
-            lambda i: (jnp.clip(i - 2 * h, 0, height - 1), 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((height, width, c_out), x.dtype),
-        scratch_shapes=[
-            pltpu_vmem((k, width, c_in), x.dtype),    # closure: input rows
-            pltpu_vmem((k, width, c_mid), x.dtype),   # closure: mid rows
-        ],
-        interpret=interpret,
-    )(x, w1, b1, w2, b2)
+            @pl.when(r >= 0)
+            def _produce(r=r, off=off, layer=layer, w_ref=w_ref,
+                         b_ref=b_ref):
+                pad_val = 0.0 if layer.kind == "conv" else NEG_INF
+                win = ring_window(rings[off - 1], r, layer.k, layer.stride,
+                                  layer.padding, h[off - 1], caps[off - 1],
+                                  pad_val)
+                if layer.kind == "conv":
+                    row = conv_row(win, w_ref[...], b_ref[...], layer.stride,
+                                   layer.padding, layer.out_w)
+                else:
+                    row = pool_row(win, layer.k, layer.stride, layer.padding,
+                                   layer.out_w)
+                if off < n_maps - 1:
+                    rings[off][(r % caps[off]).astype(jnp.int32)] = \
+                        row.astype(rings[off].dtype)
+                else:
+                    out_ref[0, 0] = row.astype(out_ref.dtype)
 
 
-def pltpu_vmem(shape, dtype):
-    """VMEM scratch allocation (TPU); plain scratch under interpret mode."""
+@functools.partial(jax.jit,
+                   static_argnames=("net", "a", "b", "schedule", "interpret"))
+def _span_pallas(xs: jax.Array, wb: tuple[jax.Array, ...], *, net: NetSpec,
+                 a: int, b: int, schedule: closure.SpanSchedule,
+                 interpret: bool) -> jax.Array:
     from jax.experimental.pallas import tpu as pltpu
 
-    return pltpu.VMEM(shape, dtype)
+    batch = xs.shape[0]
+    n_maps = b - a + 1
+    h_b, w_b, c_b = net.map_shape(b)
+    sched_tab = jnp.asarray(np.asarray(schedule.slot_table(), np.int32))
+    outrow_tab = jnp.asarray(np.asarray(schedule.out_row_table(), np.int32))
+
+    in_specs = [
+        # one full input row-plane per step — the C1 tile shape
+        pl.BlockSpec((1, 1) + net.map_shape(a)[1:],
+                     lambda n, i, s, o: (n, jnp.minimum(i, xs.shape[1] - 1),
+                                         0, 0)),
+    ]
+    # chip-resident filters: whole arrays, constant index map -> fetched
+    # once, shared across the whole batch grid dimension (Eqn. 6)
+    for arr in wb:
+        in_specs.append(pl.BlockSpec(
+            arr.shape, lambda n, i, s, o, nd=arr.ndim: (0,) * nd))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(batch, schedule.n_steps),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, w_b, c_b),
+                               lambda n, i, s, o: (n, o[i], 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((schedule.ring_caps[off],) + net.map_shape(a + off)[1:],
+                       xs.dtype)
+            for off in range(n_maps - 1)
+        ],
+    )
+    kernel = functools.partial(_span_kernel, net=net, a=a, b=b,
+                               schedule=schedule, n_wb=len(wb))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((batch, h_b, w_b, c_b), xs.dtype),
+        interpret=interpret,
+    )(sched_tab, outrow_tab, xs, *wb)
+
+
+def span_pallas_call(xs: jax.Array, layer_params: list[dict], net: NetSpec,
+                     a: int, b: int, *, interpret: bool = False) -> jax.Array:
+    """Run SPAN(a, b) of ``net`` on a batch of images under one fused kernel.
+
+    xs: (B, H, W, C) — feature map L_a for B images.
+    layer_params: params aligned with ``net.layers[a:b]`` ({"w", "b"} per
+    conv, {} per pool). Returns feature map L_b, (B, H_b, W_b, C_b).
+
+    The schedule is rebuilt (cheaply) on every call so ring retention is
+    re-validated against the *current* ``closure.span_row_counts``; the jit
+    cache is keyed on the schedule itself.
+    """
+    schedule = closure.span_schedule(net, a, b)
+    wb: list[jax.Array] = []
+    for off, layer in enumerate(net.layers[a:b]):
+        if layer.kind == "conv":
+            wb.append(layer_params[off]["w"])
+            wb.append(layer_params[off]["b"])
+    return _span_pallas(xs, tuple(wb), net=net, a=a, b=b, schedule=schedule,
+                        interpret=interpret)
+
+
+def span_kernel_vmem_elems(net: NetSpec, a: int, b: int) -> tuple[int, int]:
+    """(ring_scratch_elems, weight_elems) the generated kernel keeps in VMEM.
+
+    ring_scratch_elems == |DC(a, b)| and their sum == span_footprint_elems —
+    the property tests pin this identity (scratch bytes = footprint x dtype
+    size, minus the weights held as VMEM inputs rather than scratch).
+    """
+    schedule = closure.span_schedule(net, a, b)
+    return schedule.scratch_elems(), net.span_weight_elems(a, b)

@@ -1,10 +1,59 @@
-"""Public op: Occam fused-span conv with validation + backend dispatch."""
+"""Public ops: Occam fused-span execution with validation + backend dispatch.
+
+``span_forward`` is the general entry point: any conv/pool span of a
+NetSpec — per-layer k, stride >= 1, same-padding, batch > 1 — lowered to a
+single generated Pallas kernel (see kernel.py). ``fused_span`` keeps the
+original two-conv signature and now simply builds the equivalent 2-layer
+NetSpec and runs it through the same generator, so the legacy path
+exercises the general machinery.
+
+Spans carrying residual edges are rejected here; route them through
+``repro.runtime.span_engine``, which falls back to the jitted scan path.
+"""
 from __future__ import annotations
 
 import jax
 
-from .kernel import fused_span_call
+from repro.core.graph import NetSpec, chain
+
+from .kernel import span_kernel_vmem_elems, span_pallas_call
 from .ref import fused_span_ref
+
+
+def span_forward(xs: jax.Array, layer_params: list[dict], net: NetSpec,
+                 a: int, b: int, interpret: bool | None = None) -> jax.Array:
+    """Execute SPAN(a, b) of ``net`` as one fused Pallas kernel.
+
+    xs: (B, H, W, C) batch (or (H, W, C), auto-promoted) of L_a planes.
+    ``interpret`` defaults to True off-TPU (pure-Python execution of the
+    kernel body for correctness validation on CPU).
+    """
+    if not (0 <= a < b <= net.n_layers):
+        raise ValueError(f"bad span ({a}, {b})")
+    for (s, t) in net.residual_edges:
+        # an edge merely straddling the span (s <= a, t > b) is harmless;
+        # in-span targets or interior sources need the scan engine
+        if a < t <= b or a < s < b:
+            raise ValueError(
+                f"span ({a}, {b}) overlaps residual edge ({s}, {t}); "
+                "use runtime.span_engine (scan fallback)")
+    squeeze = xs.ndim == 3
+    if squeeze:
+        xs = xs[None]
+    if xs.shape[1:] != net.map_shape(a):
+        raise ValueError(f"input {xs.shape[1:]} != map L_{a} "
+                         f"{net.map_shape(a)}")
+    if len(layer_params) != b - a:
+        raise ValueError("layer_params must align with net.layers[a:b]")
+    for off, layer in enumerate(net.layers[a:b]):
+        if layer.kind == "conv":
+            w = layer_params[off]["w"]
+            if w.shape != (layer.k, layer.k, layer.in_ch, layer.out_ch):
+                raise ValueError(f"layer {a + off} weight shape {w.shape}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    ys = span_pallas_call(xs, layer_params, net, a, b, interpret=interpret)
+    return ys[0] if squeeze else ys
 
 
 def fused_span(x: jax.Array, w1: jax.Array, b1: jax.Array,
@@ -14,8 +63,7 @@ def fused_span(x: jax.Array, w1: jax.Array, b1: jax.Array,
     intermediate map never leaves VMEM (Occam dependence closure).
 
     x: (H, W, Cin); w1: (k, k, Cin, Cmid); w2: (k, k, Cmid, Cout).
-    ``interpret`` defaults to True off-TPU (pure-Python execution of the
-    kernel body for correctness validation on CPU).
+    Legacy 2-conv signature, now lowered via the N-layer span generator.
     """
     k = w1.shape[0]
     if w1.shape[0] != w1.shape[1] or w2.shape[0] != w2.shape[1]:
@@ -26,9 +74,13 @@ def fused_span(x: jax.Array, w1: jax.Array, b1: jax.Array,
         raise ValueError("odd k only (same padding)")
     if x.ndim != 3 or x.shape[-1] != w1.shape[2] or w1.shape[3] != w2.shape[2]:
         raise ValueError(f"shape mismatch: {x.shape} {w1.shape} {w2.shape}")
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    return fused_span_call(x, w1, b1, w2, b2, k=k, interpret=interpret)
+    h, w, _ = x.shape
+    net = chain("fused_span", [("conv", k, 1, k // 2, int(w1.shape[3])),
+                               ("conv", k, 1, k // 2, int(w2.shape[3]))],
+                in_h=h, in_w=w, in_ch=int(x.shape[-1]))
+    return span_forward(x, [{"w": w1, "b": b1}, {"w": w2, "b": b2}],
+                        net, 0, 2, interpret=interpret)
 
 
-__all__ = ["fused_span", "fused_span_ref"]
+__all__ = ["fused_span", "fused_span_ref", "span_forward",
+           "span_kernel_vmem_elems"]

@@ -1,4 +1,9 @@
-"""Pure-jnp oracle for the fused two-conv span (stride 1, same padding)."""
+"""Pure-jnp oracle for the fused two-conv span (stride 1, same padding).
+
+N-layer spans are checked against the layer-by-layer oracle in
+``repro.models.cnn.reference_forward`` (one oracle, shared by every
+engine's equality tests) rather than a duplicate here.
+"""
 from __future__ import annotations
 
 import jax

@@ -51,6 +51,25 @@ def build_model(cfg: ModelCfg, dtype=jnp.bfloat16) -> ModelAPI:
     )
 
 
+def span_executor(params: list[dict], xs: jax.Array, net,
+                  capacity_elems: int, *, counter=None, interpret=None):
+    """One-call CNN entry point for the compiled span engine.
+
+    Runs Occam's DP for ``capacity_elems``, then executes every span on the
+    fastest engine that can take it (fused Pallas kernel / jitted scan /
+    oracle — see ``repro.runtime.span_engine``). Returns ``(y, result)``
+    where ``result`` is the :class:`PartitionResult` that was executed.
+    """
+    from repro.core.partition import partition_cnn
+    from repro.runtime.span_engine import execute_partition
+
+    batch = xs.shape[0] if xs.ndim == 4 else 1
+    result = partition_cnn(net, capacity_elems, batch=batch)
+    y = execute_partition(params, xs, net, result, counter=counter,
+                          interpret=interpret)
+    return y, result
+
+
 def make_batch(cfg: ModelCfg, batch: int, seq: int, key=None,
                dtype=jnp.bfloat16) -> dict:
     """Synthetic batch matching the arch's input signature (smoke tests)."""

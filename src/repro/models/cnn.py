@@ -7,14 +7,36 @@ buffers sized exactly by the closure arithmetic* hold the live ancestors.
 If the closure under-counted, the rings would overwrite live rows and the
 output would diverge from the oracle — so the equality tests in
 ``tests/test_cnn_fused.py`` are a proof-by-execution of the sufficient
-condition. The ring reads also assert the retention invariant directly.
+condition.
 
-Off-chip transfers are counted during execution and cross-validated against
+Two streaming engines share that closure arithmetic:
+
+* ``mode="compiled"`` (default): the span's static row schedule
+  (``closure.span_schedule``, retention replay-validated at trace time) is
+  executed by a jitted ``lax.fori_loop`` over grid steps — ring updates via
+  ``dynamic_update_slice``, row math shared with the Pallas kernel
+  (``repro.kernels.fused_span.rowops``). Handles every span the DP can
+  produce: strides, pools, residual adds (in-span and DRAM-crossing), and
+  spills of partition-crossing residual sources. ``occam_forward_jit`` runs
+  the whole net — all spans — under one jit.
+* ``mode="interpreted"``: the original per-row Python ``RowRing`` loop,
+  kept as the executable specification (its reads assert the retention
+  invariant directly) and as the benchmark baseline the compiled engine is
+  measured against.
+
+Span dispatch for whole-net execution lives in
+``repro.runtime.span_engine``: residual-free spans lower further to the
+generated N-layer Pallas kernel; residual-touching spans run here on the
+compiled scan; oversized single layers fall back to the oracle.
+
+Off-chip transfers are counted during execution (identically for both
+modes — accounting is per-span, not per-row) and cross-validated against
 the DP's predicted ``OP[0,n].X`` (model == machine).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable
 
 import jax
@@ -23,8 +45,9 @@ from jax import lax
 
 from repro.core import closure
 from repro.core.graph import LayerSpec, NetSpec
+from repro.kernels.fused_span import rowops
 
-NEG_INF = -1e30
+NEG_INF = rowops.NEG_INF
 
 
 # --------------------------------------------------------------------------
@@ -183,33 +206,195 @@ class TrafficCounter:
         return self.reads + self.writes
 
 
+def count_span_reads(counter: TrafficCounter | None, net: NetSpec, a: int,
+                     b: int, batch: int = 1) -> None:
+    """Off-chip reads to start SPAN(a, b): the span input streamed in once,
+    plus residual sources read from DRAM by edges crossing INTO the span.
+    Shared by every engine so model==machine holds regardless of dispatch."""
+    if counter is None:
+        return
+    counter.reads += batch * net.map_elems(a)
+    for (s, t) in net.residual_edges:
+        if s < a < t <= b:
+            counter.reads += batch * net.map_elems(s)
+
+
+def count_span_writes(counter: TrafficCounter | None, net: NetSpec, b: int,
+                      spilled, batch: int = 1) -> None:
+    """Off-chip writes to finish a span: its output map plus any spilled
+    interior residual sources."""
+    if counter is None:
+        return
+    counter.writes += batch * net.map_elems(b)
+    for m in spilled:
+        counter.writes += batch * net.map_elems(m)
+
+
 def occam_forward(params: list[dict], x: jax.Array, net: NetSpec,
                   boundaries: list[int] | None = None,
-                  counter: TrafficCounter | None = None) -> jax.Array:
+                  counter: TrafficCounter | None = None,
+                  mode: str = "compiled") -> jax.Array:
     """Execute the net span-by-span with closure-sized ring buffers.
 
     ``boundaries``: interior partition points (from the DP). ``counter``
     accumulates off-chip element transfers for model-vs-machine validation.
+    ``mode``: "compiled" (jitted scan per span) or "interpreted" (the
+    Python RowRing loop — the executable specification).
     """
-    boundaries = boundaries or []
-    cuts = [0] + list(boundaries) + [net.n_layers]
+    if mode not in ("compiled", "interpreted"):
+        raise ValueError(f"bad mode {mode!r}")
+    boundaries = list(boundaries or [])
+    cuts = [0] + boundaries + [net.n_layers]
     stored: dict[int, jax.Array] = {0: x}
     # residual edges that cross a partition boundary must spill their source
     crossing = [(s, t) for (s, t) in net.residual_edges
                 if any(s < p < t for p in boundaries)]
     spill_sources = {s for (s, _t) in crossing}
     for a, b in zip(cuts, cuts[1:]):
-        out, spilled = _stream_span(params, net, a, b, stored,
-                                    spill_sources, counter)
+        count_span_reads(counter, net, a, b)
+        if mode == "compiled":
+            out, spilled = _stream_span_compiled(params, net, a, b, stored,
+                                                 spill_sources)
+        else:
+            out, spilled = _stream_span(params, net, a, b, stored,
+                                        spill_sources)
+        count_span_writes(counter, net, b, spilled)
         stored[b] = out
         stored.update(spilled)
     return stored[net.n_layers]
 
 
+@functools.partial(jax.jit, static_argnames=("net", "boundaries"))
+def occam_forward_jit(params, x: jax.Array, net: NetSpec,
+                      boundaries: tuple[int, ...] = ()) -> jax.Array:
+    """Whole-net Occam execution — every span's row-streaming loop — under
+    a single jit. ``boundaries`` must be a (hashable) tuple."""
+    return occam_forward(params, x, net, list(boundaries), None, "compiled")
+
+
+# --------------------------------------------------------------------------
+# Compiled streaming: the span's static schedule as one lax.fori_loop
+# --------------------------------------------------------------------------
+
+def _stream_span_compiled(params: list[dict], net: NetSpec, a: int, b: int,
+                          stored: dict[int, jax.Array],
+                          spill_sources: set[int]):
+    """Produce map ``b`` from stored map ``a`` with a jitted row-streaming
+    scan. Same contract as ``_stream_span``; the schedule is rebuilt (and
+    retention-validated) on every call, while the jit cache is keyed on it."""
+    spill = tuple(sorted(m for m in spill_sources if a < m < b))
+    src_keys = tuple(sorted({s for (s, t) in net.residual_edges
+                             if s < a < t <= b}))
+    schedule = closure.span_schedule(net, a, b, spill=spill)
+    out, spilled = _span_scan_jit(
+        tuple(params[a:b]), stored[a], tuple(stored[s] for s in src_keys),
+        net=net, a=a, b=b, schedule=schedule, spill=spill, src_keys=src_keys)
+    return out, dict(zip(spill, spilled))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("net", "a", "b", "schedule", "spill",
+                              "src_keys"))
+def _span_scan_jit(span_params, x: jax.Array, srcs, *, net: NetSpec, a: int,
+                   b: int, schedule: closure.SpanSchedule,
+                   spill: tuple[int, ...], src_keys: tuple[int, ...]):
+    """SPAN(a, b) on one image as a fori_loop over the static schedule.
+
+    State: one closure-sized ring per map a..b-1, the output map, and one
+    full buffer per spilled interior map. Each step consumes input row t
+    and executes the step's scheduled row productions (masked on the -1
+    padding slots), including residual adds — sources gathered from rings
+    (in-span) or from ``srcs`` (edges crossing into the span from DRAM).
+    """
+    n_maps = b - a + 1
+    caps, h = schedule.ring_caps, schedule.heights
+    dtype = x.dtype
+    sched_tab = jnp.asarray(schedule.slot_table(), jnp.int32)
+    rings0 = tuple(
+        jnp.zeros((caps[off],) + net.map_shape(a + off)[1:], dtype)
+        for off in range(n_maps - 1))
+    out0 = jnp.zeros(net.map_shape(b), dtype)
+    spills0 = tuple(jnp.zeros(net.map_shape(m), dtype) for m in spill)
+
+    def body(t, carry):
+        rings, out, spills = carry
+        rings, spills = list(rings), list(spills)
+        # arrival: input row-plane t joins the closure ring
+        row_in = lax.dynamic_slice_in_dim(x, jnp.minimum(t, h[0] - 1), 1, 0)
+        arrived = lax.dynamic_update_slice_in_dim(rings[0], row_in,
+                                                  t % caps[0], 0)
+        rings[0] = jnp.where(t < h[0], arrived, rings[0])
+        si = 0
+        for off in range(1, n_maps):
+            m = a + off
+            layer = net.layers[m - 1]
+            w_m, c_m = net.map_shape(m)[1], net.map_shape(m)[2]
+            for _ in range(schedule.slots[off - 1]):
+                r = sched_tab[t, si]
+                si += 1
+                active = r >= 0
+                rs = jnp.maximum(r, 0)
+                pad_val = 0.0 if layer.kind == "conv" else NEG_INF
+                win = rowops.ring_window(rings[off - 1], rs, layer.k,
+                                         layer.stride, layer.padding,
+                                         h[off - 1], caps[off - 1], pad_val)
+                if layer.kind == "conv":
+                    row = rowops.conv_row(win, params_w(span_params, off),
+                                          params_b(span_params, off),
+                                          layer.stride, layer.padding,
+                                          layer.out_w)
+                else:
+                    row = rowops.pool_row(win, layer.k, layer.stride,
+                                          layer.padding, layer.out_w)
+                for (s, tt) in net.residual_edges:
+                    if tt != m:
+                        continue
+                    h_s = net.map_shape(s)[0]
+                    sh = max(h_s // h[off], 1)
+                    src_abs = jnp.minimum(rs * sh, h_s - 1)
+                    if s < a:
+                        src_row = srcs[src_keys.index(s)][src_abs]
+                    else:
+                        cap_s = caps[s - a]
+                        src_row = rings[s - a][
+                            (src_abs % cap_s).astype(jnp.int32)]
+                    row = row + rowops.project_row(
+                        src_row.astype(jnp.float32), w_m, c_m)
+                row = row[None].astype(dtype)
+                if off < n_maps - 1:
+                    upd = lax.dynamic_update_slice_in_dim(
+                        rings[off], row, rs % caps[off], 0)
+                    rings[off] = jnp.where(active, upd, rings[off])
+                else:
+                    upd = lax.dynamic_update_slice_in_dim(out, row, rs, 0)
+                    out = jnp.where(active, upd, out)
+                if m in spill:
+                    idx = spill.index(m)
+                    upd = lax.dynamic_update_slice_in_dim(
+                        spills[idx], row, rs, 0)
+                    spills[idx] = jnp.where(active, upd, spills[idx])
+        return tuple(rings), out, tuple(spills)
+
+    _, out, spills = lax.fori_loop(0, schedule.n_steps, body,
+                                   (rings0, out0, spills0))
+    return out, spills
+
+
+def params_w(span_params, off: int) -> jax.Array:
+    return span_params[off - 1]["w"]
+
+
+def params_b(span_params, off: int) -> jax.Array:
+    return span_params[off - 1]["b"]
+
+
+# --------------------------------------------------------------------------
+# Interpreted streaming: the original Python RowRing loop (specification)
+# --------------------------------------------------------------------------
+
 def _stream_span(params: list[dict], net: NetSpec, a: int, b: int,
                  stored: dict[int, jax.Array],
-                 spill_sources: set[int],
-                 counter: TrafficCounter | None):
+                 spill_sources: set[int]):
     """Produce map ``b`` from stored map ``a``, one output row at a time."""
     x_in = stored[a]
     dtype = x_in.dtype
@@ -225,13 +410,6 @@ def _stream_span(params: list[dict], net: NetSpec, a: int, b: int,
     # maps interior to this span that must be spilled for downstream spans
     spill_targets = {m for m in spill_sources if a < m < b}
     spilled: dict[int, list[jax.Array]] = {m: [] for m in spill_targets}
-
-    if counter is not None:
-        counter.reads += net.map_elems(a)  # span input streamed in once
-        # residual sources read from DRAM by edges crossing INTO this span
-        for (s, t) in net.residual_edges:
-            if s < a < t <= b:
-                counter.reads += net.map_elems(s)
 
     def ensure(m: int, upto: int) -> None:
         """Guarantee map m has rows [0, upto) produced (and ring-resident)."""
@@ -282,10 +460,6 @@ def _stream_span(params: list[dict], net: NetSpec, a: int, b: int,
         ensure(b, r + 1)
 
     out = jnp.concatenate(out_rows, axis=0)
-    if counter is not None:
-        counter.writes += net.map_elems(b)
-        for m in spill_targets:
-            counter.writes += net.map_elems(m)
     spilled_maps = {m: jnp.concatenate(v, axis=0) for m, v in spilled.items()}
     return out, spilled_maps
 

@@ -154,6 +154,25 @@ def _sublayer_apply(sub_params, x, cfg: ModelCfg, sub_idx: int, positions,
     return x, new_cache, aux
 
 
+@jax.custom_vjp
+def _carry_barrier(x):
+    """Differentiable optimization_barrier: lax.optimization_barrier has no
+    VJP rule on this jax version, so pin the primal carry AND the cotangent
+    explicitly (the backward residual stack needs the same bf16 pinning)."""
+    return lax.optimization_barrier(x)
+
+
+def _carry_barrier_fwd(x):
+    return lax.optimization_barrier(x), None
+
+
+def _carry_barrier_bwd(_, g):
+    return (lax.optimization_barrier(g),)
+
+
+_carry_barrier.defvjp(_carry_barrier_fwd, _carry_barrier_bwd)
+
+
 def decoder_stack(params, x, cfg: ModelCfg, positions, caches=None,
                   cache_pos=None, remat: bool = True):
     """Run all periods. Returns (x, new_caches, aux_losses)."""
@@ -163,7 +182,7 @@ def decoder_stack(params, x, cfg: ModelCfg, positions, caches=None,
         # the rms_norm bf16->f32 convert across the while boundary and
         # stores the whole (n_periods, B, S, D) residual stack in f32 —
         # a 2x remat-memory pessimization (observed on the CPU backend).
-        x = lax.optimization_barrier(carry)
+        x = _carry_barrier(carry)
         pp, pc = xs
         new_caches = {}
         aux_acc = jnp.zeros((2,), jnp.float32)

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.models.sharding import shard_map_compat as _shard_map
+
 from repro.core.partition import PartitionResult, partition_transformer
 from repro.core.stap import StapPlan, plan_replication
 
@@ -106,7 +108,7 @@ def pipeline_forward(stage_fn: Callable, stage_params,
         outs = jnp.where(idx == s_stages - 1, outs, jnp.zeros_like(outs))
         return lax.psum(outs, axis)
 
-    return jax.shard_map(
+    return _shard_map(
         per_stage, mesh=mesh,
         in_specs=(P(axis), P()), out_specs=P(),
         check_vma=False,

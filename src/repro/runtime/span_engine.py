@@ -1,0 +1,176 @@
+"""Compiled span execution engine: route a DP partition to real kernels.
+
+Takes a :class:`~repro.core.partition.PartitionResult` (or a raw boundary
+list) and executes the net span-by-span on a batch of images, dispatching
+each span to the fastest engine that can take it:
+
+* ``pallas`` — the generated N-layer fused-span kernel
+  (``repro.kernels.fused_span``): residual-free conv/pool spans, any
+  per-layer k / stride / same-padding, batch in the leading grid dimension
+  so filters stay VMEM-resident across images (paper Eqn. 6).
+* ``scan`` — the jitted row-streaming fallback
+  (``repro.models.cnn._span_scan_jit``): spans touched by residual edges
+  (in-span adds, sources crossing in from DRAM, spills of
+  partition-crossing sources).
+* ``oracle`` — layer-by-layer execution for oversized single layers (the
+  DP's lower-bound spans, which by definition exceed on-chip capacity) or
+  spans whose schedule fails validation.
+
+Off-chip traffic is accounted per span boundary exactly as
+``repro.models.cnn.occam_forward`` does (model == machine: totals equal
+``predicted_transfers`` x batch), regardless of which engine ran the span.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+
+from repro.core import closure
+from repro.core.graph import NetSpec
+from repro.core.partition import PartitionResult
+from repro.kernels.fused_span import ops as span_ops
+from repro.models import cnn
+
+ROUTE_PALLAS = "pallas"
+ROUTE_SCAN = "scan"
+ROUTE_ORACLE = "oracle"
+
+
+@dataclasses.dataclass(frozen=True)
+class SpanRoute:
+    start: int
+    end: int
+    route: str
+    reason: str
+
+
+def _boundaries_of(partition: PartitionResult | Sequence[int],
+                   net: NetSpec) -> list[int]:
+    if isinstance(partition, PartitionResult):
+        return list(partition.boundaries)
+    return list(partition)
+
+
+def plan_routes(net: NetSpec,
+                partition: PartitionResult | Sequence[int]) -> tuple[SpanRoute, ...]:
+    """Decide per-span engine. Pure function of the net + partition."""
+    boundaries = _boundaries_of(partition, net)
+    cuts = [0] + boundaries + [net.n_layers]
+    fits = {(sp.start, sp.end): sp.fits for sp in partition.spans} \
+        if isinstance(partition, PartitionResult) else {}
+    routes = []
+    for a, b in zip(cuts, cuts[1:]):
+        if not fits.get((a, b), True) and b - a == 1:
+            routes.append(SpanRoute(a, b, ROUTE_ORACLE,
+                                    "oversized single layer (lower bound)"))
+            continue
+        # Disqualifying edges: a target inside the span (needs in-span adds)
+        # or an interior source (needs ring reads / boundary spills). An
+        # edge merely *straddling* the span (s <= a, t > b) costs it
+        # nothing — the source is already in DRAM — so ResNet-style spans
+        # between skip endpoints still take the kernel.
+        touched = [(s, t) for (s, t) in net.residual_edges
+                   if a < t <= b or a < s < b]
+        if touched:
+            routes.append(SpanRoute(a, b, ROUTE_SCAN,
+                                    f"residual edges {touched}"))
+            continue
+        try:
+            closure.span_schedule(net, a, b)
+        except (AssertionError, RuntimeError) as e:
+            routes.append(SpanRoute(a, b, ROUTE_ORACLE,
+                                    f"schedule rejected: {e}"))
+            continue
+        routes.append(SpanRoute(a, b, ROUTE_PALLAS, "fused span kernel"))
+    return tuple(routes)
+
+
+def execute_partition(params: list[dict], xs: jax.Array, net: NetSpec,
+                      partition: PartitionResult | Sequence[int], *,
+                      counter: cnn.TrafficCounter | None = None,
+                      interpret: bool | None = None,
+                      routes: tuple[SpanRoute, ...] | None = None
+                      ) -> jax.Array:
+    """Execute ``net`` on ``xs`` ((B, H, W, C) or (H, W, C)) span-by-span.
+
+    ``counter`` accumulates off-chip element transfers (x batch), matching
+    ``cnn.predicted_transfers(net, boundaries) * batch``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    squeeze = xs.ndim == 3
+    if squeeze:
+        xs = xs[None]
+    batch = xs.shape[0]
+    boundaries = _boundaries_of(partition, net)
+    routes = routes or plan_routes(net, partition)
+    crossing = [(s, t) for (s, t) in net.residual_edges
+                if any(s < p < t for p in boundaries)]
+    spill_sources = {s for (s, _t) in crossing}
+    stored: dict[int, jax.Array] = {0: xs}
+    for route in routes:
+        a, b = route.start, route.end
+        cnn.count_span_reads(counter, net, a, b, batch)
+        spill = tuple(sorted(m for m in spill_sources if a < m < b))
+        if route.route == ROUTE_PALLAS:
+            if spill:  # plan_routes never produces this; reject rather than
+                raise ValueError(  # silently running a different engine
+                    f"span ({a}, {b}) routed to pallas but must spill "
+                    f"{spill}; use the scan route")
+            out = span_ops.span_forward(stored[a], params[a:b], net, a, b,
+                                        interpret=interpret)
+            spilled: dict[int, jax.Array] = {}
+        elif route.route == ROUTE_ORACLE:
+            out, spilled = _oracle_span(params, net, a, b, stored, spill)
+        else:
+            out, spilled = _scan_span(params, net, a, b, stored,
+                                      spill_sources)
+        cnn.count_span_writes(counter, net, b, spilled, batch)
+        stored[b] = out
+        stored.update(spilled)
+    y = stored[net.n_layers]
+    return y[0] if squeeze else y
+
+
+def _scan_span(params, net: NetSpec, a: int, b: int, stored,
+               spill_sources):
+    """Batched jitted row-streaming of one span (vmap over images)."""
+    spill = tuple(sorted(m for m in spill_sources if a < m < b))
+    src_keys = tuple(sorted({s for (s, t) in net.residual_edges
+                             if s < a < t <= b}))
+    schedule = closure.span_schedule(net, a, b, spill=spill)
+    fn = functools.partial(cnn._span_scan_jit, net=net, a=a, b=b,
+                           schedule=schedule, spill=spill,
+                           src_keys=src_keys)
+    out, spills = jax.vmap(fn, in_axes=(None, 0, 0))(
+        tuple(params[a:b]), stored[a],
+        tuple(stored[s] for s in src_keys))
+    return out, dict(zip(spill, spills))
+
+
+def _oracle_span(params, net: NetSpec, a: int, b: int, stored, spill):
+    """Layer-by-layer batched execution of one span (+ residual adds)."""
+    maps = {a: stored[a]}
+    y = stored[a]
+    for m in range(a + 1, b + 1):
+        layer = net.layers[m - 1]
+        if layer.kind == "conv":
+            f = lambda im: cnn._conv_window(  # noqa: E731
+                cnn._pad_rows_zero(im, layer), params[m - 1]["w"],
+                params[m - 1]["b"], layer)
+        else:
+            f = lambda im: cnn._pool_window(  # noqa: E731
+                cnn._pad_rows_neg(im, layer), layer)
+        y = jax.vmap(f)(y)
+        for (s, t) in net.residual_edges:
+            if t != m:
+                continue
+            src = stored[s] if s < a else maps[s]
+            y = y + jax.vmap(
+                lambda sm, shape=y.shape[1:]: cnn._project_shortcut(
+                    sm, *shape))(src)
+        maps[m] = y
+    return y, {m: maps[m] for m in spill}

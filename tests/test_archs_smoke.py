@@ -11,6 +11,8 @@ import pytest
 from repro.configs import ARCHS, get_config, get_smoke, applicable_shapes
 from repro.models.api import build_model, make_batch
 
+pytestmark = pytest.mark.slow  # 10-arch sweep (~70 s); fast tier: -m "not slow"
+
 B, S = 2, 16
 S_MAX = 24
 

@@ -6,11 +6,13 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke
 from repro.models.api import build_model, make_batch
 
 
+@pytest.mark.slow  # interpret-mode kernel end-to-end
 def test_pallas_attention_matches_xla_end_to_end():
     cfg = get_smoke("internlm2-1.8b")
     api = build_model(cfg, dtype=jnp.float32)

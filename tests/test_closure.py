@@ -1,6 +1,8 @@
 """Unit + property tests for dependence-closure arithmetic (paper §III-A/B/C)."""
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import closure

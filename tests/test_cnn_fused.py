@@ -20,7 +20,7 @@ def make(specs, hw=12, ch=3, edges=()):
                  residual_edges=tuple(edges))
 
 
-def run_both(net, boundaries=None, seed=0):
+def run_both(net, boundaries=None, seed=0, mode="compiled"):
     key = jax.random.PRNGKey(seed)
     params = cnn.init_params(key, net)
     x = jax.random.normal(jax.random.PRNGKey(seed + 1),
@@ -28,42 +28,60 @@ def run_both(net, boundaries=None, seed=0):
                            net.layers[0].in_ch))
     ref = cnn.reference_forward(params, x, net)
     ctr = cnn.TrafficCounter()
-    got = cnn.occam_forward(params, x, net, boundaries, ctr)
+    got = cnn.occam_forward(params, x, net, boundaries, ctr, mode=mode)
     return ref, got, ctr
+
+
+def assert_close(ref, got, **kw):
+    # atol: the compiled engine sums convs as k*k MXU matmuls, which is a
+    # different fp32 reduction order than the oracle's lax.conv
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got),
+                               rtol=1e-5, atol=1e-5, **kw)
 
 
 def test_plain_chain_single_span():
     net = make([(C, 3, 1, 1, 4), (C, 3, 1, 1, 8), (C, 3, 1, 1, 4)])
     ref, got, _ = run_both(net)
-    np.testing.assert_allclose(np.asarray(ref), np.asarray(got), rtol=1e-5)
+    assert_close(ref, got)
 
 
+def test_interpreted_mode_matches():
+    """The RowRing loop stays the executable specification: keep it under
+    test even though "compiled" is the default engine."""
+    net = make([(C, 3, 1, 1, 4), (P, 2, 2, 0, 0), (C, 3, 2, 1, 8)], hw=8)
+    ref, got, ctr = run_both(net, mode="interpreted")
+    assert_close(ref, got)
+    assert ctr.total == cnn.predicted_transfers(net, [])
+
+
+@pytest.mark.slow  # covered fast by test_span_engine strided cases
 def test_strided_convs():
     net = make([(C, 3, 2, 1, 4), (C, 3, 1, 1, 8), (C, 3, 2, 1, 8)], hw=16)
     ref, got, _ = run_both(net)
-    np.testing.assert_allclose(np.asarray(ref), np.asarray(got), rtol=1e-5)
+    assert_close(ref, got)
 
 
+@pytest.mark.slow  # k=5 + two pools: several engine compiles
 def test_pooling_layers():
     net = make([(C, 5, 1, 2, 4), (P, 2, 2, 0, 0), (C, 3, 1, 1, 8),
                 (P, 3, 2, 1, 0)], hw=16)
     ref, got, _ = run_both(net)
-    np.testing.assert_allclose(np.asarray(ref), np.asarray(got), rtol=1e-5)
+    assert_close(ref, got)
 
 
+@pytest.mark.slow  # compiles a span engine per boundary set
 def test_partitioned_execution_matches():
     net = make([(C, 3, 1, 1, 4)] * 5, hw=10)
     for bounds in ([2], [1, 3], [1, 2, 3, 4]):
         ref, got, _ = run_both(net, bounds)
-        np.testing.assert_allclose(np.asarray(ref), np.asarray(got),
-                                   rtol=1e-5, err_msg=str(bounds))
+        assert_close(ref, got, err_msg=str(bounds))
 
 
 def test_residual_inside_span():
     net = make([(C, 3, 1, 1, 4), (C, 3, 1, 1, 4), (C, 3, 1, 1, 4)],
                edges=[(0, 2), (1, 3)])
     ref, got, _ = run_both(net)
-    np.testing.assert_allclose(np.asarray(ref), np.asarray(got), rtol=1e-5)
+    assert_close(ref, got)
 
 
 def test_residual_downsample_block():
@@ -71,7 +89,7 @@ def test_residual_downsample_block():
     net = make([(C, 3, 2, 1, 8), (C, 3, 1, 1, 8)], hw=12, ch=4,
                edges=[(0, 2)])
     ref, got, _ = run_both(net)
-    np.testing.assert_allclose(np.asarray(ref), np.asarray(got), rtol=1e-5)
+    assert_close(ref, got)
 
 
 def test_residual_crossing_boundary():
@@ -79,10 +97,11 @@ def test_residual_crossing_boundary():
     producer span and read back by the consumer span."""
     net = make([(C, 3, 1, 1, 4)] * 4, edges=[(1, 4)])
     ref, got, ctr = run_both(net, boundaries=[2])
-    np.testing.assert_allclose(np.asarray(ref), np.asarray(got), rtol=1e-5)
+    assert_close(ref, got)
     assert ctr.total == cnn.predicted_transfers(net, [2])
 
 
+@pytest.mark.slow  # compiles a span engine per boundary set
 def test_traffic_counter_matches_dp_model():
     """Measured streaming transfers == the DP's OP[0, n].X (model==machine)."""
     net = make([(C, 3, 1, 1, 4), (C, 3, 2, 1, 8), (C, 3, 1, 1, 8),
@@ -99,7 +118,7 @@ def test_dp_partition_executes_and_matches_cost():
     res = partition_cnn(net, cap)
     assert res.n_spans >= 2  # capacity actually forces a split
     ref, got, ctr = run_both(net, res.boundaries)
-    np.testing.assert_allclose(np.asarray(ref), np.asarray(got), rtol=1e-5)
+    assert_close(ref, got)
     assert ctr.total == res.transfers
 
 
@@ -130,4 +149,4 @@ def test_batched_via_vmap():
     xs = jax.random.normal(jax.random.PRNGKey(1), (3, 12, 12, 3))
     ref = jax.vmap(lambda im: cnn.reference_forward(params, im, net))(xs)
     got = jnp.stack([cnn.occam_forward(params, xs[i], net) for i in range(3)])
-    np.testing.assert_allclose(np.asarray(ref), np.asarray(got), rtol=1e-5)
+    assert_close(ref, got)

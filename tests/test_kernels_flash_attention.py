@@ -13,8 +13,10 @@ CASES = [
     (2, 8, 2, 32, 96, 64, True),     # cross lengths, bottom-aligned causal
     (1, 2, 1, 1, 128, 32, False),    # decode: 1 query vs cache (MQA)
     (1, 2, 1, 1, 100, 32, True),     # decode causal, ragged cache
-    (2, 4, 4, 80, 80, 64, True),     # ragged both dims
-    (1, 16, 2, 64, 64, 128, True),   # production-like head_dim
+    pytest.param((2, 4, 4, 80, 80, 64, True),    # ragged both dims
+                 marks=pytest.mark.slow),
+    pytest.param((1, 16, 2, 64, 64, 128, True),  # production-like head_dim
+                 marks=pytest.mark.slow),
 ]
 
 

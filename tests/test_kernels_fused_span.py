@@ -13,9 +13,10 @@ SHAPES = [
     (16, 12, 8, 8, 16, 3),
     (10, 10, 3, 8, 8, 5),
     (7, 9, 2, 4, 2, 3),       # odd sizes
-    (24, 32, 8, 16, 8, 3),
+    pytest.param((24, 32, 8, 16, 8, 3), marks=pytest.mark.slow),  # large
 ]
-DTYPES = [jnp.float32, jnp.bfloat16]
+DTYPES = [jnp.float32,
+          pytest.param(jnp.bfloat16, marks=pytest.mark.slow)]
 
 
 def _mk(shape, dtype, seed=0):

@@ -12,8 +12,10 @@ CASES = [
     (2, 128, 4, 1, 16, 8, 32),
     (1, 100, 4, 2, 32, 16, 32),    # ragged T (padded)
     (1, 64, 2, 2, 8, 4, 64),       # single chunk
-    (1, 256, 8, 1, 64, 128, 64),   # mamba2-like dims
-    (2, 96, 4, 4, 16, 16, 16),     # B/C per head
+    pytest.param((1, 256, 8, 1, 64, 128, 64),   # mamba2-like dims
+                 marks=pytest.mark.slow),
+    pytest.param((2, 96, 4, 4, 16, 16, 16),     # B/C per head
+                 marks=pytest.mark.slow),
 ]
 
 

@@ -5,6 +5,8 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 CODE = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -56,6 +58,7 @@ print("MOE-PARALLEL-OK")
 """
 
 
+@pytest.mark.slow  # multi-host mesh subprocess sweep
 def test_moe_paths_agree_on_mesh():
     env = dict(os.environ, PYTHONPATH="src")
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

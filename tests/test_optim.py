@@ -11,6 +11,7 @@ def quad_loss(p):
     return jnp.sum((p["w"] - 3.0) ** 2) + jnp.sum((p["b"] + 1.0) ** 2)
 
 
+@pytest.mark.slow  # long optimization loop
 def test_adamw_converges_on_quadratic():
     params = {"w": jnp.zeros((4,)), "b": jnp.zeros((2,))}
     opt = AdamW(learning_rate=0.1, weight_decay=0.0, clip_norm=None)

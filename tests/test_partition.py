@@ -1,7 +1,9 @@
 """DP optimal partitioner tests (paper §III-D): optimality vs brute force,
 capacity feasibility, residual accounting, transformer reuse."""
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import closure

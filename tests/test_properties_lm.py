@@ -1,4 +1,7 @@
 """Hypothesis property tests for LM-substrate invariants."""
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

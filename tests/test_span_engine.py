@@ -1,0 +1,195 @@
+"""Compiled span engine tests: the generated N-layer Pallas kernel and the
+jitted scan executor agree with the layer-by-layer oracle across kernel
+sizes, strides, conv/pool mixes and batch; the kernel's VMEM scratch is
+exactly the dependence closure; and the dispatcher routes a PartitionResult
+correctly while preserving model==machine traffic accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import closure
+from repro.core.graph import chain
+from repro.core.partition import partition_cnn
+from repro.kernels.fused_span.kernel import span_kernel_vmem_elems
+from repro.kernels.fused_span.ops import span_forward
+from repro.models import cnn
+from repro.runtime import span_engine
+
+C, P = "conv", "pool"
+
+SPAN_CASES = [
+    # (name, specs, hw, in_ch)
+    ("k1-s1", [(C, 1, 1, 0, 4), (C, 1, 1, 0, 8)], 8, 3),
+    ("k3-s1-deep", [(C, 3, 1, 1, 4), (C, 3, 1, 1, 8), (C, 3, 1, 1, 4)], 8, 3),
+    pytest.param("k5-s1", [(C, 5, 1, 2, 4), (C, 5, 1, 2, 4)], 10, 2,
+                 marks=pytest.mark.slow),
+    ("k3-s2", [(C, 3, 2, 1, 4), (C, 3, 1, 1, 8)], 10, 3),
+    pytest.param("mixed-k", [(C, 5, 1, 2, 4), (C, 1, 1, 0, 8),
+                             (C, 3, 2, 1, 8)], 10, 3,
+                 marks=pytest.mark.slow),
+    ("conv-pool-s2", [(C, 3, 1, 1, 4), (P, 2, 2, 0, 0), (C, 3, 2, 1, 8)], 12, 3),
+    ("pool-k3-s2-pad", [(C, 3, 1, 1, 4), (P, 3, 2, 1, 0)], 9, 3),
+    pytest.param("vgg-block", [(C, 3, 1, 1, 8), (C, 3, 1, 1, 8),
+                               (P, 2, 2, 0, 0), (C, 3, 1, 1, 16)], 8, 3,
+                 marks=pytest.mark.slow),
+]
+
+
+def make_case(specs, hw, ch, batch=2, seed=0):
+    net = chain("t", specs, in_h=hw, in_w=hw, in_ch=ch)
+    params = cnn.init_params(jax.random.PRNGKey(seed), net)
+    xs = jax.random.normal(jax.random.PRNGKey(seed + 1), (batch, hw, hw, ch))
+    ref = jax.vmap(lambda im: cnn.reference_forward(params, im, net))(xs)
+    return net, params, xs, ref
+
+
+def assert_close(got, ref, **kw):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4, **kw)
+
+
+@pytest.mark.parametrize("name,specs,hw,ch", SPAN_CASES)
+def test_pallas_kernel_matches_oracle(name, specs, hw, ch):
+    """Generated kernel == oracle across k in {1,3,5}, stride in {1,2},
+    conv+pool mixes, batch > 1 (interpret mode)."""
+    net, params, xs, ref = make_case(specs, hw, ch, batch=2)
+    got = span_forward(xs, params, net, 0, net.n_layers, interpret=True)
+    assert_close(got, ref, err_msg=name)
+
+
+@pytest.mark.parametrize("name,specs,hw,ch", SPAN_CASES)
+def test_scan_matches_oracle(name, specs, hw, ch):
+    """Jitted scan streaming == oracle on the same case grid."""
+    net, params, xs, ref = make_case(specs, hw, ch, batch=2)
+    got = jnp.stack([cnn.occam_forward(params, xs[i], net, mode="compiled")
+                     for i in range(xs.shape[0])])
+    assert_close(got, ref, err_msg=name)
+
+
+def test_whole_net_single_jit():
+    net, params, xs, ref = make_case(
+        [(C, 3, 1, 1, 4), (P, 2, 2, 0, 0), (C, 3, 1, 1, 8)], 12, 3, batch=1)
+    got = cnn.occam_forward_jit(params, xs[0], net, (1,))
+    assert_close(got, ref[0])
+
+
+@pytest.mark.parametrize("name,specs,hw,ch", SPAN_CASES[:4])
+def test_kernel_scratch_is_exactly_the_closure(name, specs, hw, ch):
+    """Property: the generated kernel's ring scratch bytes equal
+    |DC(a,b)| x dtype size, and scratch + resident filters equal
+    span_footprint_elems x dtype size (Eqn. 1's left-hand side)."""
+    net = chain("t", specs, in_h=hw, in_w=hw, in_ch=ch)
+    a, b = 0, net.n_layers
+    scratch, weights = span_kernel_vmem_elems(net, a, b)
+    itemsize = jnp.dtype(jnp.float32).itemsize
+    assert scratch * itemsize == \
+        closure.span_closure_elems(net, a, b) * itemsize
+    assert (scratch + weights) * itemsize == \
+        closure.span_footprint_elems(net, a, b) * itemsize
+
+
+def test_kernel_rejects_residual_spans():
+    net = chain("t", [(C, 3, 1, 1, 4), (C, 3, 1, 1, 4)], in_h=8, in_w=8,
+                in_ch=3, residual_edges=((0, 2),))
+    params = cnn.init_params(jax.random.PRNGKey(0), net)
+    xs = jnp.zeros((1, 8, 8, 3))
+    with pytest.raises(ValueError, match="residual"):
+        span_forward(xs, params, net, 0, 2, interpret=True)
+
+
+def test_dispatch_from_partition_result():
+    """DP partition of a strided conv/pool net: every residual-free span
+    routes to the pallas kernel (>= 3-deep, stride 2, batch > 1) and the
+    engine output matches the oracle with model==machine traffic."""
+    specs = [(C, 3, 1, 1, 8), (C, 3, 1, 1, 8), (P, 2, 2, 0, 0),
+             (C, 3, 1, 1, 16), (C, 3, 2, 1, 16), (C, 3, 1, 1, 8)]
+    net, params, xs, ref = make_case(specs, 16, 4, batch=2)
+    res = partition_cnn(net, 3000)
+    assert res.n_spans >= 2  # capacity actually forces a split
+    routes = span_engine.plan_routes(net, res)
+    assert all(r.route == span_engine.ROUTE_PALLAS for r in routes)
+    assert any(r.end - r.start >= 3 for r in routes)  # >= 3-deep span
+    ctr = cnn.TrafficCounter()
+    got = span_engine.execute_partition(params, xs, net, res, counter=ctr,
+                                        interpret=True)
+    assert_close(got, ref)
+    assert ctr.total == xs.shape[0] * cnn.predicted_transfers(
+        net, res.boundaries)
+
+
+def test_dispatch_residual_spans_to_scan():
+    """Residual-crossing spans fall back to the jitted scan; traffic still
+    matches the DP model (spill accounting included)."""
+    net = chain("r", [(C, 3, 1, 1, 4)] * 4, in_h=12, in_w=12, in_ch=3,
+                residual_edges=((1, 4),))
+    params = cnn.init_params(jax.random.PRNGKey(0), net)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 12, 3))
+    ref = jax.vmap(lambda im: cnn.reference_forward(params, im, net))(xs)
+    routes = span_engine.plan_routes(net, [2])
+    assert all(r.route == span_engine.ROUTE_SCAN for r in routes)
+    ctr = cnn.TrafficCounter()
+    got = span_engine.execute_partition(params, xs, net, [2], counter=ctr,
+                                        interpret=True)
+    assert_close(got, ref)
+    assert ctr.total == 2 * cnn.predicted_transfers(net, [2])
+
+
+def test_straddled_span_still_takes_the_kernel():
+    """An edge merely straddling a span (source at/before its input, target
+    past its output) costs the span nothing — it must stay on the pallas
+    route. Edge (1, 4) over boundaries [2, 3]: span (2, 3) is straddled,
+    span (0, 2) spills the source, span (3, 4) adds it."""
+    net = chain("r", [(C, 3, 1, 1, 4)] * 4, in_h=12, in_w=12, in_ch=3,
+                residual_edges=((1, 4),))
+    params = cnn.init_params(jax.random.PRNGKey(0), net)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 12, 3))
+    ref = jax.vmap(lambda im: cnn.reference_forward(params, im, net))(xs)
+    routes = {(r.start, r.end): r.route
+              for r in span_engine.plan_routes(net, [2, 3])}
+    assert routes[(2, 3)] == span_engine.ROUTE_PALLAS
+    assert routes[(0, 2)] == span_engine.ROUTE_SCAN  # interior source spill
+    assert routes[(3, 4)] == span_engine.ROUTE_SCAN  # in-span residual add
+    ctr = cnn.TrafficCounter()
+    got = span_engine.execute_partition(params, xs, net, [2, 3], counter=ctr,
+                                        interpret=True)
+    assert_close(got, ref)
+    assert ctr.total == 2 * cnn.predicted_transfers(net, [2, 3])
+
+
+def test_engine_accepts_single_image():
+    net, params, xs, ref = make_case([(C, 3, 1, 1, 4), (C, 3, 2, 1, 8)],
+                                     10, 3, batch=1)
+    got = span_engine.execute_partition(params, xs[0], net, [],
+                                        interpret=True)
+    assert got.shape == ref[0].shape
+    assert_close(got, ref[0])
+
+
+def test_api_span_executor():
+    from repro.models.api import span_executor
+
+    net, params, xs, ref = make_case(
+        [(C, 3, 1, 1, 8), (C, 3, 1, 1, 8), (P, 2, 2, 0, 0),
+         (C, 3, 1, 1, 16)], 12, 4, batch=2)
+    y, res = span_executor(params, xs, net, 3000, interpret=True)
+    assert res.n_spans >= 1
+    assert_close(y, ref)
+
+
+def test_starved_rings_fail_schedule_validation():
+    """The compiled engine preserves the necessity proof: shrinking the
+    closure by one row is detected by schedule replay validation."""
+    net = chain("t", [(C, 3, 1, 1, 4), (C, 3, 1, 1, 4)], in_h=10, in_w=10,
+                in_ch=3)
+    real = closure.span_row_counts
+
+    def starved(n, i, j, out_rows=1):
+        return [max(r - 1, 1) for r in real(n, i, j, out_rows)]
+
+    closure.span_row_counts = starved
+    try:
+        with pytest.raises(AssertionError, match="ring violation"):
+            closure.span_schedule(net, 0, 2)
+    finally:
+        closure.span_row_counts = real

@@ -1,5 +1,7 @@
 """STAP scheduler + discrete-event simulator tests (paper §III-E)."""
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings
 import hypothesis.strategies as st
 

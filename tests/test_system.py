@@ -19,6 +19,7 @@ def test_training_reduces_loss():
     assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
 
 
+@pytest.mark.slow  # end-to-end train loop
 def test_training_with_microbatches_matches_trend():
     _, l1 = train("internlm2-1.8b", smoke=True, steps=30, batch=8, seq=32,
                   lr=3e-3, microbatches=1, log_every=1000)
@@ -29,6 +30,7 @@ def test_training_with_microbatches_matches_trend():
     assert abs(l1[-1] - l2[-1]) < 0.5
 
 
+@pytest.mark.slow  # end-to-end train loop
 def test_checkpoint_restart_is_exact(tmp_path):
     """Kill/restart: continuing from a checkpoint reproduces the same
     final loss as an uninterrupted run (deterministic data replay)."""
@@ -44,6 +46,7 @@ def test_checkpoint_restart_is_exact(tmp_path):
     assert resumed[-1] == pytest.approx(full[-1], rel=1e-3)
 
 
+@pytest.mark.slow  # serves every arch family end-to-end
 def test_generation_runs_all_families():
     for arch in ("llama3.2-1b", "mamba2-1.3b", "jamba-1.5-large-398b",
                  "seamless-m4t-large-v2"):
@@ -70,7 +73,10 @@ def test_full_paper_pipeline_consistency():
     ctr = cnn.TrafficCounter()
     y = cnn.occam_forward(params, x, net, res.boundaries, ctr)
     ref = cnn.reference_forward(params, x, net)
-    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-5)
+    # atol: the compiled streaming engine sums convs as k*k matmuls, a
+    # different fp32 reduction order than the oracle's lax.conv
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-5,
+                               atol=1e-5)
     assert ctr.total == res.transfers
     times = [sum(net.layers[i].macs for i in range(sp.start, sp.end)) or 1
              for sp in res.spans]

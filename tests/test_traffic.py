@@ -22,6 +22,7 @@ def test_base_counts_all_interlayer_traffic():
     assert rep.filter_elems == net.total_weight_elems()
 
 
+@pytest.mark.slow  # full paper-network zoo sweep
 def test_occam_beats_base_on_every_network():
     for name in PAPER_NETWORKS:
         net = get_network(name)
@@ -41,6 +42,7 @@ def test_layer_fusion_same_misses_more_compute():
         assert lf.compute_macs >= occ.compute_macs
 
 
+@pytest.mark.slow  # full paper-network zoo sweep
 def test_traffic_reduction_band():
     """Paper: 21x mean off-chip transfer cut (per-net 7x-43x). Our
     analytical accounting lands in the same band: >=10x per net, 15-25x
@@ -54,6 +56,7 @@ def test_traffic_reduction_band():
     assert 14.0 < g < 25.0
 
 
+@pytest.mark.slow  # full paper-network zoo sweep
 def test_speedup_band():
     """Paper: 2.06x vs base / 1.36x vs LF (geomean). Model bands: >=1.5x
     and >=1.2x."""
@@ -66,6 +69,7 @@ def test_speedup_band():
     assert 1.1 < geomean(vs_lf) < 1.8
 
 
+@pytest.mark.slow  # full paper-network zoo sweep
 def test_energy_saving_band():
     """Paper: 33% (Occam) / 12% (equal-cost LF) mean energy saving."""
     sav, sav_lf = [], []
@@ -87,6 +91,7 @@ def test_energy_components_positive_and_split():
     assert r["energy"]["occam"]["link_pj"] > 0  # partitions cross chips
 
 
+@pytest.mark.slow  # paper-network zoo
 def test_bigger_cache_fewer_transfers():
     """§V-B2: 'As we increase the cache size from 3 MB to 6 MB, Occam's
     speedups improve'."""
@@ -97,6 +102,7 @@ def test_bigger_cache_fewer_transfers():
         assert t6 <= t3
 
 
+@pytest.mark.slow  # paper-network zoo
 def test_paper_table2_resnet18_partition_structure():
     """Table II ResNet-18: partitions at 0,12,15,16,17,18 — a long fused
     head span and singleton 512-wide tail layers. Our DP reproduces it."""
