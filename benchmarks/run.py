@@ -39,6 +39,19 @@ BENCHES = [
 ]
 
 
+def _occam_stap():
+    # imported lazily: the benchmark re-runs itself in a subprocess with
+    # the emulated-device XLA flags and parses results/BENCH_stap.json
+    from benchmarks.occam_stap import occam_stap
+
+    return occam_stap()
+
+
+BENCHES.append(
+    ("occam_stap", _occam_stap,
+     "STAP pipeline throughput measured/predicted (1.0 = exact)"))
+
+
 def main() -> None:
     print("name,us_per_call,derived")
     for name, fn, _note in BENCHES:

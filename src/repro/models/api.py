@@ -70,6 +70,35 @@ def span_executor(params: list[dict], xs: jax.Array, net,
     return y, result
 
 
+def stap_executor(params: list[dict], xs: jax.Array, net,
+                  capacity_elems: int, *, microbatch: int = 1,
+                  stage_times=None, max_chips=None, max_replicas=None,
+                  target_period=None, mesh=None, devices=None,
+                  counter=None):
+    """One-call CNN entry point for the executable STAP runtime (C4).
+
+    Runs Occam's DP for ``capacity_elems``, plans bottleneck replication
+    (``repro.core.stap.plan_replication`` under ``max_chips`` /
+    ``target_period``; unreplicated by default; ``max_replicas`` defaults
+    to what the available devices can hold as a (stage, replica) mesh),
+    and streams ``xs`` through the replicated multi-chip span pipeline
+    (``repro.runtime.stap_pipeline``). Returns ``(y, pipeline)`` where
+    ``pipeline`` is the compiled :class:`StapPipeline` — reuse it via
+    ``pipeline.run`` to serve more batches without retracing, or inspect
+    ``pipeline.report()`` / ``pipeline.plan`` / ``pipeline.schedule``.
+    """
+    from repro.core.partition import partition_cnn
+    from repro.runtime.stap_pipeline import stream
+
+    if xs.ndim != 4:
+        raise ValueError("stap_executor streams batched (B, H, W, C)")
+    result = partition_cnn(net, capacity_elems, batch=microbatch)
+    return stream(params, xs, net, result, microbatch=microbatch,
+                  stage_times=stage_times, max_chips=max_chips,
+                  max_replicas=max_replicas, target_period=target_period,
+                  mesh=mesh, devices=devices, counter=counter)
+
+
 def make_batch(cfg: ModelCfg, batch: int, seq: int, key=None,
                dtype=jnp.bfloat16) -> dict:
     """Synthetic batch matching the arch's input signature (smoke tests)."""

@@ -13,10 +13,13 @@ This is contribution C3+C4 made executable for transformers:
      stream through, boundary activations are the only inter-stage
      traffic (exactly the quantity the DP minimized).
 
-The schedule runs S + M - 1 ticks for S stages x M microbatches; STAP
-*staggering* assigns microbatch m to replica m mod r at the planner level
-(the discrete-event simulator in core.stap verifies throughput claims; the
-SPMD executable below runs the unreplicated pipeline).
+The schedule runs S + M - 1 ticks for S stages x M microbatches. STAP
+*staggering* (microbatch m -> replica m mod r_i) is executable too: pass a
+``plan`` (or per-stage ``replicas``) and a (stage, replica) mesh and
+``pipeline_forward`` delegates to the staggered round executor in
+``repro.runtime.stap_pipeline`` (which also runs heterogeneous Occam span
+stages; the discrete-event simulator in core.stap verifies the throughput
+claims).
 """
 from __future__ import annotations
 
@@ -61,7 +64,9 @@ def plan_stages(layer_weight_bytes: Sequence[float],
 
 def pipeline_forward(stage_fn: Callable, stage_params,
                      microbatches: jax.Array, mesh: Mesh,
-                     axis: str = "stage") -> jax.Array:
+                     axis: str = "stage",
+                     plan: StapPlan | Sequence[int] | None = None
+                     ) -> jax.Array:
     """Run M microbatches through S pipeline stages.
 
     stage_fn(stage_params_slice, x) -> y, same shape as x.
@@ -69,8 +74,29 @@ def pipeline_forward(stage_fn: Callable, stage_params,
         holds slice s — its Occam span's weights, resident for the whole
         stream).
     microbatches: (M, mb, ...) replicated input.
+    plan: optional STAP replication — a :class:`StapPlan` or per-stage
+        replica counts. Requires ``mesh`` to carry a second ("replica")
+        axis of width max(replicas); microbatch m is staggered onto
+        replica m mod r_i (paper §III-E) by the round executor in
+        ``repro.runtime.stap_pipeline``.
     Returns (M, mb, ...) outputs (as produced by the last stage).
     """
+    if plan is not None:
+        from repro.runtime import stap_pipeline
+
+        if not isinstance(plan, StapPlan):
+            # synthesize a plan from bare replica counts; with unit stage
+            # times the closed-form throughput min_i r_i/t_i is min(reps)
+            reps = tuple(int(r) for r in plan)
+            plan = StapPlan((1.0,) * len(reps), reps, float(min(reps)),
+                            float(len(reps)), sum(reps))
+        replica_axis = next(
+            (a for a in mesh.axis_names if a != axis),
+            stap_pipeline.REPLICA_AXIS)
+        return stap_pipeline.replicated_forward(
+            stage_fn, stage_params, microbatches, mesh, plan,
+            stage_axis=axis, replica_axis=replica_axis)
+
     s_stages = mesh.shape[axis]
     m = microbatches.shape[0]
     ticks = s_stages + m - 1
@@ -104,12 +130,14 @@ def pipeline_forward(stage_fn: Callable, stage_params,
             return (nxt, outs), None
 
         (_, outs), _ = lax.scan(tick, (buf, outs0), jnp.arange(ticks))
-        # only the last stage holds real outputs; share them
-        outs = jnp.where(idx == s_stages - 1, outs, jnp.zeros_like(outs))
-        return lax.psum(outs, axis)
+        # finished microbatches stay on the last stage; the stage-sharded
+        # output below is sliced, not psum-broadcast (a psum here would
+        # move S x M x |act| zeros per call for one stage's payload)
+        return outs
 
-    return _shard_map(
+    out = _shard_map(
         per_stage, mesh=mesh,
-        in_specs=(P(axis), P()), out_specs=P(),
+        in_specs=(P(axis), P()), out_specs=P(axis),
         check_vma=False,
     )(stage_params, microbatches)
+    return out[(s_stages - 1) * m:]

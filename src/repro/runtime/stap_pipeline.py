@@ -1,0 +1,559 @@
+"""Executable STAP runtime: staggered, replicated multi-chip span pipeline.
+
+This is the paper's §III-E made runnable: a ``PartitionResult`` (the DP's
+optimal spans) executes as a real SPMD pipeline over a ``(stage, replica)``
+device mesh.
+
+* Each stage holds *only its span's weights*, resident on its chips for the
+  whole stream — Occam's full cross-image filter reuse (Eqn. 6) lifted to
+  the multi-chip level.
+* Mini-batch ``m`` is staggered onto replica ``m % r_i`` of stage ``i``
+  following the :class:`~repro.core.stap.StapPlan`; the explicit lock-step
+  tick schedule (ownership, fill/drain, routing) comes from
+  :func:`~repro.core.stap.staggered_schedule`.
+* Boundary activations (the span-boundary map plus every residual source
+  crossing the cut — exactly the per-boundary quantity the DP minimized)
+  move between stages by slot-level ``ppermute`` as the *only* inter-stage
+  traffic: the replica that served a slot sends straight to the replica
+  that will serve it next. There is no intra-stage collective until a
+  single final ``psum`` assembles the last stage's outputs.
+* Stage bodies are the PR-1 span engine: spans run the jitted row-streaming
+  scan (``repro.models.cnn._span_scan_jit`` — same closure-sized rings and
+  row math as the fused Pallas kernel, which needs a real TPU and therefore
+  does not run under ``shard_map`` on CI) and oversized single layers fall
+  back to the oracle, per ``repro.runtime.span_engine.plan_routes``.
+
+Heterogeneous spans under one SPMD program: every boundary payload is
+flattened to a fixed-width slot vector and every span's weights to a
+fixed-width parameter vector, and the per-device program selects its span
+body with ``lax.switch`` on the stage index — only the selected branch
+executes at runtime, so a replica pays exactly its own span's FLOPs.
+
+Runs on CPU CI via ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+(see ``tests/conftest.py``). One-call entry: ``repro.models.api
+.stap_executor``; streaming demo: ``examples/stap_serve.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import closure
+from repro.core.graph import NetSpec
+from repro.core.partition import PartitionResult
+from repro.core.stap import (StaggeredSchedule, StapPlan, plan_replication,
+                             staggered_schedule)
+from repro.models import cnn
+from repro.models.sharding import shard_map_compat as _shard_map
+from repro.runtime import span_engine
+
+STAGE_AXIS = "stage"
+REPLICA_AXIS = "replica"
+
+
+# --------------------------------------------------------------------------
+# Static planning: boundary payloads and per-span stages
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PayloadSpec:
+    """What crosses a partition cut: the boundary map plus every residual
+    source with an edge straddling the cut. ``elems`` is therefore exactly
+    the per-boundary quantity the DP charges (one direction)."""
+
+    cut: int
+    keys: tuple[int, ...]   # [cut, *sorted crossing residual sources]
+    elems: int              # per-image payload elements
+
+
+def payload_spec(net: NetSpec, cut: int) -> PayloadSpec:
+    extras = sorted({s for (s, t) in net.residual_edges if s < cut < t})
+    keys = (cut, *extras)
+    return PayloadSpec(cut, keys, sum(net.map_elems(k) for k in keys))
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    """One pipeline stage: a span, its engine route, and its payloads."""
+
+    route: span_engine.SpanRoute
+    in_spec: PayloadSpec
+    out_spec: PayloadSpec
+    spill: tuple[int, ...]     # interior maps this span must materialize
+    src_keys: tuple[int, ...]  # upstream sources consumed from the payload
+
+    @property
+    def span(self) -> tuple[int, int]:
+        return self.route.start, self.route.end
+
+
+def plan_span_stages(net: NetSpec,
+                     partition: PartitionResult | Sequence[int]
+                     ) -> tuple[StageSpec, ...]:
+    """Pure function of net + partition: spans -> pipeline stages."""
+    boundaries = span_engine._boundaries_of(partition, net)
+    routes = span_engine.plan_routes(net, partition)
+    crossing = [(s, t) for (s, t) in net.residual_edges
+                if any(s < p < t for p in boundaries)]
+    spill_sources = {s for (s, _t) in crossing}
+    stages = []
+    for route in routes:
+        a, b = route.start, route.end
+        stages.append(StageSpec(
+            route=route,
+            in_spec=payload_spec(net, a),
+            out_spec=payload_spec(net, b),
+            spill=tuple(sorted(m for m in spill_sources if a < m < b)),
+            src_keys=tuple(sorted({s for (s, t) in net.residual_edges
+                                   if s < a < t <= b})),
+        ))
+    return tuple(stages)
+
+
+def model_stage_times(net: NetSpec, stages: Sequence[StageSpec]
+                      ) -> tuple[float, ...]:
+    """Per-stage latency model for planning when no measured times exist:
+    conv MACs plus pool window ops (arbitrary units — only ratios matter
+    to ``plan_replication``)."""
+    times = []
+    for st in stages:
+        a, b = st.span
+        ops = 0
+        for layer in net.layers[a:b]:
+            ops += layer.macs if layer.kind == "conv" \
+                else layer.out_elems * layer.k * layer.k
+        times.append(float(max(ops, 1)))
+    return tuple(times)
+
+
+def stap_mesh(n_stages: int, max_replicas: int,
+              devices: Sequence | None = None) -> Mesh:
+    """A (stage, replica) mesh over the first n_stages*max_replicas devices."""
+    devs = list(devices if devices is not None else jax.devices())
+    need = n_stages * max_replicas
+    if len(devs) < need:
+        raise ValueError(
+            f"STAP mesh needs {n_stages}x{max_replicas} = {need} devices, "
+            f"have {len(devs)} (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} before jax "
+            f"import to emulate them on CPU)")
+    arr = np.array(devs[:need]).reshape(n_stages, max_replicas)
+    return Mesh(arr, (STAGE_AXIS, REPLICA_AXIS))
+
+
+# --------------------------------------------------------------------------
+# Payload / parameter flattening (uniform SPMD buffers)
+# --------------------------------------------------------------------------
+
+def _pack(parts: dict[int, jax.Array], spec: PayloadSpec,
+          width: int) -> jax.Array:
+    """{map -> (mb, h, w, c)} -> (mb, width) zero-padded flat payload."""
+    mb = parts[spec.keys[0]].shape[0]
+    flat = jnp.concatenate([parts[k].reshape(mb, -1) for k in spec.keys],
+                           axis=1)
+    return jnp.pad(flat, ((0, 0), (0, width - flat.shape[1])))
+
+
+def _unpack(payload: jax.Array, spec: PayloadSpec,
+            net: NetSpec) -> dict[int, jax.Array]:
+    parts, off = {}, 0
+    for k in spec.keys:
+        h, w, c = net.map_shape(k)
+        n = h * w * c
+        parts[k] = payload[:, off:off + n].reshape(-1, h, w, c)
+        off += n
+    return parts
+
+
+def _span_param_elems(net: NetSpec, a: int, b: int) -> int:
+    return sum(l.weight_elems + l.out_ch for l in net.layers[a:b]
+               if l.kind == "conv")
+
+
+def _flatten_span_params(params: Sequence[dict], net: NetSpec, a: int, b: int,
+                         width: int) -> jax.Array:
+    leaves = []
+    for l in range(a, b):
+        if net.layers[l].kind == "conv":
+            leaves += [params[l]["w"].ravel(), params[l]["b"].ravel()]
+    flat = jnp.concatenate(leaves) if leaves else jnp.zeros((0,), jnp.float32)
+    return jnp.pad(flat, (0, width - flat.shape[0]))
+
+
+def _unflatten_span_params(flat: jax.Array, net: NetSpec, a: int,
+                           b: int) -> tuple[dict, ...]:
+    out, off = [], 0
+    for l in range(a, b):
+        layer = net.layers[l]
+        if layer.kind != "conv":
+            out.append({})
+            continue
+        wsz = layer.weight_elems
+        w = lax.slice_in_dim(flat, off, off + wsz).reshape(
+            layer.k, layer.k, layer.in_ch, layer.out_ch)
+        bv = lax.slice_in_dim(flat, off + wsz, off + wsz + layer.out_ch)
+        out.append({"w": w, "b": bv})
+        off += wsz + layer.out_ch
+    return tuple(out)
+
+
+# --------------------------------------------------------------------------
+# The generic round executor (shared by heterogeneous spans and the
+# homogeneous replicated transformer pipeline)
+# --------------------------------------------------------------------------
+
+def _round_executor(step, stage_params, feed: jax.Array, mesh: Mesh,
+                    sched: StaggeredSchedule,
+                    stage_axis: str = STAGE_AXIS,
+                    replica_axis: str = REPLICA_AXIS) -> jax.Array:
+    """Run the staggered lock-step schedule as one SPMD program.
+
+    step(stage_idx, params_local, slot) -> slot', both of ``feed``'s
+    trailing slot shape. ``feed``: (n_rounds, round_width, *slot)
+    replicated input; ``stage_params``: pytree with leading stage dim on
+    every leaf. Returns the last stage's (n_rounds, round_width, *slot)
+    outputs.
+
+    Tick t: stage i serves round t - i; each replica runs only its owned
+    *live* slots (``lax.cond`` — the skipped branch costs nothing at run
+    time), then every slot's boundary payload ppermutes one hop down the
+    pipe straight to the replica that will serve it next.
+    """
+    s_stages, r_max = sched.n_stages, sched.max_replicas
+    got = (mesh.shape.get(stage_axis), mesh.shape.get(replica_axis))
+    if got != (s_stages, r_max):
+        # slot routing is computed over a (n_stages, max_replicas) grid; a
+        # mismatched mesh would silently misroute every payload to zeros
+        raise ValueError(
+            f"mesh is {stage_axis}={got[0]}, {replica_axis}={got[1]} but "
+            f"the schedule needs {s_stages}x{r_max} (replicas "
+            f"{sched.replicas}); build it with stap_mesh({s_stages}, "
+            f"{r_max})")
+    width, rounds = sched.round_width, sched.n_rounds
+    owner = jnp.asarray(np.array(sched.owner_table()))          # (S, R, W)
+    live = jnp.asarray(np.array(sched.slot_live()))             # (G*W,)
+    perms = [sched.slot_perm(w) for w in range(width)]
+
+    def per_device(params_local, feed):
+        i = lax.axis_index(stage_axis)
+        j = lax.axis_index(replica_axis)
+        p_here = jax.tree.map(lambda l: l[0], params_local)
+        slot_shape = feed.shape[2:]
+        buf0 = jnp.zeros((width,) + slot_shape, feed.dtype)
+        outs0 = jnp.zeros((rounds, width) + slot_shape, feed.dtype)
+
+        def tick(carry, t):
+            buf, outs = carry
+            rg = t - i
+            active = jnp.logical_and(rg >= 0, rg < rounds)
+            rgc = jnp.clip(rg, 0, rounds - 1)
+            feed_round = lax.dynamic_index_in_dim(feed, rgc, 0,
+                                                  keepdims=False)
+            slot_in = jnp.where(i == 0, feed_round, buf)
+            ys = []
+            for w in range(width):
+                pred = jnp.logical_and(
+                    jnp.logical_and(active, owner[i, j, w]),
+                    live[rgc * width + w])
+                ys.append(lax.cond(
+                    pred,
+                    lambda x: step(i, p_here, x),
+                    lambda x: jnp.zeros_like(x),
+                    slot_in[w]))
+            y = jnp.stack(ys)
+            # the last stage banks its finished round (its owned slots)
+            dep = lax.dynamic_update_index_in_dim(outs, y, rgc, 0)
+            outs = jnp.where(jnp.logical_and(active, i == s_stages - 1),
+                             dep, outs)
+            # boundary activations: one slot-level hop down the pipe — the
+            # only inter-stage traffic, exactly the DP's minimized quantity
+            if s_stages > 1:
+                buf = jnp.stack([
+                    lax.ppermute(y[w], (stage_axis, replica_axis), perms[w])
+                    for w in range(width)])
+            return (buf, outs), None
+
+        (_, outs), _ = lax.scan(tick, (buf0, outs0),
+                                jnp.arange(sched.n_ticks))
+        return outs
+
+    # outputs stay replica-sharded (each replica banked only its owned
+    # slots, zeros elsewhere) — the last stage row's shards are combined
+    # here instead of an inter-replica all-reduce of the mostly-zero
+    # padded stream (the same zero-broadcast this module's
+    # pipeline_forward fix removed)
+    out = _shard_map(per_device, mesh=mesh,
+                     in_specs=(P(stage_axis), P()),
+                     out_specs=P((stage_axis, replica_axis)),
+                     check_vma=False)(stage_params, feed)
+    out = out[(s_stages - 1) * r_max * rounds:]
+    return out.reshape((r_max, rounds) + out.shape[1:]).sum(axis=0)
+
+
+def replicated_forward(stage_fn, stage_params, microbatches: jax.Array,
+                       mesh: Mesh, plan: StapPlan,
+                       stage_axis: str = STAGE_AXIS,
+                       replica_axis: str = REPLICA_AXIS) -> jax.Array:
+    """Homogeneous replicated pipeline (the ``pipeline_forward``
+    generalization): same-shape stages, microbatch m -> replica m % r_i.
+
+    stage_fn(params_slice, x) -> y with y.shape == x.shape;
+    stage_params leaves carry a leading stage dim; microbatches is
+    (M, mb, ...) replicated. Returns the (M, mb, ...) last-stage outputs.
+    """
+    m = microbatches.shape[0]
+    sched = staggered_schedule(plan, m)
+    pad = sched.n_slots - m
+    feed = jnp.pad(microbatches, ((0, pad),) + ((0, 0),) *
+                   (microbatches.ndim - 1))
+    feed = feed.reshape((sched.n_rounds, sched.round_width)
+                        + microbatches.shape[1:])
+
+    def step(_i, params_local, slot):
+        return stage_fn(params_local, slot)
+
+    outs = _round_executor(step, stage_params, feed, mesh, sched,
+                           stage_axis=stage_axis,
+                           replica_axis=replica_axis)
+    return outs.reshape((sched.n_slots,) + microbatches.shape[1:])[:m]
+
+
+# --------------------------------------------------------------------------
+# The span pipeline: heterogeneous Occam spans as switch-selected bodies
+# --------------------------------------------------------------------------
+
+class StapPipeline:
+    """A compiled STAP executor for one (net, partition, plan, batch) tuple.
+
+    Build once, then ``run(params, xs)`` streams batches through the
+    replicated span pipeline (the jit caches on the feed/param shapes, so
+    repeated runs — serving — pay no retrace).
+    """
+
+    def __init__(self, net: NetSpec,
+                 partition: PartitionResult | Sequence[int],
+                 batch: int, microbatch: int = 1, *,
+                 plan: StapPlan | None = None,
+                 stage_times: Sequence[float] | None = None,
+                 max_chips: int | None = None,
+                 max_replicas: int | None = None,
+                 target_period: float | None = None,
+                 mesh: Mesh | None = None,
+                 devices: Sequence | None = None):
+        self.net = net
+        self.boundaries = span_engine._boundaries_of(partition, net)
+        self.stages = plan_span_stages(net, partition)
+        n_stages = len(self.stages)
+        self.microbatch = microbatch
+        self.batch = batch
+        self.stage_times = tuple(stage_times) if stage_times is not None \
+            else model_stage_times(net, self.stages)
+        if plan is None:
+            if max_replicas is None:
+                # cap replication at what the (stage, replica) mesh can
+                # physically hold, so natural chip budgets plan meshes
+                # that actually exist
+                if mesh is not None:
+                    max_replicas = mesh.shape.get(REPLICA_AXIS, 1)
+                else:
+                    n_dev = len(devices) if devices is not None \
+                        else jax.device_count()
+                    max_replicas = max(1, n_dev // n_stages)
+            if mesh is not None and max_chips is None and \
+                    target_period is None:
+                # a replica-capable mesh with no stated budget means "use
+                # it": water-fill up to the devices the mesh holds (the
+                # schedule must match the mesh shape exactly)
+                max_chips = n_stages * max_replicas
+            plan = plan_replication(self.stage_times,
+                                    target_period=target_period,
+                                    max_chips=max_chips,
+                                    max_replicas=max_replicas)
+        if len(plan.replicas) != n_stages:
+            raise ValueError(f"plan has {len(plan.replicas)} stages, "
+                             f"partition has {n_stages}")
+        self.plan = plan
+        self.n_microbatches = -(-batch // microbatch)
+        self.schedule = staggered_schedule(plan, self.n_microbatches)
+        self.mesh = mesh if mesh is not None else stap_mesh(
+            n_stages, self.schedule.max_replicas, devices)
+        self.payload_width = max(max(st.in_spec.elems, st.out_spec.elems)
+                                 for st in self.stages)
+        self.param_width = max(
+            (_span_param_elems(net, *st.span) for st in self.stages),
+            default=1) or 1
+        self._fn = jax.jit(self._build())
+
+    # -- static reporting ---------------------------------------------------
+
+    @property
+    def link_elems_per_image(self) -> int:
+        """Physical inter-stage elements moved per image: every interior
+        boundary payload crosses its cut exactly once (per hop)."""
+        return sum(st.out_spec.elems for st in self.stages[:-1])
+
+    def executed_engine(self, stage: StageSpec) -> str:
+        """The engine a stage actually runs under shard_map: the Pallas
+        route needs a real TPU, so kernel-eligible spans execute the scan
+        here (same schedule and row math)."""
+        return "oracle" if stage.route.route == span_engine.ROUTE_ORACLE \
+            else "scan"
+
+    def report(self) -> dict:
+        """Machine-readable run configuration (benchmarks / examples)."""
+        return {
+            "boundaries": list(self.boundaries),
+            "spans": [list(st.span) for st in self.stages],
+            "planned_routes": [st.route.route for st in self.stages],
+            "engines": [self.executed_engine(st) for st in self.stages],
+            "replicas": list(self.plan.replicas),
+            "chips": self.plan.chips,
+            "mesh_shape": [self.schedule.n_stages,
+                           self.schedule.max_replicas],
+            "round_width": self.schedule.round_width,
+            "n_rounds": self.schedule.n_rounds,
+            "n_ticks": self.schedule.n_ticks,
+            "microbatch": self.microbatch,
+            "n_microbatches": self.n_microbatches,
+            "payload_elems": [st.out_spec.elems for st in self.stages[:-1]],
+            "payload_width_padded": self.payload_width,
+            "link_elems_per_image": self.link_elems_per_image,
+            "dp_transfer_elems_per_image": cnn.predicted_transfers(
+                self.net, list(self.boundaries)),
+        }
+
+    # -- SPMD program -------------------------------------------------------
+
+    def _make_body(self, stage: StageSpec):
+        net, (a, b) = self.net, stage.span
+        oracle = stage.route.route == span_engine.ROUTE_ORACLE
+        sched = None if oracle else closure.span_schedule(
+            net, a, b, spill=stage.spill)
+
+        def body(p_flat, slot):
+            span_params = _unflatten_span_params(p_flat, net, a, b)
+            parts = _unpack(slot, stage.in_spec, net)
+            x = parts[a]
+            srcs = tuple(parts[s] for s in stage.src_keys)
+            if oracle:
+                stored = {a: x, **{s: parts[s] for s in stage.src_keys}}
+                full = [{}] * a + list(span_params)
+                out, spilled = span_engine._oracle_span(
+                    full, net, a, b, stored, stage.spill)
+            else:
+                fn = functools.partial(
+                    cnn._span_scan_jit, net=net, a=a, b=b, schedule=sched,
+                    spill=stage.spill, src_keys=stage.src_keys)
+                out, spills = jax.vmap(fn, in_axes=(None, 0, 0))(
+                    span_params, x, srcs)
+                spilled = dict(zip(stage.spill, spills))
+            out_parts = {}
+            for s in stage.out_spec.keys:
+                if s == b:
+                    out_parts[s] = out
+                elif s in spilled:
+                    out_parts[s] = spilled[s]
+                elif s == a:
+                    out_parts[s] = x       # edge source == this span's input
+                else:
+                    out_parts[s] = parts[s]  # upstream source: forward it
+            return _pack(out_parts, stage.out_spec, self.payload_width)
+
+        return body
+
+    def _build(self):
+        bodies = [self._make_body(st) for st in self.stages]
+
+        def step(i_stage, p_flat, slot):
+            # only the selected span body executes at run time
+            return lax.switch(i_stage, bodies, p_flat, slot)
+
+        sched, mesh = self.schedule, self.mesh
+
+        def fn(params_stacked, feed):
+            return _round_executor(step, params_stacked, feed, mesh, sched)
+
+        return fn
+
+    # -- data movement ------------------------------------------------------
+
+    def _stack_params(self, params: Sequence[dict]) -> jax.Array:
+        # serving calls reuse the same weights; key the flatten/pad work on
+        # the leaf buffers themselves (held by reference — an id() key
+        # would go stale when the allocator recycles a freed array's
+        # address) so steady-state run() skips it
+        leaves = tuple(p[k] for p in params for k in sorted(p))
+        cached = getattr(self, "_pstack_cache", None)
+        if cached is not None and len(cached[0]) == len(leaves) and \
+                all(a is b for a, b in zip(cached[0], leaves)):
+            return cached[1]
+        stacked = jnp.stack([
+            _flatten_span_params(params, self.net, *st.span,
+                                 width=self.param_width)
+            for st in self.stages])
+        self._pstack_cache = (leaves, stacked)
+        return stacked
+
+    def _pack_feed(self, xs: jax.Array) -> jax.Array:
+        mb, m = self.microbatch, self.n_microbatches
+        xs = jnp.pad(xs, ((0, m * mb - xs.shape[0]),) + ((0, 0),) * 3)
+        flat = xs.reshape(m, mb, -1)
+        flat = jnp.pad(flat, ((0, self.schedule.n_slots - m), (0, 0),
+                              (0, self.payload_width - flat.shape[-1])))
+        return flat.reshape(self.schedule.n_rounds,
+                            self.schedule.round_width, mb,
+                            self.payload_width)
+
+    def run(self, params: Sequence[dict], xs: jax.Array,
+            counter: cnn.TrafficCounter | None = None) -> jax.Array:
+        """Stream ``xs`` ((B, H, W, C)) through the pipeline -> (B, ...).
+
+        ``counter`` accumulates the model's off-chip transfers with the
+        same engine-independent accounting as ``span_engine``
+        (model == machine: totals equal ``predicted_transfers`` x batch).
+        """
+        if xs.ndim != 4:
+            raise ValueError("stap pipeline streams batched (B, H, W, C)")
+        if xs.shape[0] != self.batch:
+            raise ValueError(f"pipeline compiled for batch {self.batch}, "
+                             f"got {xs.shape[0]}")
+        for st in self.stages:
+            a, b = st.span
+            cnn.count_span_reads(counter, self.net, a, b, self.batch)
+            cnn.count_span_writes(counter, self.net, b, st.spill, self.batch)
+        out = self._fn(self._stack_params(params), self._pack_feed(xs))
+        h, w, c = self.net.map_shape(self.net.n_layers)
+        flat = out.reshape(self.schedule.n_slots, self.microbatch,
+                           self.payload_width)[:self.n_microbatches]
+        y = flat[:, :, :h * w * c].reshape(-1, h, w, c)
+        return y[:self.batch]
+
+
+def stream(params: Sequence[dict], xs: jax.Array, net: NetSpec,
+           partition: PartitionResult | Sequence[int], *,
+           microbatch: int = 1, plan: StapPlan | None = None,
+           stage_times: Sequence[float] | None = None,
+           max_chips: int | None = None, max_replicas: int | None = None,
+           target_period: float | None = None,
+           mesh: Mesh | None = None, devices: Sequence | None = None,
+           counter: cnn.TrafficCounter | None = None
+           ) -> tuple[jax.Array, StapPipeline]:
+    """One-shot convenience wrapper: build the pipeline and stream ``xs``.
+
+    Returns ``(y, pipeline)`` — keep the pipeline object to stream more
+    batches without retracing, or read ``pipeline.report()``.
+    """
+    pipe = StapPipeline(net, partition, xs.shape[0], microbatch, plan=plan,
+                        stage_times=stage_times, max_chips=max_chips,
+                        max_replicas=max_replicas,
+                        target_period=target_period, mesh=mesh,
+                        devices=devices)
+    return pipe.run(params, xs, counter=counter), pipe

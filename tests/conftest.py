@@ -1,0 +1,47 @@
+"""Shared test fixtures: emulated multi-device CPU.
+
+The XLA_FLAGS override MUST land before the first ``import jax`` anywhere
+in the test process (jax locks the device count on first init). pytest
+imports conftest.py before any test module, so setting it here covers the
+whole run; mesh/pipeline tests then run in-process on single-CPU CI
+instead of each paying a subprocess.
+
+Tests that need the emulated mesh take the ``multi_device`` fixture (or
+call ``require_devices`` directly) and skip cleanly when the flag could
+not take effect — e.g. when jax was already imported by a plugin, or the
+process runs on a real accelerator where the host-platform override does
+not apply.
+"""
+import os
+import sys
+
+# repo root on sys.path so tests can import the benchmarks package
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+N_EMULATED_DEVICES = 8
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        f"{_flags} --xla_force_host_platform_device_count="
+        f"{N_EMULATED_DEVICES}").strip()
+
+import pytest  # noqa: E402
+
+
+def require_devices(n: int) -> None:
+    """Skip the calling test unless >= n devices are visible."""
+    import jax
+
+    if jax.device_count() < n:
+        pytest.skip(f"needs >= {n} devices, have {jax.device_count()} "
+                    "(XLA host-platform override did not take effect)")
+
+
+@pytest.fixture
+def multi_device():
+    """The emulated device list (skips when unavailable)."""
+    require_devices(N_EMULATED_DEVICES)
+    import jax
+
+    return jax.devices()

@@ -158,41 +158,29 @@ def test_error_feedback_unbiased_over_steps():
                                atol=float(s) / 2)
 
 
-# --- pipeline (multi-device via host platform override) --------------------------
+# --- pipeline (multi-device via the shared conftest fixture) ---------------------
 
 def test_pipeline_forward_matches_sequential():
-    """4-stage Occam pipeline == running the spans sequentially."""
-    import subprocess
-    import sys
+    """4-stage Occam pipeline == running the spans sequentially (in-process
+    on the emulated devices from tests/conftest.py)."""
+    from conftest import require_devices
+    from repro.runtime.pipeline import pipeline_forward
 
-    code = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-import jax, jax.numpy as jnp, numpy as np
-from repro.runtime.pipeline import pipeline_forward
+    require_devices(4)
+    mesh = jax.make_mesh((4,), ("stage",))
+    s_stages, m, mb, d = 4, 3, 2, 8
+    ws = jax.random.normal(jax.random.PRNGKey(0), (s_stages, d, d)) * 0.3
+    xs = jax.random.normal(jax.random.PRNGKey(1), (m, mb, d))
 
-mesh = jax.make_mesh((4,), ("stage",))
-S, M, MB, D = 4, 3, 2, 8
-key = jax.random.PRNGKey(0)
-ws = jax.random.normal(key, (S, D, D)) * 0.3
-xs = jax.random.normal(jax.random.PRNGKey(1), (M, MB, D))
+    def stage_fn(w, x):
+        return jnp.tanh(x @ w)
 
-def stage_fn(w, x):
-    return jnp.tanh(x @ w)
-
-out = pipeline_forward(stage_fn, ws, xs, mesh)
-ref = xs
-for s in range(S):
-    ref = jax.vmap(lambda x: stage_fn(ws[s], x))(ref)
-np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5,
-                           atol=2e-5)
-print("PIPELINE-OK")
-"""
-    env = dict(os.environ, PYTHONPATH="src")
-    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, env=env, cwd=os.path.dirname(
-                             os.path.dirname(os.path.abspath(__file__))))
-    assert "PIPELINE-OK" in res.stdout, res.stderr[-2000:]
+    out = pipeline_forward(stage_fn, ws, xs, mesh)
+    ref = xs
+    for s in range(s_stages):
+        ref = jax.vmap(lambda x, s=s: stage_fn(ws[s], x))(ref)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5,
+                               atol=2e-5)
 
 
 def test_plan_stages_capacity_and_replication():

@@ -1,0 +1,307 @@
+"""Executable STAP runtime tests: the replicated multi-chip span pipeline
+(runtime/stap_pipeline) matches the layer-by-layer oracle across span
+routes, residual payload forwarding, replication, and microbatch padding;
+inter-stage traffic is exactly the DP's boundary quantity; and the fixed
+``pipeline_forward`` output collection introduces no all-reduce."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import require_devices
+from repro.core.graph import chain
+from repro.core.partition import partition_cnn
+from repro.core.stap import plan_replication, staggered_schedule
+from repro.models import cnn
+from repro.models.api import stap_executor
+from repro.runtime import span_engine, stap_pipeline
+
+C, P = "conv", "pool"
+
+
+def vgg_case(hw=16, batch=6, capacity=6000, seed=0):
+    """VGG-style net the DP (@capacity) cuts into 3 spans."""
+    specs = [(C, 3, 1, 1, 8), (C, 3, 1, 1, 8), (P, 2, 2, 0, 0),
+             (C, 3, 1, 1, 16), (C, 3, 1, 1, 16), (P, 2, 2, 0, 0),
+             (C, 3, 1, 1, 16)]
+    net = chain("vgg_mini", specs, in_h=hw, in_w=hw, in_ch=3)
+    res = partition_cnn(net, capacity)
+    params = cnn.init_params(jax.random.PRNGKey(seed), net)
+    xs = jax.random.normal(jax.random.PRNGKey(seed + 1), (batch, hw, hw, 3))
+    ref = jax.vmap(lambda im: cnn.reference_forward(params, im, net))(xs)
+    return net, res, params, xs, ref
+
+
+def assert_close(got, ref):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# Correctness vs the oracle
+# --------------------------------------------------------------------------
+
+def test_stream_matches_reference_unreplicated():
+    require_devices(3)
+    net, res, params, xs, ref = vgg_case()
+    assert res.n_spans >= 3
+    ctr = cnn.TrafficCounter()
+    y, pipe = stap_pipeline.stream(params, xs, net, res, microbatch=2,
+                                   counter=ctr)
+    assert_close(y, ref)
+    # model == machine, independent of the engine behind each stage
+    assert ctr.total == xs.shape[0] * cnn.predicted_transfers(
+        net, res.boundaries)
+
+
+@pytest.mark.slow  # compile-heavy pipeline sweep
+def test_stap_executor_replicated_matches_reference():
+    """Acceptance: >= 3-stage VGG-style net on >= 4 emulated devices with
+    the bottleneck stage replicated (r >= 2) — the one-call API output
+    equals the layer-by-layer reference."""
+    require_devices(6)
+    net, res, params, xs, ref = vgg_case()
+    stages = stap_pipeline.plan_span_stages(net, res)
+    times = stap_pipeline.model_stage_times(net, stages)
+    plan = plan_replication(times, max_chips=len(times) + 1, max_replicas=2)
+    assert max(plan.replicas) >= 2
+    y, pipe = stap_executor(params, xs, net, 6000, microbatch=2,
+                            stage_times=times,
+                            max_chips=len(times) + 1)
+    # stap_executor re-plans internally under the same inputs
+    assert pipe.plan.replicas == plan.replicas
+    assert pipe.schedule.n_stages >= 3
+    assert pipe.schedule.max_replicas * pipe.schedule.n_stages >= 4
+    assert_close(y, ref)
+
+
+def test_stream_residual_spans_and_traffic():
+    """Residual edges crossing partition boundaries: the source map spills
+    into the boundary payload, forwards across intermediate stages, and is
+    consumed downstream; traffic still matches the DP model exactly."""
+    require_devices(3)
+    net = chain("res", [(C, 3, 1, 1, 4)] * 5, in_h=12, in_w=12, in_ch=3,
+                residual_edges=((1, 4), (3, 5)))
+    params = cnn.init_params(jax.random.PRNGKey(0), net)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (4, 12, 12, 3))
+    ref = jax.vmap(lambda im: cnn.reference_forward(params, im, net))(xs)
+    ctr = cnn.TrafficCounter()
+    y, pipe = stap_pipeline.stream(params, xs, net, [2, 3], microbatch=2,
+                                   counter=ctr)
+    assert_close(y, ref)
+    assert ctr.total == 4 * cnn.predicted_transfers(net, [2, 3])
+    # map 1 (source of the crossing edge) rides both boundary payloads
+    assert pipe.stages[0].out_spec.keys == (2, 1)
+    assert pipe.stages[1].out_spec.keys == (3, 1)
+    assert pipe.stages[2].src_keys == (1,)
+
+
+@pytest.mark.slow  # compile-heavy pipeline sweep
+def test_stream_replicated_residual():
+    """Replication composes with residual payload forwarding."""
+    require_devices(6)
+    net = chain("res", [(C, 3, 1, 1, 4)] * 5, in_h=12, in_w=12, in_ch=3,
+                residual_edges=((1, 4),))
+    params = cnn.init_params(jax.random.PRNGKey(2), net)
+    xs = jax.random.normal(jax.random.PRNGKey(3), (6, 12, 12, 3))
+    ref = jax.vmap(lambda im: cnn.reference_forward(params, im, net))(xs)
+    plan = plan_replication((1.0, 4.0, 1.0), max_chips=4)
+    y, _ = stap_pipeline.stream(params, xs, net, [2, 3], microbatch=1,
+                                plan=plan)
+    assert plan.replicas == (1, 2, 1)
+    assert_close(y, ref)
+
+
+@pytest.mark.slow  # compile-heavy pipeline sweep
+def test_stream_pads_partial_batches():
+    """Batch not divisible by microbatch x round width: padded slots are
+    masked dead and dropped from the output."""
+    require_devices(4)
+    net = chain("t", [(C, 3, 1, 1, 4), (C, 3, 2, 1, 8)], in_h=10, in_w=10,
+                in_ch=3)
+    params = cnn.init_params(jax.random.PRNGKey(0), net)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (5, 10, 10, 3))
+    ref = jax.vmap(lambda im: cnn.reference_forward(params, im, net))(xs)
+    plan = plan_replication((1.0, 1.0), max_chips=4)  # (2, 2) replicas
+    y, pipe = stap_pipeline.stream(params, xs, net, [1], microbatch=2,
+                                   plan=plan)
+    assert pipe.schedule.n_slots * pipe.microbatch > 5  # really padded
+    assert y.shape[0] == 5
+    assert_close(y, ref)
+
+
+def test_single_stage_pipeline():
+    """S = 1 degenerates to batched span execution (no ppermute)."""
+    net = chain("t", [(C, 3, 1, 1, 4)], in_h=8, in_w=8, in_ch=3)
+    params = cnn.init_params(jax.random.PRNGKey(0), net)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (3, 8, 8, 3))
+    ref = jax.vmap(lambda im: cnn.reference_forward(params, im, net))(xs)
+    y, _ = stap_pipeline.stream(params, xs, net, [], microbatch=2)
+    assert_close(y, ref)
+
+
+def test_oracle_route_runs_in_pipeline():
+    """A span the DP marks unfit (oversized single layer) still executes
+    as a pipeline stage via the oracle fallback."""
+    require_devices(2)
+    net = chain("t", [(C, 3, 1, 1, 8), (C, 3, 1, 1, 8)], in_h=10, in_w=10,
+                in_ch=3)
+    res = partition_cnn(net, 400)  # below every footprint: lower-bound spans
+    assert any(not sp.fits for sp in res.spans)
+    routes = span_engine.plan_routes(net, res)
+    assert any(r.route == span_engine.ROUTE_ORACLE for r in routes)
+    params = cnn.init_params(jax.random.PRNGKey(0), net)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (2, 10, 10, 3))
+    ref = jax.vmap(lambda im: cnn.reference_forward(params, im, net))(xs)
+    y, _ = stap_pipeline.stream(params, xs, net, res, microbatch=1)
+    assert_close(y, ref)
+
+
+# --------------------------------------------------------------------------
+# Traffic: the payload is the DP's boundary quantity, moved by ppermute
+# --------------------------------------------------------------------------
+
+def test_boundary_payload_is_the_dp_quantity():
+    """Per cut, the inter-stage payload is exactly map_elems(cut) plus the
+    crossing residual sources — the quantity the DP charges per boundary
+    direction (satellite regression for the output-collection fix)."""
+    net = chain("res", [(C, 3, 1, 1, 4)] * 5, in_h=12, in_w=12, in_ch=3,
+                residual_edges=((1, 4),))
+    for cut in (1, 2, 3, 4):
+        spec = stap_pipeline.payload_spec(net, cut)
+        expect = net.map_elems(cut) + sum(
+            net.map_elems(s) for (s, t) in net.residual_edges
+            if s < cut < t)
+        assert spec.elems == expect
+    # without multi-boundary-crossing edges, total link traffic (one hop
+    # per boundary, send+recv) + stream in/out == predicted_transfers
+    net2 = chain("v", [(C, 3, 1, 1, 4)] * 4, in_h=8, in_w=8, in_ch=3)
+    stages = stap_pipeline.plan_span_stages(net2, [1, 3])
+    link = sum(st.out_spec.elems for st in stages[:-1])
+    assert 2 * link + net2.map_elems(0) + net2.map_elems(4) == \
+        cnn.predicted_transfers(net2, [1, 3])
+
+
+def test_pipeline_forward_collects_without_allreduce():
+    """Satellite regression: pipeline_forward must not psum full-size
+    output buffers from every stage — the lowered program carries no
+    all-reduce, and its only collective is the boundary ppermute."""
+    require_devices(4)
+    from repro.runtime.pipeline import pipeline_forward
+
+    mesh = jax.make_mesh((4,), ("stage",))
+    s, m, mb, d = 4, 3, 2, 8
+    ws = jax.random.normal(jax.random.PRNGKey(0), (s, d, d)) * 0.3
+    xs = jax.random.normal(jax.random.PRNGKey(1), (m, mb, d))
+
+    def stage_fn(w, x):
+        return jnp.tanh(x @ w)
+
+    out = pipeline_forward(stage_fn, ws, xs, mesh)
+    ref = xs
+    for k in range(s):
+        ref = jax.vmap(lambda x, k=k: stage_fn(ws[k], x))(ref)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    hlo = jax.jit(lambda w, x: pipeline_forward(stage_fn, w, x, mesh)) \
+        .lower(ws, xs).compile().as_text()
+    assert "all-reduce" not in hlo
+    assert "collective-permute" in hlo
+
+
+def test_pipeline_forward_replicated_stages():
+    """The pipeline_forward generalization: same stage_fn, (stage, replica)
+    mesh, microbatch m staggered onto replica m mod r_i."""
+    require_devices(6)
+    from repro.runtime.pipeline import pipeline_forward
+
+    mesh = stap_pipeline.stap_mesh(3, 2)
+    s, m, mb, d = 3, 4, 2, 8
+    ws = jax.random.normal(jax.random.PRNGKey(0), (s, d, d)) * 0.3
+    xs = jax.random.normal(jax.random.PRNGKey(1), (m, mb, d))
+
+    def stage_fn(w, x):
+        return jnp.tanh(x @ w)
+
+    out = pipeline_forward(stage_fn, ws, xs, mesh, plan=(1, 2, 1))
+    ref = xs
+    for k in range(s):
+        ref = jax.vmap(lambda x, k=k: stage_fn(ws[k], x))(ref)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_mismatched_mesh_raises():
+    """A mesh whose replica axis differs from the schedule's width must
+    fail loudly, not misroute payloads into zeros."""
+    require_devices(6)
+    from repro.runtime.pipeline import pipeline_forward
+
+    mesh = stap_pipeline.stap_mesh(3, 2)
+    ws = jnp.zeros((3, 4, 4))
+    xs = jnp.zeros((2, 2, 4))
+    with pytest.raises(ValueError, match="schedule needs"):
+        pipeline_forward(lambda w, x: x @ w, ws, xs, mesh, plan=(1, 1, 1))
+
+
+def test_natural_chip_budget_caps_replicas_to_devices():
+    """Planning under max_chips = all devices must yield a plan whose
+    (stage, replica) mesh actually fits the devices (max_replicas default)."""
+    require_devices(4)
+    net, res, params, xs, ref = vgg_case()
+    pipe = stap_pipeline.StapPipeline(net, res, 4, 2,
+                                      max_chips=jax.device_count())
+    n_stages = pipe.schedule.n_stages
+    assert n_stages * pipe.schedule.max_replicas <= jax.device_count()
+    assert max(pipe.plan.replicas) >= 2  # the budget still replicates
+
+
+# --------------------------------------------------------------------------
+# Throughput: measured vs plan_replication's prediction (acceptance)
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_stap_throughput_matches_plan_prediction():
+    """On a 3-stage VGG-style net with the bottleneck replicated (r = 2,
+    6 emulated devices), measured pipeline throughput is within 25% of the
+    staggered schedule's prediction under measured (deployment-
+    concurrency) stage service times.
+
+    Timeshared CI hosts have bursty CPU grants, so the calibration runs
+    immediately before the measured run and the check retries."""
+    require_devices(6)
+    import os as _os
+    import statistics
+
+    if (_os.cpu_count() or 1) < 2:
+        pytest.skip("needs >= 2 host cores for replica concurrency")
+    from benchmarks.occam_stap import bench_case, paired_ratio, stage_timers
+
+    net, res = bench_case()
+    params = cnn.init_params(jax.random.PRNGKey(3), net)
+    xs = jax.random.normal(jax.random.PRNGKey(4),
+                           (8,) + net.map_shape(0))
+    ref = jax.vmap(lambda im: cnn.reference_forward(params, im, net))(xs)
+    assert res.n_spans == 3
+    pipe0 = stap_pipeline.StapPipeline(net, res, 8, 1)
+    solo = stage_timers(pipe0, params)
+    t_solo = tuple(statistics.median(ts) for ts in
+                   zip(*(solo() for _ in range(3))))
+    plan = plan_replication(t_solo, max_chips=4, max_replicas=2)
+    assert max(plan.replicas) == 2
+    stap = stap_pipeline.StapPipeline(net, res, 8, 1, plan=plan)
+    y = stap.run(params, xs)
+    assert_close(y, ref)
+
+    sched = staggered_schedule(plan, stap.n_microbatches)
+    dep = stage_timers(pipe0, params, replicas=plan.replicas)
+    best = None
+    for _attempt in range(3):
+        ratio, _t, _w = paired_ratio(dep, lambda: stap.run(params, xs),
+                                     sched, reps=3)
+        best = ratio if best is None or abs(ratio - 1) < abs(best - 1) \
+            else best
+        if abs(best - 1) <= 0.25:
+            break
+    assert abs(best - 1) <= 0.25, \
+        f"measured/predicted throughput off by {best:.2f}x"
