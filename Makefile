@@ -3,14 +3,30 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test-fast test bench
+.PHONY: lint test-fast test bench
+
+# Lint gate: no tracked bytecode, then ruff (config in pyproject.toml).
+# ruff is a dev extra (requirements-dev.txt) — skipped with a notice when
+# the interpreter doesn't have it, so the baked CI image still passes.
+lint:
+	@bad=$$(git ls-files '*.pyc' '*.pyo' '__pycache__/*' 2>/dev/null); \
+	if [ -n "$$bad" ]; then \
+		echo "tracked bytecode files (commit e7bee5b regression):"; \
+		echo "$$bad"; exit 1; \
+	fi
+	@if $(PY) -c "import ruff" 2>/dev/null; then \
+		$(PY) -m ruff check src tests benchmarks examples; \
+	else \
+		echo "ruff not installed — lint skipped" \
+		     "(pip install -r requirements-dev.txt)"; \
+	fi
 
 # Fast tier: everything but the @pytest.mark.slow sweeps (< 2 min).
-test-fast:
+test-fast: lint
 	$(PY) -m pytest -q -m "not slow"
 
 # Full suite, fail-fast (the ROADMAP tier-1 verify command).
-test:
+test: lint
 	$(PY) -m pytest -x -q
 
 bench:

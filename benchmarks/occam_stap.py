@@ -1,6 +1,8 @@
 """Executable STAP benchmark: unreplicated pipeline vs STAP-replicated vs
 single-device ``occam_forward_jit``, with measured throughput checked
 against ``plan_replication``'s prediction (paper §III-E made runnable).
+Pipelines are built through the staged deployment API (``repro.occam``:
+plan -> place -> compile), exercising the same surface serving uses.
 
 Methodology: stage service times are *measured*, not modeled, at two
 concurrency levels —
@@ -209,32 +211,38 @@ def bench_case():
 def main() -> None:
     import jax
 
-    from repro.core.stap import plan_replication, staggered_schedule
+    from repro import occam
     from repro.models import cnn
-    from repro.runtime.stap_pipeline import StapPipeline
 
     net, res = bench_case()
     params = cnn.init_params(jax.random.PRNGKey(0), net)
     xs = jax.random.normal(jax.random.PRNGKey(1), (BATCH, HW, HW, 3))
     m = BATCH // MICROBATCH
 
-    unrep = StapPipeline(net, res, BATCH, MICROBATCH)
+    # staged deployment API: one Plan, two Placements (unreplicated vs
+    # STAP water-filled onto the measured bottleneck)
+    plan = occam.plan(net, CAPACITY, batch=MICROBATCH)
+    assert plan.boundaries == list(res.boundaries)
+    unrep_dep = plan.place(pipeline=True, microbatch=MICROBATCH).compile()
+    unrep = unrep_dep.pipeline(BATCH)
     solo_sampler = stage_timers(unrep, params)
     t_plan = tuple(statistics.median(ts) for ts in
                    zip(*(solo_sampler() for _ in range(3))))
 
     # STAP: one extra chip, water-filled onto the measured bottleneck
     s = len(t_plan)
-    plan1 = plan_replication(t_plan)                           # r_i = 1
-    plan2 = plan_replication(t_plan, max_chips=s + 1,
-                             max_replicas=N_DEVICES // s)
-    sched1 = staggered_schedule(plan1, m)
-    sched2 = staggered_schedule(plan2, m)
+    place1 = plan.place(replicas=(1,) * s, stage_times=t_plan,
+                        microbatch=MICROBATCH)
+    place2 = plan.place(chips=s + 1, stage_times=t_plan,
+                        max_replicas=N_DEVICES // s, microbatch=MICROBATCH)
+    plan2 = place2.stap
+    sched1 = place1.schedule(m)
+    sched2 = place2.schedule(m)
 
     # the CI host's CPU grant is bursty on minute scales; paired sampling
     # cancels drift within an attempt, best-of-N covers a regime flip
     # between an attempt's calibration and its measured run
-    stap = StapPipeline(net, res, BATCH, MICROBATCH, plan=plan2)
+    stap = place2.compile().pipeline(BATCH)
     dep_sampler = stage_timers(unrep, params, replicas=plan2.replicas)
     attempts = []
     for _ in range(3):
@@ -280,8 +288,7 @@ def main() -> None:
         "measurement_attempts": len(attempts),
         "attempt_max_deviations": [round(d, 3) for d, _ in attempts],
         "link_elems_per_image": stap.link_elems_per_image,
-        "dp_transfer_elems_per_image": cnn.predicted_transfers(
-            net, res.boundaries),
+        "dp_transfer_elems_per_image": plan.predicted_transfers,
     }
     os.makedirs(os.path.dirname(_OUT), exist_ok=True)
     with open(_OUT, "w") as f:

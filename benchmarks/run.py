@@ -2,7 +2,9 @@
 
 Prints ``name,us_per_call,derived`` CSV (derived = the headline number the
 paper reports for that artifact). Roofline rows appear when dry-run
-artifacts exist under results/dryrun.
+artifacts exist under results/dryrun. Executable benchmarks
+(``occam_stap``) drive the staged deployment API (``repro.occam``:
+plan -> place -> compile -> run) — the same surface serving uses.
 
     PYTHONPATH=src python -m benchmarks.run
 """

@@ -1,11 +1,12 @@
-"""The paper, end to end on one CNN: partition ResNet-34 with the DP,
-execute it as a streaming multi-span pipeline, validate traffic, and plan
-its STAP deployment.
+"""The paper, end to end on one CNN: plan ResNet-34's deployment with the
+staged API (DP partition + engine routes), validate traffic, and place
+its STAP pipeline under several chip budgets.
 
     PYTHONPATH=src python examples/occam_cnn_pipeline.py
 """
-from repro.core.partition import partition_cnn, partition_report
-from repro.core.stap import plan_replication, simulate
+from repro import occam
+from repro.core.partition import partition_report
+from repro.core.stap import simulate
 from repro.core.traffic import (MachineModel, base_traffic, compare_schemes,
                                 occam_traffic)
 from repro.models.zoo import get_network
@@ -13,9 +14,11 @@ from repro.models.zoo import get_network
 CAP = 3 * 1024 * 1024
 
 net = get_network("resnet34")
-part = partition_cnn(net, CAP)
-print(f"ResNet-34 -> {part.n_spans} spans at 3MB "
-      f"(paper Table II: 10 spans)")
+plan = occam.plan(net, CAP)
+part = plan.partition
+print(f"ResNet-34 -> {plan.n_spans} spans at 3MB "
+      f"(paper Table II: 10 spans); routes "
+      f"{sorted(set(r.route for r in plan.routes))}")
 rep = partition_report(net, CAP)
 for r in rep:
     print(f"  span({r['start']:3d},{r['end']:3d}) tile_rows={r['occam_tile_rows']:3d} "
@@ -32,14 +35,18 @@ r = compare_schemes(net, CAP)
 print(f"modeled speedup {r['speedup_occam']:.2f}x, energy saving "
       f"{r['energy_saving_occam']:.0%}")
 
-# deploy: each span on its own chip; compute per-span latency from MACs
+# deploy: each span on its own chip; compute per-span latency from MACs,
+# then place the plan under growing chip budgets (planning only — pass
+# max_replicas to lift the one-host mesh cap)
 m = MachineModel()
 span_macs = [sum(net.layers[i].macs for i in range(sp.start, sp.end))
              for sp in part.spans]
 times = [mc / m.macs_per_sec * 1e6 for mc in span_macs]  # us
 print(f"\nstage latencies (us): {[round(t, 1) for t in times]}")
-for budget in (part.n_spans, part.n_spans + 4, part.n_spans + 8):
-    plan = plan_replication(times, max_chips=budget)
-    stats = simulate(plan, 500)
-    print(f"  {budget:2d} chips: replicas {plan.replicas} -> "
-          f"{stats.throughput*1e6:.2f} img/s/1e6, latency {stats.mean_latency:.0f}us")
+for budget in (plan.n_spans, plan.n_spans + 4, plan.n_spans + 8):
+    placement = plan.place(chips=budget, stage_times=times,
+                           max_replicas=budget)
+    stats = simulate(placement.stap, 500)
+    print(f"  {budget:2d} chips: replicas {placement.replicas} -> "
+          f"{stats.throughput*1e6:.2f} img/s/1e6, "
+          f"latency {stats.mean_latency:.0f}us")

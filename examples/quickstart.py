@@ -1,14 +1,17 @@
 """Quickstart: Occam's four contributions in ~60 lines.
 
+Execution goes through the staged deployment API —
+``occam.plan -> place -> compile -> run`` (docs/deployment_api.md).
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro import occam
 from repro.core.closure import max_tile_rows, span_closure_elems
 from repro.core.partition import partition_cnn
-from repro.core.stap import plan_replication, simulate
+from repro.core.stap import simulate
 from repro.core.traffic import compare_schemes
 from repro.models import cnn
 from repro.models.zoo import get_network
@@ -36,8 +39,7 @@ print(f"off-chip traffic reduction: {r['traffic_reduction_occam']:.1f}x; "
       f"modeled speedup {r['speedup_occam']:.2f}x vs base, "
       f"{r['speedup_occam_vs_lf']:.2f}x vs Layer Fusion")
 
-# --- execution: streaming == oracle, transfers == DP cost --------------------
-small = get_network("alexnet")
+# --- execution: plan -> place -> compile -> run ------------------------------
 key = jax.random.PRNGKey(0)
 # miniature input for a quick CPU run
 from repro.core.graph import chain
@@ -46,20 +48,36 @@ tiny = chain("tiny", [("conv", 3, 1, 1, 8), ("conv", 3, 1, 1, 8),
              in_h=16, in_w=16, in_ch=3)
 params = cnn.init_params(key, tiny)
 x = jax.random.normal(jax.random.PRNGKey(1), (16, 16, 3))
-res = partition_cnn(tiny, 3000)
-ctr = cnn.TrafficCounter()
-y_stream = cnn.occam_forward(params, x, tiny, res.boundaries, ctr)
+plan = occam.plan(tiny, 3000)           # DP partition + engine routes
+dep = plan.place().compile()            # single chip, auto backend
+y_stream = dep.run(params, x)
 y_ref = cnn.reference_forward(params, x, tiny)
 np.testing.assert_allclose(np.asarray(y_stream), np.asarray(y_ref),
                            rtol=1e-5, atol=1e-5)
-assert ctr.total == res.transfers
-print(f"streaming execution == oracle; measured transfers "
-      f"{ctr.total} == DP prediction {int(res.transfers)}")
+report = dep.report()                   # measured vs predicted, one object
+assert report.matches_prediction
+print(f"staged execution == oracle; measured transfers "
+      f"{int(report.measured_elems)} == DP prediction "
+      f"{int(plan.predicted_transfers)} "
+      f"(routes: {[r.route for r in plan.routes]})")
+# plans are serializable: ship the JSON, compile on the serving host
+plan2 = occam.plan_from_json(plan.to_json())
+assert plan2.boundaries == plan.boundaries
 
 # --- C4: STAP ----------------------------------------------------------------
-plan = plan_replication([15, 35, 40, 10], target_period=20)
+from repro.core.stap import plan_replication
+splan = plan_replication([15, 35, 40, 10], target_period=20)
 # sub-bottleneck arrival rate: latency stays the bare pipeline sum (§III-E)
-stats = simulate(plan, n_jobs=100, arrival_period=plan.bottleneck_period)
-print(f"STAP 15-35-40-10 with replicas {plan.replicas}: "
+stats = simulate(splan, n_jobs=100, arrival_period=splan.bottleneck_period)
+print(f"STAP 15-35-40-10 with replicas {splan.replicas}: "
       f"throughput 1/{1/stats.throughput:.0f} per unit (paper: 1/20), "
       f"latency {stats.mean_latency:.0f} (paper: 100)")
+# the same replication planning, staged: a multi-chip Placement of the
+# tiny net (plan.place(chips=...) wraps plan_replication + the schedule;
+# max_replicas lifts the default one-device mesh cap — planning only)
+placement = plan.place(chips=plan.n_spans + 1, max_replicas=2)
+unrep = plan.place(pipeline=True)
+print(f"plan.place({plan.n_spans + 1} chips): replicas "
+      f"{placement.replicas} on a {plan.n_spans}-stage STAP pipeline, "
+      f"throughput x{placement.stap.throughput / unrep.stap.throughput:.1f} "
+      f"over unreplicated")

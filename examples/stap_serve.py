@@ -1,8 +1,10 @@
-"""Minimal STAP streaming-serving demo (paper §III-E, executable).
+"""Minimal STAP streaming-serving demo (paper §III-E, executable) on the
+staged deployment API: ``occam.plan -> place -> compile -> run``.
 
-Build a VGG-style net -> Occam DP partition -> STAP replication plan ->
-stream a batch of images through the replicated multi-chip span pipeline,
-then print measured throughput and the model-vs-machine traffic check.
+Build a VGG-style net -> Occam DP plan -> multi-chip STAP placement ->
+stream batches through the compiled deployment, then print measured
+throughput and the model-vs-machine traffic check from one unified
+TrafficReport.
 
     PYTHONPATH=src python examples/stap_serve.py
 """
@@ -18,52 +20,50 @@ import time
 
 import jax
 
+from repro import occam
 from repro.core.graph import chain
-from repro.core.partition import partition_cnn
-from repro.core.stap import plan_replication
 from repro.models import cnn
-from repro.runtime import stap_pipeline
 
 C, P = "conv", "pool"
 
-# 1. the net and its DP-optimal partition (3 spans at this capacity)
+# 1. the net and its deployment plan (DP partition + engine routes); the
+#    plan is a serializable artifact — ship plan.to_json() to serving hosts
 specs = [(C, 3, 1, 1, 8), (C, 3, 1, 1, 8), (P, 2, 2, 0, 0),
          (C, 3, 1, 1, 16), (C, 3, 1, 1, 16), (P, 2, 2, 0, 0),
          (C, 3, 1, 1, 16)]
 net = chain("vgg_mini", specs, in_h=16, in_w=16, in_ch=3)
-result = partition_cnn(net, 6000)
-print(f"partition: boundaries={result.boundaries} "
-      f"({result.n_spans} spans, {result.transfers:.0f} elems moved/image)")
+plan = occam.plan(net, 6000, batch=2)   # batch=2 -> 2 images per slot
+print(f"plan: boundaries={plan.boundaries} ({plan.n_spans} spans, "
+      f"{plan.predicted_transfers} elems moved/image, "
+      f"routes {[r.route for r in plan.routes]})")
 
-# 2. STAP: replicate the modeled bottleneck span under a chip budget
-stages = stap_pipeline.plan_span_stages(net, result)
-times = stap_pipeline.model_stage_times(net, stages)
-plan = plan_replication(times, max_chips=len(stages) + 1, max_replicas=2)
-print(f"stap plan: replicas={plan.replicas} on a "
-      f"{len(stages)}x{max(plan.replicas)} (stage, replica) mesh "
-      f"({plan.chips} chips)")
+# 2. place: replicate the modeled bottleneck span under a chip budget
+placement = plan.place(chips=plan.n_spans + 1, max_replicas=2)
+print(f"placement: replicas={placement.replicas} on a "
+      f"{plan.n_spans}x{max(placement.replicas)} (stage, replica) mesh "
+      f"({placement.chips} chips)")
 
-# 3. stream a batch through the replicated pipeline
+# 3. compile once, then stream batches through the replicated pipeline
+dep = placement.compile()
 params = cnn.init_params(jax.random.PRNGKey(0), net)
 batch = 16
 xs = jax.random.normal(jax.random.PRNGKey(1), (batch,) + net.map_shape(0))
-counter = cnn.TrafficCounter()
-y, pipe = stap_pipeline.stream(params, xs, net, result, microbatch=2,
-                               plan=plan, counter=counter)
-jax.block_until_ready(y)
+jax.block_until_ready(dep.run(params, xs))   # build + warm
 
 t0 = time.perf_counter()          # steady-state: pipeline already compiled
-jax.block_until_ready(pipe.run(params, xs))
+jax.block_until_ready(dep.run(params, xs))
 dt = time.perf_counter() - t0
-rep = pipe.report()
+pipe_rep = dep.pipeline(batch).report()
 print(f"streamed {batch} images in {dt*1e3:.1f} ms "
-      f"({batch/dt:.1f} images/s; schedule: {rep['n_rounds']} rounds x "
-      f"{rep['round_width']} slots, {rep['n_ticks']} ticks)")
+      f"({batch/dt:.1f} images/s; schedule: {pipe_rep['n_rounds']} rounds x "
+      f"{pipe_rep['round_width']} slots, {pipe_rep['n_ticks']} ticks)")
 
-# 4. model == machine: off-chip traffic equals the DP's prediction
-predicted = batch * cnn.predicted_transfers(net, result.boundaries)
-print(f"traffic: counted={counter.total} predicted={predicted} "
-      f"({'OK' if counter.total == predicted else 'MISMATCH'})")
-print(f"inter-stage links move {rep['link_elems_per_image']} elems/image "
-      f"(boundary payloads only)")
-print("serving OK" if counter.total == predicted else "serving MISMATCH")
+# 4. model == machine: one TrafficReport holds predicted and measured
+report = dep.report()
+print(f"traffic: counted={int(report.measured_elems)} over {report.images} "
+      f"images, predicted {int(report.offchip_elems)}/image "
+      f"({'OK' if report.matches_prediction else 'MISMATCH'})")
+print(f"inter-stage links move {pipe_rep['link_elems_per_image']} "
+      f"elems/image of boundary payloads (the DP quantity) + "
+      f"{pipe_rep['conveyor_elems_per_image']:.0f} of input conveyor")
+print("serving OK" if report.matches_prediction else "serving MISMATCH")

@@ -163,3 +163,30 @@ def chain(name: str, specs: Iterable[tuple], in_h: int, in_w: int, in_ch: int,
         layers.append(l)
         h, w, c = l.out_h, l.out_w, l.out_ch
     return NetSpec(name, tuple(layers), tuple(residual_edges))
+
+
+# --------------------------------------------------------------------------
+# Serialization (shipped inside deployment Plans — repro.occam)
+# --------------------------------------------------------------------------
+
+def net_to_dict(net: NetSpec) -> dict:
+    """JSON-safe spec of the net: input geometry + per-layer chain tuples.
+
+    Layer *names* are not preserved — ``net_from_dict`` rebuilds them with
+    :func:`chain`'s ``{name}.{idx}`` scheme. Names carry no semantics
+    (geometry and edges fully determine partitioning and execution)."""
+    h, w, c = net.map_shape(0)
+    return {
+        "name": net.name,
+        "in_h": h, "in_w": w, "in_ch": c,
+        "layers": [[l.kind, l.k, l.stride, l.padding, l.out_ch]
+                   for l in net.layers],
+        "residual_edges": [list(e) for e in net.residual_edges],
+    }
+
+
+def net_from_dict(d: dict) -> NetSpec:
+    return chain(d["name"], [tuple(s) for s in d["layers"]],
+                 in_h=d["in_h"], in_w=d["in_w"], in_ch=d["in_ch"],
+                 residual_edges=tuple((int(s), int(t))
+                                      for (s, t) in d["residual_edges"]))

@@ -29,17 +29,72 @@ from .graph import NetSpec
 from .partition import PartitionResult, partition_cnn
 
 
+@dataclasses.dataclass
+class TrafficCounter:
+    """Mutable off-chip transfer accumulator, shared by every execution
+    engine (interpreted / scan / pallas / STAP pipeline) so model==machine
+    checks are engine-independent. Formerly ``repro.models.cnn
+    .TrafficCounter``; the name there remains as an alias."""
+
+    reads: int = 0
+    writes: int = 0
+
+    @property
+    def total(self) -> int:
+        return self.reads + self.writes
+
+
 @dataclasses.dataclass(frozen=True)
 class TrafficReport:
+    """One unified traffic object: the analytical per-image prediction,
+    optionally carrying what an execution actually measured.
+
+    The first five fields are the paper's per-image model (always set).
+    ``measured_reads`` / ``measured_writes`` / ``images`` are populated by
+    :meth:`with_measured` from a :class:`TrafficCounter` after a run —
+    measured vs predicted live in one object, so ``matches_prediction``
+    is the model==machine check."""
+
     scheme: str
     feature_elems: float   # off-chip feature-map elements moved / image
     filter_elems: float    # off-chip filter elements moved / image
     compute_macs: float    # MACs / image (recompute included)
     boundary_elems: float  # chip-to-chip (PCIe/ICI) elements / image
+    measured_reads: float | None = None   # counted over ``images`` images
+    measured_writes: float | None = None
+    images: int | None = None
 
     @property
     def offchip_elems(self) -> float:
         return self.feature_elems + self.filter_elems
+
+    @property
+    def measured_elems(self) -> float | None:
+        if self.measured_reads is None:
+            return None
+        return self.measured_reads + self.measured_writes
+
+    @property
+    def measured_per_image(self) -> float | None:
+        if self.measured_elems is None or not self.images:
+            return None
+        return self.measured_elems / self.images
+
+    @property
+    def matches_prediction(self) -> bool | None:
+        """model == machine: measured per-image off-chip traffic equals the
+        prediction. ``None`` until a measurement is attached."""
+        per_image = self.measured_per_image
+        if per_image is None:
+            return None
+        return math.isclose(per_image, self.offchip_elems, rel_tol=1e-9)
+
+    def with_measured(self, counter: TrafficCounter,
+                      images: int) -> "TrafficReport":
+        """Attach a run's counted transfers (over ``images`` images)."""
+        return dataclasses.replace(self, measured_reads=counter.reads,
+                                   measured_writes=counter.writes,
+                                   images=images)
 
 
 def base_traffic(net: NetSpec, batch: int = 1) -> TrafficReport:

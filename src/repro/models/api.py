@@ -1,12 +1,28 @@
-"""Unified model API: one entry point per architecture family.
+"""Unified model API — and the deprecated one-call CNN executor shims.
 
-``build_model(cfg)`` returns a ModelAPI whose four functions cover the
-whole shape grid: train_loss (train_4k), prefill (prefill_32k),
-decode_step (decode_32k / long_500k).
+Two things live here:
+
+* ``build_model(cfg)`` returns a ModelAPI whose four functions cover the
+  whole LM shape grid: train_loss (train_4k), prefill (prefill_32k),
+  decode_step (decode_32k / long_500k).
+* ``span_executor`` / ``stap_executor`` — the legacy one-call CNN entry
+  points, now thin **deprecated** shims over the staged deployment API
+  (``repro.occam``). Occam execution is inherently staged — DP
+  partitioning for a capacity, chip placement with STAP replication, then
+  compiled execution with boundary-only off-chip traffic — and the staged
+  surface exposes each stage as a first-class, serializable object::
+
+      from repro import occam
+      dep = occam.plan(net, capacity).place(...).compile(...)
+      y = dep.run(params, xs); dep.report()
+
+  New code should use that API directly (see ``docs/deployment_api.md``);
+  the shims exist so pre-PR-3 callers keep working bit-identically.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable
 
 import jax
@@ -53,21 +69,25 @@ def build_model(cfg: ModelCfg, dtype=jnp.bfloat16) -> ModelAPI:
 
 def span_executor(params: list[dict], xs: jax.Array, net,
                   capacity_elems: int, *, counter=None, interpret=None):
-    """One-call CNN entry point for the compiled span engine.
+    """Deprecated shim: single-device Occam execution in one call.
 
-    Runs Occam's DP for ``capacity_elems``, then executes every span on the
-    fastest engine that can take it (fused Pallas kernel / jitted scan /
-    oracle — see ``repro.runtime.span_engine``). Returns ``(y, result)``
-    where ``result`` is the :class:`PartitionResult` that was executed.
+    Equivalent to ``occam.plan(net, capacity_elems, batch=B).place()
+    .compile(interpret=interpret).run(params, xs)`` (bit-identical — the
+    staged API runs the same DP, routes, and engines). Returns
+    ``(y, result)`` where ``result`` is the executed
+    :class:`~repro.core.partition.PartitionResult`.
     """
-    from repro.core.partition import partition_cnn
-    from repro.runtime.span_engine import execute_partition
+    warnings.warn(
+        "span_executor is deprecated; use repro.occam: "
+        "plan(net, capacity).place().compile().run(params, xs)",
+        DeprecationWarning, stacklevel=2)
+    from repro import occam
 
     batch = xs.shape[0] if xs.ndim == 4 else 1
-    result = partition_cnn(net, capacity_elems, batch=batch)
-    y = execute_partition(params, xs, net, result, counter=counter,
-                          interpret=interpret)
-    return y, result
+    dep = occam.plan(net, capacity_elems, batch=batch).place() \
+        .compile(interpret=interpret)
+    y = dep.run(params, xs, counter=counter)
+    return y, dep.plan.partition
 
 
 def stap_executor(params: list[dict], xs: jax.Array, net,
@@ -75,28 +95,31 @@ def stap_executor(params: list[dict], xs: jax.Array, net,
                   stage_times=None, max_chips=None, max_replicas=None,
                   target_period=None, mesh=None, devices=None,
                   counter=None):
-    """One-call CNN entry point for the executable STAP runtime (C4).
+    """Deprecated shim: multi-chip STAP pipeline execution in one call.
 
-    Runs Occam's DP for ``capacity_elems``, plans bottleneck replication
-    (``repro.core.stap.plan_replication`` under ``max_chips`` /
-    ``target_period``; unreplicated by default; ``max_replicas`` defaults
-    to what the available devices can hold as a (stage, replica) mesh),
-    and streams ``xs`` through the replicated multi-chip span pipeline
-    (``repro.runtime.stap_pipeline``). Returns ``(y, pipeline)`` where
-    ``pipeline`` is the compiled :class:`StapPipeline` — reuse it via
-    ``pipeline.run`` to serve more batches without retracing, or inspect
-    ``pipeline.report()`` / ``pipeline.plan`` / ``pipeline.schedule``.
+    Equivalent to ``occam.plan(net, capacity_elems, batch=microbatch)
+    .place(chips=max_chips, stage_times=..., pipeline=True)
+    .compile().run(params, xs)`` (bit-identical — same plan defaulting,
+    same SPMD program). Returns ``(y, pipeline)`` where ``pipeline`` is
+    the compiled :class:`~repro.runtime.stap_pipeline.StapPipeline`.
     """
-    from repro.core.partition import partition_cnn
-    from repro.runtime.stap_pipeline import stream
+    warnings.warn(
+        "stap_executor is deprecated; use repro.occam: "
+        "plan(net, capacity, batch=microbatch).place(chips=..., "
+        "pipeline=True).compile().run(params, xs)",
+        DeprecationWarning, stacklevel=2)
+    from repro import occam
 
     if xs.ndim != 4:
         raise ValueError("stap_executor streams batched (B, H, W, C)")
-    result = partition_cnn(net, capacity_elems, batch=microbatch)
-    return stream(params, xs, net, result, microbatch=microbatch,
-                  stage_times=stage_times, max_chips=max_chips,
-                  max_replicas=max_replicas, target_period=target_period,
-                  mesh=mesh, devices=devices, counter=counter)
+    dep = occam.plan(net, capacity_elems, batch=microbatch) \
+        .place(chips=max_chips, stage_times=stage_times,
+               max_replicas=max_replicas, target_period=target_period,
+               microbatch=microbatch, mesh=mesh, devices=devices,
+               pipeline=True) \
+        .compile()
+    y = dep.run(params, xs, counter=counter)
+    return y, dep.pipeline(xs.shape[0])
 
 
 def make_batch(cfg: ModelCfg, batch: int, seq: int, key=None,

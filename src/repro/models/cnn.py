@@ -35,15 +35,13 @@ the DP's predicted ``OP[0,n].X`` (model == machine).
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import closure
+from repro.core import closure, traffic
 from repro.core.graph import LayerSpec, NetSpec
 from repro.kernels.fused_span import rowops
 
@@ -196,14 +194,9 @@ class RowRing:
         return jnp.stack(out)
 
 
-@dataclasses.dataclass
-class TrafficCounter:
-    reads: int = 0
-    writes: int = 0
-
-    @property
-    def total(self) -> int:
-        return self.reads + self.writes
+# Accounting lives with the analytical models (one unified traffic module);
+# the name is kept here because every engine and test refers to it.
+TrafficCounter = traffic.TrafficCounter
 
 
 def count_span_reads(counter: TrafficCounter | None, net: NetSpec, a: int,

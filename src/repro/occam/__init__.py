@@ -1,0 +1,43 @@
+"""Staged Occam deployment API: ``plan -> place -> compile -> run``.
+
+The paper's pipeline is inherently staged — DP partitioning for a capacity
+(§III-D), chip placement with STAP replication (§III-E), then execution
+with boundary-only off-chip traffic — and this package is that pipeline as
+an AOT-style API (modeled on JAX's ``lower``/``compile`` staging)::
+
+    from repro import occam
+
+    plan = occam.plan(net, capacity_elems, batch=1)   # DP + engine routes
+    plan.save("resnet18.plan.json")                   # ships to serving
+
+    dep = plan.place().compile()                      # single chip
+    y = dep.run(params, xs)
+    dep.report()                                      # measured vs predicted
+
+    dep = (plan.place(chips=8, stage_times=measured)  # STAP pipeline
+               .compile(backend="auto"))
+    for y in dep.stream(params, batches):
+        ...
+
+Execution backends live in :mod:`repro.occam.registry`; new engines
+(real-TPU kernels, continuous-stream bodies) are registrations, not
+rewrites. The legacy one-call entry points
+(``repro.models.api.span_executor`` / ``stap_executor``) are deprecated
+shims over this surface. See ``docs/deployment_api.md``.
+"""
+from . import registry
+from .deploy import Deployment
+from .place import PIPELINE, SINGLE, Placement
+from .plan import (PLAN_FORMAT_VERSION, Plan, load_plan, plan,
+                   plan_from_dict, plan_from_json)
+from .registry import (AUTO, BackendError, EngineSpec, RouteContext,
+                       backend_names, get_engine, register_engine,
+                       registered_engines, unregister_engine)
+
+__all__ = [
+    "AUTO", "PIPELINE", "PLAN_FORMAT_VERSION", "SINGLE",
+    "BackendError", "Deployment", "EngineSpec", "Placement", "Plan",
+    "RouteContext", "backend_names", "get_engine", "load_plan", "plan",
+    "plan_from_dict", "plan_from_json", "register_engine",
+    "registered_engines", "registry", "unregister_engine",
+]

@@ -1,0 +1,147 @@
+"""Stages 3-4 of the deployment API: ``Placement.compile`` ->
+:class:`Deployment` -> ``run`` / ``stream`` / ``report``.
+
+Compiling binds the placement to engines through the registry: under
+``backend="auto"`` each span keeps the route the planner picked; a forced
+backend re-routes every span onto one engine (or raises
+:class:`~repro.occam.registry.BackendError` if a span is ineligible —
+never a silent substitution).
+
+* Single-device deployments execute through
+  ``repro.runtime.span_engine.execute_partition``.
+* Pipeline deployments build (and cache, per stream batch size) a
+  ``repro.runtime.stap_pipeline.StapPipeline`` over the placement's
+  :class:`~repro.core.stap.StapPlan`. Under ``shard_map`` the Pallas
+  kernel needs a real TPU, so kernel-routed spans execute their scan twin
+  (same schedule, same row math); forcing ``backend="pallas"`` on a
+  pipeline placement is therefore rejected, as is the Python
+  ``interpreted`` specification (it cannot trace under SPMD).
+
+Every ``run`` accumulates off-chip transfers into one
+:class:`~repro.core.traffic.TrafficCounter`; ``report()`` returns the
+plan's predicted per-image :class:`~repro.core.traffic.TrafficReport`
+with the measurement attached — model vs machine in one object.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Iterator, Sequence
+
+import jax
+
+from repro.core.traffic import TrafficCounter, TrafficReport
+from repro.runtime import span_engine
+from repro.runtime.stap_pipeline import StapPipeline
+
+from . import registry
+from .place import PIPELINE, SINGLE, Placement
+
+class Deployment:
+    """A compiled, runnable placement. Build via ``Placement.compile``."""
+
+    def __init__(self, placement: Placement, backend: str = registry.AUTO,
+                 *, mesh=None, devices=None, interpret: bool | None = None):
+        if backend != registry.AUTO:
+            spec = registry.get_engine(backend)  # unknown names fail here
+            if placement.kind == PIPELINE and not spec.spmd_capable:
+                spmd = [registry.AUTO] + [e.name for e in
+                                          registry.registered_engines()
+                                          if e.spmd_capable]
+                raise registry.BackendError(
+                    f"backend {backend!r} cannot drive a pipeline "
+                    f"placement (stage bodies run under shard_map; its "
+                    f"EngineSpec is not spmd_capable — choose one of "
+                    f"{spmd})")
+        self.placement = placement
+        self.plan = placement.plan
+        self.backend = backend
+        self.mesh = mesh
+        self.devices = devices
+        self.interpret = interpret
+        # Forced backends re-route at compile time; BackendError surfaces
+        # any span the engine cannot take.
+        self.routes = self.plan.routes if backend == registry.AUTO else \
+            span_engine.plan_routes(self.plan.net, self.plan.partition,
+                                    backend=backend)
+        self.counter = TrafficCounter()
+        self._images = 0
+        self._pipes: dict[int, StapPipeline] = {}
+
+    # -- execution ----------------------------------------------------------
+
+    @property
+    def kind(self) -> str:
+        return self.placement.kind
+
+    def pipeline(self, batch: int) -> StapPipeline:
+        """The compiled STAP pipeline for streams of ``batch`` images
+        (cached — repeated ``run`` calls at one batch size never
+        retrace)."""
+        if self.kind != PIPELINE:
+            raise ValueError("single-device deployment has no pipeline; "
+                             "use .run directly")
+        pipe = self._pipes.get(batch)
+        if pipe is None:
+            pipe = StapPipeline(
+                self.plan.net, self.plan.partition, batch,
+                self.placement.microbatch, plan=self.placement.stap,
+                mesh=self.mesh, devices=self.devices, routes=self.routes)
+            self._pipes[batch] = pipe
+        return pipe
+
+    def run(self, params: Sequence[dict], xs: jax.Array,
+            counter: TrafficCounter | None = None) -> jax.Array:
+        """Execute one batch. ``counter``, if given, also receives this
+        call's transfers (the deployment always accumulates its own)."""
+        r0, w0 = self.counter.reads, self.counter.writes
+        if self.kind == SINGLE:
+            y = span_engine.execute_partition(
+                params, xs, self.plan.net, self.plan.partition,
+                counter=self.counter, interpret=self.interpret,
+                routes=self.routes)
+            self._images += xs.shape[0] if xs.ndim == 4 else 1
+        else:
+            if xs.ndim != 4:
+                raise ValueError("pipeline deployments stream batched "
+                                 "(B, H, W, C)")
+            y = self.pipeline(xs.shape[0]).run(params, xs,
+                                               counter=self.counter)
+            self._images += xs.shape[0]
+        if counter is not None:
+            counter.reads += self.counter.reads - r0
+            counter.writes += self.counter.writes - w0
+        return y
+
+    def stream(self, params: Sequence[dict],
+               batches: Iterable[jax.Array]) -> Iterator[jax.Array]:
+        """Serve a stream of batches (generator; see ``run``)."""
+        for xs in batches:
+            yield self.run(params, xs)
+
+    # -- reporting ----------------------------------------------------------
+
+    def report(self) -> TrafficReport:
+        """Predicted and measured traffic in one object (per-image
+        prediction + everything counted since compile)."""
+        return self.plan.predicted.with_measured(self.counter, self._images)
+
+    def describe(self) -> dict:
+        """Machine-readable deployment configuration (benchmarks, logs)."""
+        d = {
+            "kind": self.kind,
+            "backend": self.backend,
+            "boundaries": self.plan.boundaries,
+            "routes": [[r.start, r.end, r.route] for r in self.routes],
+            "batch": self.plan.batch,
+            "capacity_elems": self.plan.capacity_elems,
+            "predicted_transfers_per_image": self.plan.predicted_transfers,
+            "images_run": self._images,
+            "measured_transfers": self.counter.total,
+        }
+        if self.kind == PIPELINE:
+            d["replicas"] = list(self.placement.replicas)
+            d["chips"] = self.placement.chips
+            d["microbatch"] = self.placement.microbatch
+            pipes = {b: p.report() for b, p in self._pipes.items()}
+            if pipes:
+                d["pipelines"] = pipes
+        return d

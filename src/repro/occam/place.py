@@ -1,0 +1,126 @@
+"""Stage 2 of the deployment API: ``Plan.place(...)`` -> :class:`Placement`.
+
+A Placement binds a :class:`~repro.occam.Plan` to chips: either the
+degenerate single-device case (all spans in sequence on one chip — the
+paper's single-inference slice) or a STAP pipeline placement wrapping a
+:class:`~repro.core.stap.StapPlan` (one stage per span, bottleneck stages
+replicated, mini-batch m staggered onto replica m mod r_i) whose
+executable form is :func:`~repro.core.stap.staggered_schedule`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Sequence
+
+from repro.core.stap import StapPlan, StaggeredSchedule, staggered_schedule
+
+from .plan import Plan
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .deploy import Deployment
+
+SINGLE = "single"
+PIPELINE = "pipeline"
+
+
+@dataclasses.dataclass
+class Placement:
+    plan: Plan
+    kind: str                              # SINGLE | PIPELINE
+    microbatch: int                        # images per pipeline slot
+    stap: StapPlan | None = None           # PIPELINE only
+    stage_times: tuple[float, ...] | None = None
+    mesh: object | None = None             # jax Mesh the caller supplied
+    devices: tuple | None = None
+
+    @property
+    def chips(self) -> int:
+        return 1 if self.kind == SINGLE else self.stap.chips
+
+    @property
+    def replicas(self) -> tuple[int, ...]:
+        if self.kind == SINGLE:
+            return (1,)
+        return self.stap.replicas
+
+    def schedule(self, n_microbatches: int) -> StaggeredSchedule:
+        """The explicit lock-step tick schedule for a stream (PIPELINE)."""
+        if self.kind != PIPELINE:
+            raise ValueError("single-device placements have no staggered "
+                             "schedule")
+        return staggered_schedule(self.stap, n_microbatches)
+
+    def compile(self, backend: str = "auto", *, mesh=None,
+                devices=None, interpret: bool | None = None) -> "Deployment":
+        """Stage 3: lower onto engines -> :class:`~repro.occam.Deployment`.
+
+        ``backend``: ``"auto"`` or any registered engine name (forced for
+        every span). ``mesh`` / ``devices`` override the placement's.
+        ``interpret`` forces Pallas interpret mode (default: interpret
+        everywhere but real TPUs).
+        """
+        from .deploy import Deployment
+
+        return Deployment(self, backend=backend,
+                          mesh=mesh if mesh is not None else self.mesh,
+                          devices=devices if devices is not None
+                          else self.devices,
+                          interpret=interpret)
+
+
+def place_plan(plan: Plan, *, chips: int | None = None,
+               replicas: Sequence[int] | None = None,
+               stage_times: Sequence[float] | None = None,
+               target_period: float | None = None,
+               max_replicas: int | None = None,
+               microbatch: int | None = None,
+               mesh=None, devices=None,
+               pipeline: bool | None = None) -> Placement:
+    """Implementation of :meth:`Plan.place` (see its docstring)."""
+    microbatch = microbatch if microbatch is not None else plan.batch
+    # Any multi-chip knob selects the pipeline: a knob that would
+    # otherwise be silently dropped (measured stage_times, a replica cap,
+    # a device list) must never produce a single-chip placement.
+    multichip_args = (chips, replicas, target_period, mesh, stage_times,
+                      max_replicas, devices)
+    want_pipeline = pipeline or any(a is not None for a in multichip_args)
+    if pipeline is False and any(a is not None for a in multichip_args):
+        raise ValueError("pipeline=False conflicts with multi-chip "
+                         "arguments (chips/replicas/target_period/mesh/"
+                         "stage_times/max_replicas/devices)")
+    if not want_pipeline:
+        return Placement(plan, SINGLE, microbatch)
+
+    # Stage latencies: measured if the caller has them, else the MAC model.
+    from repro.runtime.stap_pipeline import (default_stap_plan,
+                                             model_stage_times,
+                                             plan_span_stages)
+
+    stages = plan_span_stages(plan.net, plan.partition, routes=plan.routes)
+    times = tuple(stage_times) if stage_times is not None \
+        else model_stage_times(plan.net, stages)
+    if len(times) != len(stages):
+        raise ValueError(f"{len(times)} stage times for "
+                         f"{len(stages)} spans")
+    if replicas is not None:
+        # explicit replicas are a full specification; a budget or cap
+        # alongside them would be silently unenforced, so reject it
+        if chips is not None or target_period is not None \
+                or max_replicas is not None:
+            raise ValueError("replicas= is an explicit replica vector; it "
+                             "conflicts with chips/target_period/"
+                             "max_replicas (pick one way to plan)")
+        reps = tuple(int(r) for r in replicas)
+        if len(reps) != len(stages):
+            raise ValueError(f"{len(reps)} replica counts for "
+                             f"{len(stages)} spans")
+        thr = 1.0 / max(t / r for t, r in zip(times, reps))
+        stap = StapPlan(times, reps, thr, sum(times), sum(reps))
+    else:
+        stap = default_stap_plan(times, max_chips=chips,
+                                 max_replicas=max_replicas,
+                                 target_period=target_period,
+                                 mesh=mesh, devices=devices)
+    return Placement(plan, PIPELINE, microbatch, stap=stap,
+                     stage_times=times, mesh=mesh,
+                     devices=tuple(devices) if devices is not None else None)

@@ -1,0 +1,148 @@
+"""Stage 1 of the deployment API: ``occam.plan`` -> :class:`Plan`.
+
+A Plan is the frozen result of Occam's DP for one (net, capacity, batch)
+triple: the optimal partition, the engine route the registry picked for
+each span, and the predicted per-image :class:`~repro.core.traffic
+.TrafficReport`. It is the artifact that ships — ``to_json`` / ``save``
+produce a self-contained document (the net spec rides along) a serving
+host can ``load_plan`` and compile without re-running the planner.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import TYPE_CHECKING, Sequence
+
+from repro.core.graph import NetSpec, net_from_dict, net_to_dict
+from repro.core.partition import PartitionResult, Span, partition_cnn
+from repro.core.traffic import TrafficReport, occam_traffic
+from repro.runtime import span_engine
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .place import Placement
+
+PLAN_FORMAT_VERSION = 1
+
+_PREDICTED_FIELDS = ("scheme", "feature_elems", "filter_elems",
+                     "compute_macs", "boundary_elems")
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """What to run where, before any hardware is committed.
+
+    ``batch`` is the number of images concurrently resident per chip (the
+    DP scales feature-map closures by it — Eqn. 6 keeps filters shared);
+    for a multi-chip placement it becomes the per-slot microbatch.
+    """
+
+    net: NetSpec
+    capacity_elems: int
+    batch: int
+    partition: PartitionResult
+    routes: tuple[span_engine.SpanRoute, ...]
+    predicted: TrafficReport   # per-image, scheme="occam"
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def boundaries(self) -> list[int]:
+        return list(self.partition.boundaries)
+
+    @property
+    def n_spans(self) -> int:
+        return self.partition.n_spans
+
+    @property
+    def predicted_transfers(self) -> int:
+        """Per-image off-chip elements of the chosen PBS (the DP's X)."""
+        from repro.models.cnn import predicted_transfers
+
+        return predicted_transfers(self.net, self.boundaries)
+
+    # -- stage 2 ------------------------------------------------------------
+
+    def place(self, *, chips: int | None = None,
+              replicas: Sequence[int] | None = None,
+              stage_times: Sequence[float] | None = None,
+              target_period: float | None = None,
+              max_replicas: int | None = None,
+              microbatch: int | None = None,
+              mesh=None, devices=None,
+              pipeline: bool | None = None) -> "Placement":
+        """Commit the plan to chips -> :class:`~repro.occam.Placement`.
+
+        With no arguments: the degenerate single-device placement (every
+        span executes in sequence on one chip). Any multi-chip argument
+        (``chips`` / ``replicas`` / ``target_period`` / ``mesh`` /
+        ``stage_times`` / ``max_replicas`` / ``devices``) or
+        ``pipeline=True`` selects the multi-chip STAP pipeline (one stage
+        per span, bottleneck stages replicated per ``plan_replication``).
+        """
+        from .place import place_plan
+
+        return place_plan(self, chips=chips, replicas=replicas,
+                          stage_times=stage_times,
+                          target_period=target_period,
+                          max_replicas=max_replicas, microbatch=microbatch,
+                          mesh=mesh, devices=devices, pipeline=pipeline)
+
+    # -- serialization ------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {
+            "version": PLAN_FORMAT_VERSION,
+            "net": net_to_dict(self.net),
+            "capacity_elems": self.capacity_elems,
+            "batch": self.batch,
+            "boundaries": self.boundaries,
+            "spans": [[sp.start, sp.end, sp.fits]
+                      for sp in self.partition.spans],
+            "transfers": self.partition.transfers,
+            "routes": [[r.start, r.end, r.route, r.reason]
+                       for r in self.routes],
+            "predicted": {f: getattr(self.predicted, f)
+                          for f in _PREDICTED_FIELDS},
+        }
+
+    def to_json(self, indent: int | None = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+
+def plan(net: NetSpec, capacity_elems: int, *, batch: int = 1) -> Plan:
+    """Run the DP + engine routing for ``net`` under ``capacity_elems``."""
+    part = partition_cnn(net, capacity_elems, batch=batch)
+    routes = span_engine.plan_routes(net, part)
+    predicted = occam_traffic(net, capacity_elems, batch, part)
+    return Plan(net, capacity_elems, batch, part, routes, predicted)
+
+
+def plan_from_dict(d: dict) -> Plan:
+    if d.get("version") != PLAN_FORMAT_VERSION:
+        raise ValueError(f"unsupported plan version {d.get('version')!r} "
+                         f"(this build reads {PLAN_FORMAT_VERSION})")
+    net = net_from_dict(d["net"])
+    spans = [Span(int(s), int(e), bool(f)) for (s, e, f) in d["spans"]]
+    # The DP tables are planner scratch, not part of the shipped artifact;
+    # a deserialized partition carries the decisions (boundaries, spans,
+    # optimal transfer count) without them.
+    part = PartitionResult([int(b) for b in d["boundaries"]], spans,
+                           float(d["transfers"]), {}, {})
+    routes = tuple(span_engine.SpanRoute(int(a), int(b), route, reason)
+                   for (a, b, route, reason) in d["routes"])
+    predicted = TrafficReport(**d["predicted"])
+    return Plan(net, int(d["capacity_elems"]), int(d["batch"]), part,
+                routes, predicted)
+
+
+def plan_from_json(doc: str) -> Plan:
+    return plan_from_dict(json.loads(doc))
+
+
+def load_plan(path: str) -> Plan:
+    with open(path) as f:
+        return plan_from_json(f.read())

@@ -1,0 +1,127 @@
+"""Span-engine registry: execution backends as registrations, not if/elif.
+
+Every way of executing one DP span (the generated Pallas kernel, the jitted
+row-streaming scan, the layer-by-layer oracle, the interpreted RowRing
+specification — and whatever future PRs bring: real-TPU kernels,
+continuous-stream serving bodies) registers an :class:`EngineSpec` here.
+``repro.runtime.span_engine.plan_routes`` asks the registry to route each
+span instead of hard-coding the dispatch, so a new backend is one
+``register_engine`` call: it immediately participates in ``backend="auto"``
+priority dispatch *and* becomes a valid forced ``backend=`` name for
+``Placement.compile``.
+
+An engine is two callables:
+
+* ``accepts(net, a, b, ctx) -> (ok, reason)`` — pure eligibility check for
+  SPAN(a, b). ``ctx`` carries partition-level facts (currently: whether the
+  span's footprint fits on-chip). The reason string is kept on the
+  resulting :class:`~repro.runtime.span_engine.SpanRoute` for diagnostics.
+* ``run(params, net, a, b, stored, spill, *, interpret) -> (out, spilled)``
+  — execute the span on a batch: ``stored`` maps feature-map index ->
+  (B, h, w, c) array (span input + any DRAM-resident residual sources),
+  ``spill`` lists interior maps that must be materialized for downstream
+  spans. Returns the span output and a ``{map -> array}`` dict of spills.
+
+``auto`` dispatch tries engines in ascending ``priority`` and takes the
+first that accepts; forcing ``backend=<name>`` bypasses priority but still
+honors ``accepts`` (a span the engine cannot run raises
+:class:`BackendError` rather than silently running elsewhere).
+
+This module is intentionally dependency-free (no jax, no repro.runtime)
+so engines anywhere in the codebase can import it without cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+AUTO = "auto"
+
+
+class BackendError(ValueError):
+    """A forced backend cannot take a span (or does not exist)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteContext:
+    """Partition-level facts an ``accepts`` check may need."""
+
+    fits: bool = True  # False only for oversized single layers (lower bound)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    name: str
+    priority: int              # ascending try-order under backend="auto"
+    accepts: Callable[..., tuple[bool, str]]
+    run: Callable[..., tuple]
+    description: str = ""
+    # Can this engine's span body trace under shard_map (drive a pipeline
+    # placement stage)? Python-loop or real-hardware-only engines say no.
+    spmd_capable: bool = False
+
+
+_ENGINES: dict[str, EngineSpec] = {}
+
+
+def register_engine(name: str, *, priority: int,
+                    accepts: Callable[..., tuple[bool, str]],
+                    run: Callable[..., tuple],
+                    description: str = "",
+                    spmd_capable: bool = False,
+                    overwrite: bool = False) -> EngineSpec:
+    """Register (or, with ``overwrite=True``, replace) a span engine."""
+    if name == AUTO:
+        raise ValueError(f"{AUTO!r} is the dispatch mode, not an engine name")
+    if name in _ENGINES and not overwrite:
+        raise ValueError(f"engine {name!r} already registered "
+                         "(pass overwrite=True to replace it)")
+    spec = EngineSpec(name, priority, accepts, run, description,
+                      spmd_capable)
+    _ENGINES[name] = spec
+    return spec
+
+
+def unregister_engine(name: str) -> None:
+    _ENGINES.pop(name, None)
+
+
+def get_engine(name: str) -> EngineSpec:
+    try:
+        return _ENGINES[name]
+    except KeyError:
+        raise BackendError(
+            f"unknown engine {name!r}; registered: {sorted(_ENGINES)}"
+        ) from None
+
+
+def registered_engines() -> tuple[EngineSpec, ...]:
+    """All engines, in auto-dispatch (ascending priority) order."""
+    return tuple(sorted(_ENGINES.values(),
+                        key=lambda e: (e.priority, e.name)))
+
+
+def backend_names() -> tuple[str, ...]:
+    return (AUTO,) + tuple(e.name for e in registered_engines())
+
+
+def route_span(net, a: int, b: int, ctx: RouteContext | None = None, *,
+               backend: str = AUTO) -> tuple[str, str]:
+    """Pick the engine for SPAN(a, b) -> (engine name, reason).
+
+    ``backend="auto"``: first accepting engine in priority order.
+    ``backend=<name>``: that engine, or BackendError if it rejects.
+    """
+    ctx = ctx or RouteContext()
+    if backend != AUTO:
+        spec = get_engine(backend)
+        ok, reason = spec.accepts(net, a, b, ctx)
+        if not ok:
+            raise BackendError(
+                f"backend {backend!r} cannot take span ({a}, {b}): {reason}")
+        return spec.name, reason
+    for spec in registered_engines():
+        ok, reason = spec.accepts(net, a, b, ctx)
+        if ok:
+            return spec.name, reason
+    raise BackendError(f"no registered engine accepts span ({a}, {b})")

@@ -1,8 +1,9 @@
 """Compiled span execution engine: route a DP partition to real kernels.
 
 Takes a :class:`~repro.core.partition.PartitionResult` (or a raw boundary
-list) and executes the net span-by-span on a batch of images, dispatching
-each span to the fastest engine that can take it:
+list) and executes the net span-by-span on a batch of images. Engines live
+in the deployment registry (``repro.occam.registry``); this module
+registers the four built-in ones at import:
 
 * ``pallas`` — the generated N-layer fused-span kernel
   (``repro.kernels.fused_span``): residual-free conv/pool spans, any
@@ -15,6 +16,12 @@ each span to the fastest engine that can take it:
 * ``oracle`` — layer-by-layer execution for oversized single layers (the
   DP's lower-bound spans, which by definition exceed on-chip capacity) or
   spans whose schedule fails validation.
+* ``interpreted`` — the Python RowRing loop (the executable
+  specification); never auto-selected, available as a forced backend.
+
+``plan_routes`` asks ``registry.route_span`` per span — adding a backend
+elsewhere (a real-TPU kernel, a continuous-stream body) is a
+``register_engine`` call, not an edit here.
 
 Off-chip traffic is accounted per span boundary exactly as
 ``repro.models.cnn.occam_forward`` does (model == machine: totals equal
@@ -27,16 +34,19 @@ import functools
 from typing import Sequence
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import closure
 from repro.core.graph import NetSpec
 from repro.core.partition import PartitionResult
 from repro.kernels.fused_span import ops as span_ops
 from repro.models import cnn
+from repro.occam import registry
 
 ROUTE_PALLAS = "pallas"
 ROUTE_SCAN = "scan"
 ROUTE_ORACLE = "oracle"
+ROUTE_INTERPRETED = "interpreted"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,36 +65,23 @@ def _boundaries_of(partition: PartitionResult | Sequence[int],
 
 
 def plan_routes(net: NetSpec,
-                partition: PartitionResult | Sequence[int]) -> tuple[SpanRoute, ...]:
-    """Decide per-span engine. Pure function of the net + partition."""
+                partition: PartitionResult | Sequence[int], *,
+                backend: str = registry.AUTO) -> tuple[SpanRoute, ...]:
+    """Decide per-span engine. Pure function of the net + partition.
+
+    ``backend``: ``"auto"`` (priority dispatch over the registry) or a
+    registered engine name to force every span onto it (BackendError if
+    any span is ineligible).
+    """
     boundaries = _boundaries_of(partition, net)
     cuts = [0] + boundaries + [net.n_layers]
     fits = {(sp.start, sp.end): sp.fits for sp in partition.spans} \
         if isinstance(partition, PartitionResult) else {}
     routes = []
     for a, b in zip(cuts, cuts[1:]):
-        if not fits.get((a, b), True) and b - a == 1:
-            routes.append(SpanRoute(a, b, ROUTE_ORACLE,
-                                    "oversized single layer (lower bound)"))
-            continue
-        # Disqualifying edges: a target inside the span (needs in-span adds)
-        # or an interior source (needs ring reads / boundary spills). An
-        # edge merely *straddling* the span (s <= a, t > b) costs it
-        # nothing — the source is already in DRAM — so ResNet-style spans
-        # between skip endpoints still take the kernel.
-        touched = [(s, t) for (s, t) in net.residual_edges
-                   if a < t <= b or a < s < b]
-        if touched:
-            routes.append(SpanRoute(a, b, ROUTE_SCAN,
-                                    f"residual edges {touched}"))
-            continue
-        try:
-            closure.span_schedule(net, a, b)
-        except (AssertionError, RuntimeError) as e:
-            routes.append(SpanRoute(a, b, ROUTE_ORACLE,
-                                    f"schedule rejected: {e}"))
-            continue
-        routes.append(SpanRoute(a, b, ROUTE_PALLAS, "fused span kernel"))
+        ctx = registry.RouteContext(fits=fits.get((a, b), True))
+        name, reason = registry.route_span(net, a, b, ctx, backend=backend)
+        routes.append(SpanRoute(a, b, name, reason))
     return tuple(routes)
 
 
@@ -115,19 +112,9 @@ def execute_partition(params: list[dict], xs: jax.Array, net: NetSpec,
         a, b = route.start, route.end
         cnn.count_span_reads(counter, net, a, b, batch)
         spill = tuple(sorted(m for m in spill_sources if a < m < b))
-        if route.route == ROUTE_PALLAS:
-            if spill:  # plan_routes never produces this; reject rather than
-                raise ValueError(  # silently running a different engine
-                    f"span ({a}, {b}) routed to pallas but must spill "
-                    f"{spill}; use the scan route")
-            out = span_ops.span_forward(stored[a], params[a:b], net, a, b,
-                                        interpret=interpret)
-            spilled: dict[int, jax.Array] = {}
-        elif route.route == ROUTE_ORACLE:
-            out, spilled = _oracle_span(params, net, a, b, stored, spill)
-        else:
-            out, spilled = _scan_span(params, net, a, b, stored,
-                                      spill_sources)
+        engine = registry.get_engine(route.route)
+        out, spilled = engine.run(params, net, a, b, stored, spill,
+                                  interpret=interpret)
         cnn.count_span_writes(counter, net, b, spilled, batch)
         stored[b] = out
         stored.update(spilled)
@@ -135,10 +122,78 @@ def execute_partition(params: list[dict], xs: jax.Array, net: NetSpec,
     return y[0] if squeeze else y
 
 
-def _scan_span(params, net: NetSpec, a: int, b: int, stored,
-               spill_sources):
+# --------------------------------------------------------------------------
+# Built-in engines: eligibility checks
+# --------------------------------------------------------------------------
+
+def _oversized(net: NetSpec, a: int, b: int,
+               ctx: registry.RouteContext) -> bool:
+    """The DP's lower-bound case: a single layer that exceeds capacity."""
+    return not ctx.fits and b - a == 1
+
+
+def _pallas_accepts(net: NetSpec, a: int, b: int,
+                    ctx: registry.RouteContext) -> tuple[bool, str]:
+    if _oversized(net, a, b, ctx):
+        return False, "oversized single layer (lower bound)"
+    # Disqualifying edges: a target inside the span (needs in-span adds)
+    # or an interior source (needs ring reads / boundary spills). An
+    # edge merely *straddling* the span (s <= a, t > b) costs it
+    # nothing — the source is already in DRAM — so ResNet-style spans
+    # between skip endpoints still take the kernel.
+    touched = [(s, t) for (s, t) in net.residual_edges
+               if a < t <= b or a < s < b]
+    if touched:
+        return False, f"residual edges {touched}"
+    try:
+        closure.span_schedule(net, a, b)
+    except (AssertionError, RuntimeError) as e:
+        return False, f"schedule rejected: {e}"
+    return True, "fused span kernel"
+
+
+def _scan_accepts(net: NetSpec, a: int, b: int,
+                  ctx: registry.RouteContext) -> tuple[bool, str]:
+    if _oversized(net, a, b, ctx):
+        return False, "oversized single layer (lower bound)"
+    touched = [(s, t) for (s, t) in net.residual_edges
+               if a < t <= b or a < s < b]
+    try:
+        closure.span_schedule(net, a, b)
+    except (AssertionError, RuntimeError) as e:
+        return False, f"schedule rejected: {e}"
+    if touched:
+        return True, f"residual edges {touched}"
+    return True, "jitted row-streaming scan"
+
+
+def _always_accepts(reason: str):
+    def accepts(net: NetSpec, a: int, b: int,
+                ctx: registry.RouteContext) -> tuple[bool, str]:
+        if _oversized(net, a, b, ctx):
+            return True, "oversized single layer (lower bound)"
+        return True, reason
+    return accepts
+
+
+# --------------------------------------------------------------------------
+# Built-in engines: span runners
+# --------------------------------------------------------------------------
+
+def _run_pallas(params, net: NetSpec, a: int, b: int, stored, spill, *,
+                interpret: bool):
+    if spill:  # plan_routes never produces this; reject rather than
+        raise ValueError(  # silently running a different engine
+            f"span ({a}, {b}) routed to pallas but must spill "
+            f"{spill}; use the scan route")
+    out = span_ops.span_forward(stored[a], params[a:b], net, a, b,
+                                interpret=interpret)
+    return out, {}
+
+
+def _run_scan(params, net: NetSpec, a: int, b: int, stored, spill, *,
+              interpret: bool):
     """Batched jitted row-streaming of one span (vmap over images)."""
-    spill = tuple(sorted(m for m in spill_sources if a < m < b))
     src_keys = tuple(sorted({s for (s, t) in net.residual_edges
                              if s < a < t <= b}))
     schedule = closure.span_schedule(net, a, b, spill=spill)
@@ -151,7 +206,8 @@ def _scan_span(params, net: NetSpec, a: int, b: int, stored,
     return out, dict(zip(spill, spills))
 
 
-def _oracle_span(params, net: NetSpec, a: int, b: int, stored, spill):
+def _run_oracle(params, net: NetSpec, a: int, b: int, stored, spill, *,
+                interpret: bool):
     """Layer-by-layer batched execution of one span (+ residual adds)."""
     maps = {a: stored[a]}
     y = stored[a]
@@ -174,3 +230,45 @@ def _oracle_span(params, net: NetSpec, a: int, b: int, stored, spill):
                     sm, *shape))(src)
         maps[m] = y
     return y, {m: maps[m] for m in spill}
+
+
+def _run_interpreted(params, net: NetSpec, a: int, b: int, stored, spill, *,
+                     interpret: bool):
+    """The Python RowRing loop (executable specification), per image."""
+    outs, spills = [], {m: [] for m in spill}
+    for i in range(stored[a].shape[0]):
+        sto_i = {k: v[i] for k, v in stored.items()}
+        out, sp = cnn._stream_span(params, net, a, b, sto_i, set(spill))
+        outs.append(out)
+        for m in spill:
+            spills[m].append(sp[m])
+    return jnp.stack(outs), {m: jnp.stack(v) for m, v in spills.items()}
+
+
+# Auto-dispatch order: kernel > compiled scan > oracle. The interpreted
+# specification never wins auto (the oracle accepts everything first) but
+# is a valid forced backend. spmd_capable marks the engines whose bodies
+# trace under shard_map: the Pallas kernel needs a real TPU there and the
+# interpreted loop cannot trace at all, so pipeline placements take only
+# scan/oracle (and future engines registered spmd_capable=True).
+registry.register_engine(
+    ROUTE_PALLAS, priority=10, accepts=_pallas_accepts, run=_run_pallas,
+    description="generated N-layer fused-span Pallas kernel")
+registry.register_engine(
+    ROUTE_SCAN, priority=20, accepts=_scan_accepts, run=_run_scan,
+    spmd_capable=True,
+    description="jitted row-streaming scan (residual-capable)")
+registry.register_engine(
+    ROUTE_ORACLE, priority=30, accepts=_always_accepts(
+        "layer-by-layer fallback"), run=_run_oracle,
+    spmd_capable=True,
+    description="layer-by-layer oracle (lower-bound spans)")
+registry.register_engine(
+    ROUTE_INTERPRETED, priority=100, accepts=_always_accepts(
+        "interpreted RowRing specification"), run=_run_interpreted,
+    description="Python RowRing loop (executable specification)")
+
+
+def _oracle_span(params, net: NetSpec, a: int, b: int, stored, spill):
+    """Direct entry to the oracle runner (stap_pipeline stage bodies)."""
+    return _run_oracle(params, net, a, b, stored, spill, interpret=False)

@@ -29,9 +29,16 @@ fixed-width parameter vector, and the per-device program selects its span
 body with ``lax.switch`` on the stage index — only the selected branch
 executes at runtime, so a replica pays exactly its own span's FLOPs.
 
+Input staging: the padded feed is *not* replicated to every device — it
+is sharded over the stage axis (chip row i holds rounds [i*chunk,
+(i+1)*chunk) of the stream) and an input conveyor of static stage-axis
+``ppermute`` hops walks each round to stage 0 exactly when the schedule
+consumes it, keeping per-chip input memory at O(stream/S).
+
 Runs on CPU CI via ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
-(see ``tests/conftest.py``). One-call entry: ``repro.models.api
-.stap_executor``; streaming demo: ``examples/stap_serve.py``.
+(see ``tests/conftest.py``). Deployment entry: the staged API
+(``repro.occam``: plan -> place -> compile -> run); streaming demo:
+``examples/stap_serve.py``.
 """
 from __future__ import annotations
 
@@ -96,11 +103,17 @@ class StageSpec:
 
 
 def plan_span_stages(net: NetSpec,
-                     partition: PartitionResult | Sequence[int]
+                     partition: PartitionResult | Sequence[int],
+                     routes: Sequence[span_engine.SpanRoute] | None = None
                      ) -> tuple[StageSpec, ...]:
-    """Pure function of net + partition: spans -> pipeline stages."""
+    """Pure function of net + partition: spans -> pipeline stages.
+
+    ``routes`` overrides the registry's auto dispatch (forced backends
+    from ``Placement.compile``); it must cover exactly the partition's
+    spans."""
     boundaries = span_engine._boundaries_of(partition, net)
-    routes = span_engine.plan_routes(net, partition)
+    if routes is None:
+        routes = span_engine.plan_routes(net, partition)
     crossing = [(s, t) for (s, t) in net.residual_edges
                 if any(s < p < t for p in boundaries)]
     spill_sources = {s for (s, _t) in crossing}
@@ -132,6 +145,36 @@ def model_stage_times(net: NetSpec, stages: Sequence[StageSpec]
                 else layer.out_elems * layer.k * layer.k
         times.append(float(max(ops, 1)))
     return tuple(times)
+
+
+def default_stap_plan(stage_times: Sequence[float], *,
+                      max_chips: int | None = None,
+                      max_replicas: int | None = None,
+                      target_period: float | None = None,
+                      mesh: Mesh | None = None,
+                      devices: Sequence | None = None) -> StapPlan:
+    """The replication-planning defaults shared by :class:`StapPipeline`
+    and ``repro.occam.Plan.place``: cap replicas at what the available
+    (stage, replica) mesh can physically hold, and treat a replica-capable
+    mesh with no stated budget as a budget of the whole mesh."""
+    n_stages = len(stage_times)
+    if max_replicas is None:
+        # cap replication at what the (stage, replica) mesh can
+        # physically hold, so natural chip budgets plan meshes
+        # that actually exist
+        if mesh is not None:
+            max_replicas = mesh.shape.get(REPLICA_AXIS, 1)
+        else:
+            n_dev = len(devices) if devices is not None \
+                else jax.device_count()
+            max_replicas = max(1, n_dev // n_stages)
+    if mesh is not None and max_chips is None and target_period is None:
+        # a replica-capable mesh with no stated budget means "use
+        # it": water-fill up to the devices the mesh holds (the
+        # schedule must match the mesh shape exactly)
+        max_chips = n_stages * max_replicas
+    return plan_replication(stage_times, target_period=target_period,
+                            max_chips=max_chips, max_replicas=max_replicas)
 
 
 def stap_mesh(n_stages: int, max_replicas: int,
@@ -210,6 +253,21 @@ def _unflatten_span_params(flat: jax.Array, net: NetSpec, a: int,
 # homogeneous replicated transformer pipeline)
 # --------------------------------------------------------------------------
 
+def feed_chunk_rounds(n_rounds: int, n_stages: int) -> int:
+    """Rounds of input feed resident per chip row: ceil(n_rounds / S)."""
+    return -(-n_rounds // n_stages)
+
+
+def stage_feed(feed: jax.Array, n_stages: int) -> jax.Array:
+    """Pad a (n_rounds, ...) feed to (S * chunk, ...) for stage sharding.
+
+    Chip row i initially holds rounds [i*chunk, (i+1)*chunk) — the input
+    conveyor (see ``_round_executor``) walks them to stage 0 in time."""
+    chunk = feed_chunk_rounds(feed.shape[0], n_stages)
+    pad = n_stages * chunk - feed.shape[0]
+    return jnp.pad(feed, ((0, pad),) + ((0, 0),) * (feed.ndim - 1))
+
+
 def _round_executor(step, stage_params, feed: jax.Array, mesh: Mesh,
                     sched: StaggeredSchedule,
                     stage_axis: str = STAGE_AXIS,
@@ -217,10 +275,21 @@ def _round_executor(step, stage_params, feed: jax.Array, mesh: Mesh,
     """Run the staggered lock-step schedule as one SPMD program.
 
     step(stage_idx, params_local, slot) -> slot', both of ``feed``'s
-    trailing slot shape. ``feed``: (n_rounds, round_width, *slot)
-    replicated input; ``stage_params``: pytree with leading stage dim on
-    every leaf. Returns the last stage's (n_rounds, round_width, *slot)
-    outputs.
+    trailing slot shape. ``feed``: (n_rounds, round_width, *slot) input —
+    or its ``stage_feed`` padded form (S*chunk, round_width, *slot) when
+    the caller already staged it onto devices. ``stage_params``: pytree
+    with leading stage dim on every leaf. Returns the last stage's
+    (n_rounds, round_width, *slot) outputs.
+
+    Input staging: the feed is *sharded over the stage axis* on its rounds
+    dimension (chip row i holds rounds [i*chunk, (i+1)*chunk), replicated
+    across the replica axis), never replicated whole — per-chip input
+    memory is O(stream/S), not O(stream). Only stage 0 consumes rounds, so
+    each tick every row forwards the round at its queue head one hop
+    toward stage 0 (a static stage-axis ``ppermute`` — the input conveyor)
+    and banks the round arriving from the row behind it in the freed slot.
+    Row i's slot (t mod chunk) therefore holds round i*chunk + t at tick
+    t, i.e. stage 0's head is exactly round t when it needs it.
 
     Tick t: stage i serves round t - i; each replica runs only its owned
     *live* slots (``lax.cond`` — the skipped branch costs nothing at run
@@ -238,26 +307,35 @@ def _round_executor(step, stage_params, feed: jax.Array, mesh: Mesh,
             f"{sched.replicas}); build it with stap_mesh({s_stages}, "
             f"{r_max})")
     width, rounds = sched.round_width, sched.n_rounds
+    chunk = feed_chunk_rounds(rounds, s_stages)
+    if feed.shape[0] == rounds:
+        feed = stage_feed(feed, s_stages)
+    if feed.shape[0] != s_stages * chunk:
+        raise ValueError(f"feed has {feed.shape[0]} rounds; schedule needs "
+                         f"{rounds} (staged: {s_stages * chunk})")
     owner = jnp.asarray(np.array(sched.owner_table()))          # (S, R, W)
     live = jnp.asarray(np.array(sched.slot_live()))             # (G*W,)
     perms = [sched.slot_perm(w) for w in range(width)]
+    conveyor = [(k, k - 1) for k in range(1, s_stages)]
 
-    def per_device(params_local, feed):
+    def per_device(params_local, queue0):
         i = lax.axis_index(stage_axis)
         j = lax.axis_index(replica_axis)
         p_here = jax.tree.map(lambda l: l[0], params_local)
-        slot_shape = feed.shape[2:]
-        buf0 = jnp.zeros((width,) + slot_shape, feed.dtype)
-        outs0 = jnp.zeros((rounds, width) + slot_shape, feed.dtype)
+        slot_shape = queue0.shape[2:]
+        buf0 = jnp.zeros((width,) + slot_shape, queue0.dtype)
+        outs0 = jnp.zeros((rounds, width) + slot_shape, queue0.dtype)
 
         def tick(carry, t):
-            buf, outs = carry
+            buf, outs, queue = carry
             rg = t - i
             active = jnp.logical_and(rg >= 0, rg < rounds)
             rgc = jnp.clip(rg, 0, rounds - 1)
-            feed_round = lax.dynamic_index_in_dim(feed, rgc, 0,
-                                                  keepdims=False)
-            slot_in = jnp.where(i == 0, feed_round, buf)
+            # input conveyor head: on row i this is round i*chunk + t, so
+            # stage 0 reads exactly round t (its round for this tick)
+            head = lax.dynamic_index_in_dim(queue, t % chunk, 0,
+                                            keepdims=False)
+            slot_in = jnp.where(i == 0, head, buf)
             ys = []
             for w in range(width):
                 pred = jnp.logical_and(
@@ -273,16 +351,22 @@ def _round_executor(step, stage_params, feed: jax.Array, mesh: Mesh,
             dep = lax.dynamic_update_index_in_dim(outs, y, rgc, 0)
             outs = jnp.where(jnp.logical_and(active, i == s_stages - 1),
                              dep, outs)
-            # boundary activations: one slot-level hop down the pipe — the
-            # only inter-stage traffic, exactly the DP's minimized quantity
             if s_stages > 1:
+                # input conveyor: every row forwards its head one hop
+                # toward stage 0 and banks the round from the row behind
+                incoming = lax.ppermute(head, stage_axis, conveyor)
+                queue = lax.dynamic_update_index_in_dim(
+                    queue, incoming, t % chunk, 0)
+                # boundary activations: one slot-level hop down the pipe —
+                # the only other inter-stage traffic, exactly the DP's
+                # minimized quantity
                 buf = jnp.stack([
                     lax.ppermute(y[w], (stage_axis, replica_axis), perms[w])
                     for w in range(width)])
-            return (buf, outs), None
+            return (buf, outs, queue), None
 
-        (_, outs), _ = lax.scan(tick, (buf0, outs0),
-                                jnp.arange(sched.n_ticks))
+        (_, outs, _), _ = lax.scan(tick, (buf0, outs0, queue0),
+                                   jnp.arange(sched.n_ticks))
         return outs
 
     # outputs stay replica-sharded (each replica banked only its owned
@@ -291,7 +375,7 @@ def _round_executor(step, stage_params, feed: jax.Array, mesh: Mesh,
     # padded stream (the same zero-broadcast this module's
     # pipeline_forward fix removed)
     out = _shard_map(per_device, mesh=mesh,
-                     in_specs=(P(stage_axis), P()),
+                     in_specs=(P(stage_axis), P(stage_axis)),
                      out_specs=P((stage_axis, replica_axis)),
                      check_vma=False)(stage_params, feed)
     out = out[(s_stages - 1) * r_max * rounds:]
@@ -347,36 +431,22 @@ class StapPipeline:
                  max_replicas: int | None = None,
                  target_period: float | None = None,
                  mesh: Mesh | None = None,
-                 devices: Sequence | None = None):
+                 devices: Sequence | None = None,
+                 routes: Sequence[span_engine.SpanRoute] | None = None):
         self.net = net
         self.boundaries = span_engine._boundaries_of(partition, net)
-        self.stages = plan_span_stages(net, partition)
+        self.stages = plan_span_stages(net, partition, routes=routes)
         n_stages = len(self.stages)
         self.microbatch = microbatch
         self.batch = batch
         self.stage_times = tuple(stage_times) if stage_times is not None \
             else model_stage_times(net, self.stages)
         if plan is None:
-            if max_replicas is None:
-                # cap replication at what the (stage, replica) mesh can
-                # physically hold, so natural chip budgets plan meshes
-                # that actually exist
-                if mesh is not None:
-                    max_replicas = mesh.shape.get(REPLICA_AXIS, 1)
-                else:
-                    n_dev = len(devices) if devices is not None \
-                        else jax.device_count()
-                    max_replicas = max(1, n_dev // n_stages)
-            if mesh is not None and max_chips is None and \
-                    target_period is None:
-                # a replica-capable mesh with no stated budget means "use
-                # it": water-fill up to the devices the mesh holds (the
-                # schedule must match the mesh shape exactly)
-                max_chips = n_stages * max_replicas
-            plan = plan_replication(self.stage_times,
-                                    target_period=target_period,
-                                    max_chips=max_chips,
-                                    max_replicas=max_replicas)
+            plan = default_stap_plan(self.stage_times,
+                                     target_period=target_period,
+                                     max_chips=max_chips,
+                                     max_replicas=max_replicas,
+                                     mesh=mesh, devices=devices)
         if len(plan.replicas) != n_stages:
             raise ValueError(f"plan has {len(plan.replicas)} stages, "
                              f"partition has {n_stages}")
@@ -396,9 +466,25 @@ class StapPipeline:
 
     @property
     def link_elems_per_image(self) -> int:
-        """Physical inter-stage elements moved per image: every interior
-        boundary payload crosses its cut exactly once (per hop)."""
+        """Boundary-payload elements moved per image: every interior
+        boundary payload crosses its cut exactly once (per hop). This is
+        the DP's minimized quantity; input delivery is accounted
+        separately (:meth:`conveyor_elems_per_image`)."""
         return sum(st.out_spec.elems for st in self.stages[:-1])
+
+    @property
+    def conveyor_elems_per_image(self) -> float:
+        """Input-conveyor elements moved over stage links per image: each
+        of the S-1 non-final rows forwards one (round_width, mb,
+        payload_width) feed slot per tick, in every replica column (the
+        queue is replicated over the replica axis; padding included — the
+        ppermute moves the buffer regardless of content). This replaces
+        the old whole-feed broadcast to every chip; on real hardware it
+        is input streaming over ICI instead of S host-DRAM reads."""
+        sched = self.schedule
+        moved = (sched.n_ticks * (sched.n_stages - 1) * sched.max_replicas
+                 * sched.round_width * self.microbatch * self.payload_width)
+        return moved / self.batch
 
     def executed_engine(self, stage: StageSpec) -> str:
         """The engine a stage actually runs under shard_map: the Pallas
@@ -426,6 +512,7 @@ class StapPipeline:
             "payload_elems": [st.out_spec.elems for st in self.stages[:-1]],
             "payload_width_padded": self.payload_width,
             "link_elems_per_image": self.link_elems_per_image,
+            "conveyor_elems_per_image": self.conveyor_elems_per_image,
             "dp_transfer_elems_per_image": cnn.predicted_transfers(
                 self.net, list(self.boundaries)),
         }
@@ -503,14 +590,24 @@ class StapPipeline:
         return stacked
 
     def _pack_feed(self, xs: jax.Array) -> jax.Array:
+        """Flatten + pad the stream, staged for the input conveyor: the
+        rounds dimension is padded to S * chunk so ``run`` can shard it
+        over the stage axis (chip row i holds rounds [i*chunk,
+        (i+1)*chunk)) instead of replicating the whole feed to every
+        device — per-chip input memory O(stream/S)."""
         mb, m = self.microbatch, self.n_microbatches
         xs = jnp.pad(xs, ((0, m * mb - xs.shape[0]),) + ((0, 0),) * 3)
         flat = xs.reshape(m, mb, -1)
         flat = jnp.pad(flat, ((0, self.schedule.n_slots - m), (0, 0),
                               (0, self.payload_width - flat.shape[-1])))
-        return flat.reshape(self.schedule.n_rounds,
+        feed = flat.reshape(self.schedule.n_rounds,
                             self.schedule.round_width, mb,
                             self.payload_width)
+        return stage_feed(feed, self.schedule.n_stages)
+
+    def _stage_feed_sharding(self) -> jax.sharding.NamedSharding:
+        """Rounds sharded over the stage axis, replicated over replicas."""
+        return jax.sharding.NamedSharding(self.mesh, P(STAGE_AXIS))
 
     def run(self, params: Sequence[dict], xs: jax.Array,
             counter: cnn.TrafficCounter | None = None) -> jax.Array:
@@ -529,7 +626,10 @@ class StapPipeline:
             a, b = st.span
             cnn.count_span_reads(counter, self.net, a, b, self.batch)
             cnn.count_span_writes(counter, self.net, b, st.spill, self.batch)
-        out = self._fn(self._stack_params(params), self._pack_feed(xs))
+        # stage the input onto the mesh up front: each chip row receives
+        # only its conveyor chunk of rounds (no whole-feed replication)
+        feed = jax.device_put(self._pack_feed(xs), self._stage_feed_sharding())
+        out = self._fn(self._stack_params(params), feed)
         h, w, c = self.net.map_shape(self.net.n_layers)
         flat = out.reshape(self.schedule.n_slots, self.microbatch,
                            self.payload_width)[:self.n_microbatches]

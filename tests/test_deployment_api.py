@@ -1,0 +1,296 @@
+"""Staged deployment API tests (repro.occam): plan -> place -> compile ->
+run reproduces the legacy executors exactly, Plans survive JSON
+round-trips, backends dispatch through the registry (forced and auto),
+the legacy one-call shims are deprecation-warned equivalents, and the
+pipeline feed is staged over the stage axis (input-memory satellite)."""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import require_devices
+from repro import occam
+from repro.core.graph import chain
+from repro.core.partition import partition_cnn
+from repro.models import cnn
+from repro.runtime import span_engine
+
+C, P = "conv", "pool"
+CAPACITY = 6000
+
+
+def vgg_case(hw=16, batch=6, seed=0):
+    specs = [(C, 3, 1, 1, 8), (C, 3, 1, 1, 8), (P, 2, 2, 0, 0),
+             (C, 3, 1, 1, 16), (C, 3, 1, 1, 16), (P, 2, 2, 0, 0),
+             (C, 3, 1, 1, 16)]
+    net = chain("vgg_mini", specs, in_h=hw, in_w=hw, in_ch=3)
+    params = cnn.init_params(jax.random.PRNGKey(seed), net)
+    xs = jax.random.normal(jax.random.PRNGKey(seed + 1), (batch, hw, hw, 3))
+    ref = jax.vmap(lambda im: cnn.reference_forward(params, im, net))(xs)
+    return net, params, xs, ref
+
+
+def residual_case(seed=0):
+    net = chain("res", [(C, 3, 1, 1, 4)] * 5, in_h=12, in_w=12, in_ch=3,
+                residual_edges=((1, 4), (3, 5)))
+    params = cnn.init_params(jax.random.PRNGKey(seed), net)
+    xs = jax.random.normal(jax.random.PRNGKey(seed + 1), (4, 12, 12, 3))
+    ref = jax.vmap(lambda im: cnn.reference_forward(params, im, net))(xs)
+    return net, params, xs, ref
+
+
+def assert_close(got, ref):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def assert_identical(got, want):
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------------------------
+# Plan: DP + routes + prediction, serializable
+# --------------------------------------------------------------------------
+
+def test_plan_wraps_partition_routes_and_prediction():
+    net, params, xs, ref = vgg_case()
+    plan = occam.plan(net, CAPACITY)
+    part = partition_cnn(net, CAPACITY)
+    assert plan.boundaries == part.boundaries
+    assert plan.routes == span_engine.plan_routes(net, part)
+    assert plan.predicted.scheme == "occam"
+    assert plan.predicted.offchip_elems == plan.predicted_transfers
+    assert plan.predicted.measured_elems is None  # nothing run yet
+
+
+def test_plan_json_roundtrip(tmp_path):
+    """plan -> save -> load -> compile: same outputs, same prediction."""
+    net, params, xs, ref = vgg_case()
+    plan = occam.plan(net, CAPACITY, batch=xs.shape[0])
+    path = tmp_path / "vgg_mini.plan.json"
+    plan.save(str(path))
+    loaded = occam.load_plan(str(path))
+    assert loaded.boundaries == plan.boundaries
+    assert loaded.routes == plan.routes
+    assert loaded.predicted == plan.predicted
+    assert loaded.predicted_transfers == plan.predicted_transfers
+    assert loaded.capacity_elems == plan.capacity_elems
+    assert loaded.batch == plan.batch
+    y = plan.place().compile(interpret=True).run(params, xs)
+    y2 = loaded.place().compile(interpret=True).run(params, xs)
+    assert_identical(y2, y)
+    assert_close(y, ref)
+
+
+def test_plan_json_roundtrip_residual_net():
+    net, params, xs, ref = residual_case()
+    plan = occam.plan(net, 4000)
+    loaded = occam.plan_from_json(plan.to_json())
+    assert loaded.net.residual_edges == net.residual_edges
+    assert loaded.routes == plan.routes
+    y = loaded.place().compile(interpret=True).run(params, xs)
+    assert_close(y, ref)
+
+
+def test_plan_version_gate():
+    net, *_ = vgg_case()
+    d = occam.plan(net, CAPACITY).to_dict()
+    d["version"] = 999
+    with pytest.raises(ValueError, match="version"):
+        occam.plan_from_dict(d)
+
+
+# --------------------------------------------------------------------------
+# Staged pipeline reproduces the legacy entry points exactly
+# --------------------------------------------------------------------------
+
+def test_staged_reproduces_occam_forward_jit():
+    """Acceptance: the scan backend is bit-identical to the PR-1 one-jit
+    streaming executor on the same partition."""
+    net, params, xs, ref = vgg_case()
+    plan = occam.plan(net, CAPACITY)
+    dep = plan.place().compile(backend="scan")
+    y = dep.run(params, xs[0])
+    y_jit = cnn.occam_forward_jit(params, xs[0], net, tuple(plan.boundaries))
+    assert_identical(y, y_jit)
+    assert_close(y, ref[0])
+
+
+def test_span_executor_shim_deprecated_and_identical():
+    from repro.models.api import span_executor
+
+    net, params, xs, ref = vgg_case()
+    with pytest.warns(DeprecationWarning, match="span_executor"):
+        y_shim, res = span_executor(params, xs, net, CAPACITY,
+                                    interpret=True)
+    plan = occam.plan(net, CAPACITY, batch=xs.shape[0])
+    y = plan.place().compile(interpret=True).run(params, xs)
+    assert_identical(y_shim, y)
+    assert res.boundaries == plan.boundaries
+    assert_close(y, ref)
+
+
+def test_stap_executor_shim_deprecated_and_identical():
+    from repro.models.api import stap_executor
+
+    require_devices(3)
+    net, params, xs, ref = vgg_case()
+    ctr_shim, ctr = cnn.TrafficCounter(), cnn.TrafficCounter()
+    with pytest.warns(DeprecationWarning, match="stap_executor"):
+        y_shim, pipe = stap_executor(params, xs, net, CAPACITY,
+                                     microbatch=2, counter=ctr_shim)
+    dep = occam.plan(net, CAPACITY, batch=2) \
+        .place(pipeline=True, microbatch=2).compile()
+    y = dep.run(params, xs, counter=ctr)
+    assert_identical(y_shim, y)
+    assert ctr_shim.total == ctr.total
+    assert pipe.report() == dep.pipeline(xs.shape[0]).report()
+    assert_close(y, ref)
+
+
+# --------------------------------------------------------------------------
+# Backends: forced routing through the registry
+# --------------------------------------------------------------------------
+
+def test_backend_oracle_and_interpreted_match_reference():
+    net, params, xs, ref = vgg_case(batch=2)
+    plan = occam.plan(net, CAPACITY)
+    for backend in ("oracle", "interpreted"):
+        dep = plan.place().compile(backend=backend)
+        assert all(r.route == backend for r in dep.routes)
+        assert_close(dep.run(params, xs), ref)
+
+
+def test_backend_pallas_rejects_residual_span():
+    net, *_ = residual_case()
+    plan = occam.plan(net, 10**9)  # one span, residual edges inside
+    with pytest.raises(occam.BackendError, match="residual"):
+        plan.place().compile(backend="pallas")
+
+
+def test_unknown_backend_fails_loudly():
+    net, *_ = vgg_case()
+    plan = occam.plan(net, CAPACITY)
+    with pytest.raises(occam.BackendError, match="unknown engine"):
+        plan.place().compile(backend="tpu_v9")
+
+
+def test_multichip_args_always_select_the_pipeline():
+    """A knob that only means something multi-chip (measured stage times,
+    a replica cap, a device list) must never be silently dropped into a
+    single-device placement."""
+    net, *_ = vgg_case()
+    plan = occam.plan(net, CAPACITY)
+    times = tuple(float(i + 1) for i in range(plan.n_spans))
+    assert plan.place().kind == occam.SINGLE
+    assert plan.place(stage_times=times).kind == occam.PIPELINE
+    assert plan.place(max_replicas=1).kind == occam.PIPELINE
+    assert plan.place(devices=jax.devices()).kind == occam.PIPELINE
+    with pytest.raises(ValueError, match="pipeline=False"):
+        plan.place(pipeline=False, stage_times=times)
+
+
+def test_pipeline_placement_rejects_nonspmd_backends():
+    net, *_ = vgg_case()
+    plan = occam.plan(net, CAPACITY)
+    placement = plan.place(pipeline=True)
+    with pytest.raises(occam.BackendError, match="pipeline"):
+        placement.compile(backend="interpreted")
+    with pytest.raises(occam.BackendError, match="pipeline"):
+        placement.compile(backend="pallas")
+
+
+def test_registry_priority_and_registration():
+    """A new backend is one register_engine call: it participates in auto
+    dispatch by priority and in forced compile by name."""
+    calls = []
+
+    def accepts(net, a, b, ctx):
+        return True, "test engine"
+
+    def run(params, net, a, b, stored, spill, *, interpret):
+        calls.append((a, b))
+        oracle = occam.get_engine("oracle")
+        return oracle.run(params, net, a, b, stored, spill,
+                          interpret=interpret)
+
+    occam.register_engine("test_fast", priority=1, accepts=accepts, run=run)
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            occam.register_engine("test_fast", priority=1, accepts=accepts,
+                                  run=run)
+        net, params, xs, ref = vgg_case(batch=2)
+        plan = occam.plan(net, CAPACITY)  # auto: priority 1 wins every span
+        assert all(r.route == "test_fast" for r in plan.routes)
+        dep = plan.place().compile()
+        assert_close(dep.run(params, xs), ref)
+        assert calls  # the registered runner actually executed
+    finally:
+        occam.unregister_engine("test_fast")
+    plan = occam.plan(net, CAPACITY)
+    assert all(r.route == "pallas" for r in plan.routes)
+
+
+# --------------------------------------------------------------------------
+# Unified traffic report: measured vs predicted in one object
+# --------------------------------------------------------------------------
+
+def test_report_unifies_measured_and_predicted():
+    net, params, xs, ref = vgg_case()
+    dep = occam.plan(net, CAPACITY).place().compile(interpret=True)
+    assert dep.report().matches_prediction is None  # nothing run yet
+    dep.run(params, xs)
+    dep.run(params, xs)  # accumulates across runs
+    rep = dep.report()
+    assert rep.images == 2 * xs.shape[0]
+    assert rep.measured_elems == rep.images * rep.offchip_elems
+    assert rep.matches_prediction
+    assert rep.offchip_elems == cnn.predicted_transfers(
+        net, occam.plan(net, CAPACITY).boundaries)
+
+
+def test_pipeline_report_and_stream():
+    require_devices(3)
+    net, params, xs, ref = vgg_case()
+    dep = occam.plan(net, CAPACITY, batch=2) \
+        .place(pipeline=True, microbatch=2).compile()
+    outs = list(dep.stream(params, [xs, xs]))
+    assert_close(outs[0], ref)
+    assert_close(outs[1], ref)
+    rep = dep.report()
+    assert rep.images == 2 * xs.shape[0]
+    assert rep.matches_prediction
+    desc = dep.describe()
+    assert desc["kind"] == "pipeline"
+    assert desc["replicas"] == [1] * occam.plan(net, CAPACITY).n_spans
+
+
+# --------------------------------------------------------------------------
+# Input staging satellite: the feed is sharded over the stage axis
+# --------------------------------------------------------------------------
+
+def test_pipeline_feed_sharded_over_stage_axis():
+    """Regression (ROADMAP input-staging item): the padded feed must not be
+    replicated to every device — each chip row holds only its conveyor
+    chunk of rounds, so per-chip input memory is O(stream/S)."""
+    require_devices(3)
+    net, params, xs, ref = vgg_case()
+    dep = occam.plan(net, CAPACITY, batch=2) \
+        .place(pipeline=True, microbatch=2).compile()
+    pipe = dep.pipeline(xs.shape[0])
+    s = pipe.schedule.n_stages
+    assert s >= 3
+    feed = pipe._pack_feed(xs)
+    assert feed.shape[0] % s == 0  # rounds padded to a multiple of S
+    staged = jax.device_put(feed, pipe._stage_feed_sharding())
+    # every device buffer holds exactly 1/S of the feed, not all of it
+    shard_sizes = {sh.data.size for sh in staged.addressable_shards}
+    assert shard_sizes == {feed.size // s}
+    # the lowered executable consumes that sharding as-is (no gather back
+    # to a replicated buffer at the jit boundary)
+    compiled = pipe._fn.lower(pipe._stack_params(params), staged).compile()
+    feed_sharding = compiled.input_shardings[0][1]
+    assert feed_sharding.shard_shape(feed.shape)[0] == feed.shape[0] // s
+    # and the conveyor still delivers every round to stage 0 on time
+    assert_close(dep.run(params, xs), ref)

@@ -1,0 +1,34 @@
+"""Repo hygiene (fast tier): tracked bytecode must never come back.
+
+Commit e7bee5b accidentally committed three ``__pycache__/*.pyc`` files;
+.gitignore now covers them, and this test fails the fast tier if any
+tracked bytecode reappears (``make lint`` runs the same check).
+"""
+import os
+import subprocess
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_no_tracked_bytecode():
+    try:
+        out = subprocess.run(
+            ["git", "ls-files", "*.pyc", "*.pyo", "__pycache__/*"],
+            cwd=_ROOT, capture_output=True, text=True, timeout=30)
+    except (OSError, subprocess.TimeoutExpired):
+        pytest.skip("git unavailable")
+    if out.returncode != 0:
+        pytest.skip("not a git checkout")
+    tracked = [l for l in out.stdout.splitlines() if l.strip()]
+    assert not tracked, f"tracked bytecode files: {tracked}"
+
+
+def test_gitignore_covers_caches():
+    path = os.path.join(_ROOT, ".gitignore")
+    assert os.path.exists(path), ".gitignore missing"
+    with open(path) as f:
+        rules = f.read()
+    for rule in ("__pycache__/", "*.pyc", ".pytest_cache/", "results/*.tmp"):
+        assert rule in rules, f".gitignore lost the {rule!r} rule"

@@ -166,15 +166,31 @@ def test_engine_accepts_single_image():
     assert_close(got, ref[0])
 
 
-def test_api_span_executor():
+def test_api_span_executor_is_deprecated_shim():
+    """The legacy one-call entry survives as a staged-API shim: same
+    outputs, but with a DeprecationWarning pointing at repro.occam."""
     from repro.models.api import span_executor
 
     net, params, xs, ref = make_case(
         [(C, 3, 1, 1, 8), (C, 3, 1, 1, 8), (P, 2, 2, 0, 0),
          (C, 3, 1, 1, 16)], 12, 4, batch=2)
-    y, res = span_executor(params, xs, net, 3000, interpret=True)
+    with pytest.warns(DeprecationWarning, match="repro.occam"):
+        y, res = span_executor(params, xs, net, 3000, interpret=True)
     assert res.n_spans >= 1
     assert_close(y, ref)
+
+
+def test_staged_api_executes_partition():
+    """The staged surface drives the same engines: plan -> place ->
+    compile -> run equals the oracle with model==machine traffic."""
+    from repro import occam
+
+    net, params, xs, ref = make_case(
+        [(C, 3, 1, 1, 8), (C, 3, 1, 1, 8), (P, 2, 2, 0, 0),
+         (C, 3, 1, 1, 16)], 12, 4, batch=2)
+    dep = occam.plan(net, 3000, batch=2).place().compile(interpret=True)
+    assert_close(dep.run(params, xs), ref)
+    assert dep.report().matches_prediction
 
 
 def test_starved_rings_fail_schedule_validation():
