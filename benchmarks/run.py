@@ -3,8 +3,9 @@
 Prints ``name,us_per_call,derived`` CSV (derived = the headline number the
 paper reports for that artifact). Roofline rows appear when dry-run
 artifacts exist under results/dryrun. Executable benchmarks
-(``occam_stap``) drive the staged deployment API (``repro.occam``:
-plan -> place -> compile -> run) — the same surface serving uses.
+(``occam_stap``, ``occam_serve``) drive the staged deployment API
+(``repro.occam``: plan -> place -> compile -> run / serve) — the batch
+pipeline and the continuous serving session respectively.
 
     PYTHONPATH=src python -m benchmarks.run
 """
@@ -49,9 +50,21 @@ def _occam_stap():
     return occam_stap()
 
 
+def _occam_serve():
+    # serving-session benchmark (Deployment.serve): steady throughput vs
+    # the ring-of-rounds prediction + the one-compile guarantee; runs in
+    # a flagged subprocess, parses results/BENCH_serve.json
+    from benchmarks.occam_serve import occam_serve
+
+    return occam_serve()
+
+
 BENCHES.append(
     ("occam_stap", _occam_stap,
      "STAP pipeline throughput measured/predicted (1.0 = exact)"))
+BENCHES.append(
+    ("occam_serve", _occam_serve,
+     "serving session throughput measured/predicted (1.0 = exact)"))
 
 
 def main() -> None:

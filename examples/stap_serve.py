@@ -1,10 +1,11 @@
-"""Minimal STAP streaming-serving demo (paper §III-E, executable) on the
-staged deployment API: ``occam.plan -> place -> compile -> run``.
+"""Continuous STAP serving demo (paper §III-E as a serving surface) on
+the staged deployment API: ``occam.plan -> place -> compile -> serve``.
 
 Build a VGG-style net -> Occam DP plan -> multi-chip STAP placement ->
-stream batches through the compiled deployment, then print measured
-throughput and the model-vs-machine traffic check from one unified
-TrafficReport.
+open a serving session and push *ragged* request sizes through it — every
+request serves from ONE compiled round shape (the session packs traffic
+into fixed rounds and masks the final partial round), then print steady
+throughput and the model-vs-machine traffic check.
 
     PYTHONPATH=src python examples/stap_serve.py
 """
@@ -28,6 +29,7 @@ C, P = "conv", "pool"
 
 # 1. the net and its deployment plan (DP partition + engine routes); the
 #    plan is a serializable artifact — ship plan.to_json() to serving hosts
+#    (schema v2 records serving defaults: round_batch, ring depth)
 specs = [(C, 3, 1, 1, 8), (C, 3, 1, 1, 8), (P, 2, 2, 0, 0),
          (C, 3, 1, 1, 16), (C, 3, 1, 1, 16), (P, 2, 2, 0, 0),
          (C, 3, 1, 1, 16)]
@@ -41,29 +43,49 @@ print(f"plan: boundaries={plan.boundaries} ({plan.n_spans} spans, "
 placement = plan.place(chips=plan.n_spans + 1, max_replicas=2)
 print(f"placement: replicas={placement.replicas} on a "
       f"{plan.n_spans}x{max(placement.replicas)} (stage, replica) mesh "
-      f"({placement.chips} chips)")
+      f"({placement.chips} chips, serving ring {placement.ring_depth} "
+      f"rounds deep)")
 
-# 3. compile once, then stream batches through the replicated pipeline
+# 3. compile once, then open a continuous serving session: requests of
+#    any size flow through one fixed compiled round shape
 dep = placement.compile()
 params = cnn.init_params(jax.random.PRNGKey(0), net)
-batch = 16
-xs = jax.random.normal(jax.random.PRNGKey(1), (batch,) + net.map_shape(0))
-jax.block_until_ready(dep.run(params, xs))   # build + warm
+session = dep.serve(params)
+print(f"session: round_batch={session.round_batch} "
+      f"(microbatch {session.microbatch} x round width "
+      f"{session.round_batch // session.microbatch})")
 
-t0 = time.perf_counter()          # steady-state: pipeline already compiled
-jax.block_until_ready(dep.run(params, xs))
+key = jax.random.PRNGKey(1)
+sizes = [1, 3, session.round_batch, 2 * session.round_batch + 1]
+tickets = [session.submit(jax.random.normal(jax.random.fold_in(key, i),
+                                            (b,) + net.map_shape(0)))
+           for i, b in enumerate(sizes)]
+results = session.results()        # flushes the masked partial round
+assert [t.uid for t, _ in results] == [t.uid for t in tickets]
+print(f"served ragged submits {sizes} from "
+      f"{session.compile_count} compile(s)")
+
+# 4. steady state: full rounds tick straight through the ring
+n_rounds = 32
+xs = jax.random.normal(key, (session.round_batch,) + net.map_shape(0))
+session.submit(xs)                 # warm the steady path
+session.results()
+t0 = time.perf_counter()
+for _ in range(n_rounds):
+    session.submit(xs)             # one full round -> one SPMD tick
+    if len(session.ready()) >= 8:  # drain under max_pending backpressure
+        session.results(flush=False)
+session.sync()
 dt = time.perf_counter() - t0
-pipe_rep = dep.pipeline(batch).report()
-print(f"streamed {batch} images in {dt*1e3:.1f} ms "
-      f"({batch/dt:.1f} images/s; schedule: {pipe_rep['n_rounds']} rounds x "
-      f"{pipe_rep['round_width']} slots, {pipe_rep['n_ticks']} ticks)")
+served = n_rounds * session.round_batch
+session.results()
+print(f"steady state: {served} images in {dt*1e3:.1f} ms "
+      f"({served/dt:.1f} images/s; ring of {session.ring_depth} rounds, "
+      f"still {session.compile_count} compile)")
 
-# 4. model == machine: one TrafficReport holds predicted and measured
-report = dep.report()
+# 5. model == machine: masked lanes never inflate the measurement
+report = session.report()
 print(f"traffic: counted={int(report.measured_elems)} over {report.images} "
       f"images, predicted {int(report.offchip_elems)}/image "
       f"({'OK' if report.matches_prediction else 'MISMATCH'})")
-print(f"inter-stage links move {pipe_rep['link_elems_per_image']} "
-      f"elems/image of boundary payloads (the DP quantity) + "
-      f"{pipe_rep['conveyor_elems_per_image']:.0f} of input conveyor")
 print("serving OK" if report.matches_prediction else "serving MISMATCH")

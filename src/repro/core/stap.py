@@ -6,7 +6,7 @@ replica m mod r_i), raising throughput *without touching the optimal
 partitioning*. Latency is unaffected while the arrival rate stays under the
 bottleneck service rate (asynchronous stages: no clock edges).
 
-Three artifacts:
+Four artifacts:
   * ``plan_replication`` — closed-form replica counts under a chip budget or
     a target throughput.
   * ``simulate`` — a discrete-event simulator of the asynchronous pipeline
@@ -18,6 +18,10 @@ Three artifacts:
     SPMD program over a (stage, replica) device mesh. Its lock-step
     makespan model is what measured pipeline throughput is checked
     against.
+  * ``steady_schedule`` — the round-independent steady-state view of the
+    same schedule (a *ring of rounds*, one per stage): what a compiled
+    single-tick serving step (``StapRing`` / ``Deployment.serve``) needs,
+    with the steady tick cost whose throughput recovers the closed form.
 """
 from __future__ import annotations
 
@@ -90,37 +94,23 @@ def plan_replication(stage_times: Sequence[float],
 # --------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
-class StaggeredSchedule:
-    """Lock-step tick schedule for a replicated span pipeline.
+class SteadySchedule:
+    """The round-independent steady-state view of the staggered schedule —
+    one lock-step tick of a *ring of rounds*.
 
-    Mini-batch m is served by replica ``m % r_i`` of stage i (the paper's
-    staggering rule).  An SPMD executable cannot be event-driven, so the
-    asynchronous pipeline is discretized into *rounds* of ``round_width``
-    mini-batches (round_width = lcm of the replica counts, making the
-    slot -> replica assignment identical in every round): round ``g`` is
-    processed by stage ``i`` at tick ``g + i``, each replica of stage i
-    serving ``round_width / r_i`` of the round's slots sequentially.
-
-    Everything here is static: ownership tables, the per-slot inter-stage
-    routing (source replica of stage i -> serving replica of stage i+1),
-    fill/drain activity, and a lock-step cost model
-    (:meth:`predicted_makespan`) whose steady-state limit recovers the
-    closed-form ``plan_replication`` throughput — the prediction that
-    measured pipeline throughput is validated against.
-
-    Cost note: every slot in a round has a distinct replica-assignment
-    pattern (slots coincide only mod lcm), so the SPMD executor unrolls
-    its per-tick work round_width = lcm(replicas) times. Pairwise-coprime
-    replica counts (e.g. 4-3-2 -> W = 12) therefore inflate program size
-    and round padding; prefer harmonic counts (each dividing
-    max_replicas), which ``plan_replication``'s water-fill under a
-    ``max_replicas`` cap tends to produce.
+    A continuous serving session never sees fill/drain or a round count:
+    every tick, each of the ``n_stages`` stages holds one round of
+    ``round_width`` mini-batch slots (the ring is ``ring_depth`` rounds
+    deep), serves its owned slots, and ships the boundary payloads one hop
+    down the pipe. Everything a compiled single-tick SPMD step needs is
+    here and static — ownership tables, per-slot inter-stage routing, the
+    steady tick cost — so one lowering serves an unbounded stream.
+    :class:`StaggeredSchedule` extends this with the finite-stream facts
+    (round count, fill/drain activity, makespan) a batch run needs.
     """
 
     replicas: tuple[int, ...]
-    n_microbatches: int
     round_width: int           # W = lcm(replicas): slots per round
-    n_rounds: int              # ceil(n_microbatches / W)
 
     @property
     def n_stages(self) -> int:
@@ -131,21 +121,14 @@ class StaggeredSchedule:
         return max(self.replicas)
 
     @property
-    def n_ticks(self) -> int:
-        """Fill + steady + drain: round g occupies stage i at tick g + i."""
-        return self.n_rounds + self.n_stages - 1
-
-    @property
-    def n_slots(self) -> int:
-        """Total slots including the padding of a partial final round."""
-        return self.n_rounds * self.round_width
+    def ring_depth(self) -> int:
+        """Rounds resident in the serving ring: one per stage. A round
+        submitted at tick t leaves the last stage at tick
+        t + ring_depth - 1 — the session's submit-to-result latency."""
+        return self.n_stages
 
     def replica_of(self, stage: int, m: int) -> int:
         return m % self.replicas[stage]
-
-    def active(self, stage: int, tick: int) -> bool:
-        """Does ``stage`` hold a live round at ``tick`` (fill/drain aware)?"""
-        return 0 <= tick - stage < self.n_rounds
 
     def owner_table(self) -> list[list[list[bool]]]:
         """(stage, replica, slot) -> does this replica serve this slot?
@@ -158,10 +141,6 @@ class StaggeredSchedule:
         return [[[self.replica_of(i, slot) == j for slot in range(w)]
                  for j in range(r)] for i in range(s)]
 
-    def slot_live(self) -> list[bool]:
-        """Per global slot: is it a real mini-batch (not final-round pad)?"""
-        return [m < self.n_microbatches for m in range(self.n_slots)]
-
     def slot_perm(self, slot: int) -> list[tuple[int, int]]:
         """Inter-stage routing for one round slot, over the row-major
         flattened (stage, replica) device index: the replica of stage i
@@ -172,6 +151,80 @@ class StaggeredSchedule:
         return [(i * r + self.replica_of(i, slot),
                  (i + 1) * r + self.replica_of(i + 1, slot))
                 for i in range(self.n_stages - 1)]
+
+    def steady_tick_time(self, stage_times: Sequence[float]) -> float:
+        """Steady-state lock-step tick cost: every stage is active, each
+        replica of stage i serves W / r_i slots sequentially."""
+        return max(self.round_width / self.replicas[i] * stage_times[i]
+                   for i in range(self.n_stages))
+
+    def predicted_throughput(self, stage_times: Sequence[float]) -> float:
+        """Steady-state mini-batches per time unit: W per tick. Equals the
+        closed-form ``plan_replication`` throughput 1 / max_i(t_i / r_i) —
+        what a serving session's measured throughput is checked against."""
+        return self.round_width / self.steady_tick_time(stage_times)
+
+
+def steady_schedule(plan: StapPlan) -> SteadySchedule:
+    """The ring-of-rounds steady-state schedule view of ``plan`` — the
+    static facts a compiled single-tick serving step needs (round width,
+    ownership, routing), independent of any stream length."""
+    width = functools.reduce(math.lcm, plan.replicas, 1)
+    return SteadySchedule(plan.replicas, width)
+
+
+@dataclasses.dataclass(frozen=True)
+class StaggeredSchedule(SteadySchedule):
+    """Lock-step tick schedule for a replicated span pipeline.
+
+    Mini-batch m is served by replica ``m % r_i`` of stage i (the paper's
+    staggering rule).  An SPMD executable cannot be event-driven, so the
+    asynchronous pipeline is discretized into *rounds* of ``round_width``
+    mini-batches (round_width = lcm of the replica counts, making the
+    slot -> replica assignment identical in every round): round ``g`` is
+    processed by stage ``i`` at tick ``g + i``, each replica of stage i
+    serving ``round_width / r_i`` of the round's slots sequentially.
+
+    Everything here is static: ownership tables and routing (inherited
+    from the round-independent :class:`SteadySchedule` view — get it
+    alone via :meth:`steady`), fill/drain activity, and a lock-step cost
+    model (:meth:`predicted_makespan`) whose steady-state limit recovers
+    the closed-form ``plan_replication`` throughput — the prediction that
+    measured pipeline throughput is validated against.
+
+    Cost note: every slot in a round has a distinct replica-assignment
+    pattern (slots coincide only mod lcm), so the SPMD executor unrolls
+    its per-tick work round_width = lcm(replicas) times. Pairwise-coprime
+    replica counts (e.g. 4-3-2 -> W = 12) therefore inflate program size
+    and round padding; prefer harmonic counts (each dividing
+    max_replicas), which ``plan_replication``'s water-fill under a
+    ``max_replicas`` cap tends to produce.
+    """
+
+    n_microbatches: int
+    n_rounds: int              # ceil(n_microbatches / W)
+
+    def steady(self) -> SteadySchedule:
+        """Drop the finite-stream facts: the ring-of-rounds view."""
+        return SteadySchedule(self.replicas, self.round_width)
+
+    @property
+    def n_ticks(self) -> int:
+        """Fill + steady + drain: round g occupies stage i at tick g + i."""
+        return self.n_rounds + self.n_stages - 1
+
+    @property
+    def n_slots(self) -> int:
+        """Total slots including the padding of a partial final round."""
+        return self.n_rounds * self.round_width
+
+    def active(self, stage: int, tick: int) -> bool:
+        """Does ``stage`` hold a live round at ``tick`` (fill/drain aware)?"""
+        return 0 <= tick - stage < self.n_rounds
+
+    def slot_live(self) -> list[bool]:
+        """Per global slot: is it a real mini-batch (not final-round pad)?"""
+        return [m < self.n_microbatches for m in range(self.n_slots)]
 
     def tick_time(self, stage_times: Sequence[float], tick: int) -> float:
         """Lock-step tick cost: slowest active stage; each replica of stage
@@ -200,7 +253,7 @@ def staggered_schedule(plan: StapPlan, n_microbatches: int) -> StaggeredSchedule
         raise ValueError("need at least one mini-batch")
     width = functools.reduce(math.lcm, plan.replicas, 1)
     rounds = -(-n_microbatches // width)
-    return StaggeredSchedule(plan.replicas, n_microbatches, width, rounds)
+    return StaggeredSchedule(plan.replicas, width, n_microbatches, rounds)
 
 
 @dataclasses.dataclass

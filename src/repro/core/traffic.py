@@ -43,6 +43,15 @@ class TrafficCounter:
     def total(self) -> int:
         return self.reads + self.writes
 
+    def add_scaled(self, per_image: "TrafficCounter", images: int) -> None:
+        """Masked-lane accounting: accumulate ``images`` valid images'
+        worth of a per-image transfer profile. Serving sessions pad ragged
+        traffic into fixed rounds; the padded (masked) lanes move no real
+        data and must not inflate ``measured_*`` — so sessions count
+        ``per_image x valid lanes`` instead of ``per_span x round size``."""
+        self.reads += per_image.reads * images
+        self.writes += per_image.writes * images
+
 
 @dataclasses.dataclass(frozen=True)
 class TrafficReport:

@@ -16,8 +16,14 @@ Two things live here:
       dep = occam.plan(net, capacity).place(...).compile(...)
       y = dep.run(params, xs); dep.report()
 
+      session = dep.serve(params)        # continuous serving: any submit
+      session.submit(xs)                 # size, ONE compiled round shape
+      session.results(); session.report()
+
   New code should use that API directly (see ``docs/deployment_api.md``);
-  the shims exist so pre-PR-3 callers keep working bit-identically.
+  the shims exist so pre-PR-3 callers keep working bit-identically. For
+  request streams, prefer ``Deployment.serve`` over looping ``run`` —
+  the deprecated ``Deployment.stream`` generator retraces per batch size.
 """
 from __future__ import annotations
 

@@ -16,28 +16,36 @@ an AOT-style API (modeled on JAX's ``lower``/``compile`` staging)::
 
     dep = (plan.place(chips=8, stage_times=measured)  # STAP pipeline
                .compile(backend="auto"))
-    for y in dep.stream(params, batches):
+
+    session = dep.serve(params)                       # continuous serving:
+    t = session.submit(images)                        # any request size,
+    for ticket, y in session.results():               # ONE compiled shape
         ...
+    session.report().matches_prediction               # masked-lane exact
 
 Execution backends live in :mod:`repro.occam.registry`; new engines
 (real-TPU kernels, continuous-stream bodies) are registrations, not
 rewrites. The legacy one-call entry points
 (``repro.models.api.span_executor`` / ``stap_executor``) are deprecated
-shims over this surface. See ``docs/deployment_api.md``.
+shims over this surface, as is the batch-shaped ``Deployment.stream``.
+See ``docs/deployment_api.md``.
 """
 from . import registry
-from .deploy import Deployment
+from .deploy import Deployment, Session, Ticket
 from .place import PIPELINE, SINGLE, Placement
-from .plan import (PLAN_FORMAT_VERSION, Plan, load_plan, plan,
-                   plan_from_dict, plan_from_json)
+from .plan import (PLAN_FORMAT_VERSION, Plan, ServingDefaults, load_plan,
+                   plan, plan_from_dict, plan_from_json)
 from .registry import (AUTO, BackendError, EngineSpec, RouteContext,
                        backend_names, get_engine, register_engine,
-                       registered_engines, unregister_engine)
+                       registered_engines, resolve_spmd_engine,
+                       unregister_engine)
 
 __all__ = [
     "AUTO", "PIPELINE", "PLAN_FORMAT_VERSION", "SINGLE",
     "BackendError", "Deployment", "EngineSpec", "Placement", "Plan",
-    "RouteContext", "backend_names", "get_engine", "load_plan", "plan",
+    "RouteContext", "ServingDefaults", "Session", "Ticket",
+    "backend_names", "get_engine", "load_plan", "plan",
     "plan_from_dict", "plan_from_json", "register_engine",
-    "registered_engines", "registry", "unregister_engine",
+    "registered_engines", "registry", "resolve_spmd_engine",
+    "unregister_engine",
 ]

@@ -1,5 +1,5 @@
 """Stages 3-4 of the deployment API: ``Placement.compile`` ->
-:class:`Deployment` -> ``run`` / ``stream`` / ``report``.
+:class:`Deployment` -> ``run`` / ``serve`` / ``report``.
 
 Compiling binds the placement to engines through the registry: under
 ``backend="auto"`` each span keeps the route the planner picked; a forced
@@ -17,23 +17,43 @@ never a silent substitution).
   pipeline placement is therefore rejected, as is the Python
   ``interpreted`` specification (it cannot trace under SPMD).
 
+Serving is a first-class surface, not a loop over ``run``:
+``Deployment.serve()`` opens a :class:`Session` — a long-lived stream of
+requests flowing through ONE compiled fixed shape. ``Session.submit``
+packs ragged traffic into fixed ``round_batch`` rounds (a validity mask
+covers the final partial round: masked lanes skip compute in the
+pipeline, are dropped from outputs, and are excluded from measured
+traffic), so mixed submit sizes never retrace. Pipeline sessions iterate
+a single-tick :class:`~repro.runtime.stap_pipeline.StapRing` whose
+per-chip buffers are O(round_batch) regardless of stream length; the
+batch-shaped ``stream`` generator is deprecated in its favor.
+
 Every ``run`` accumulates off-chip transfers into one
 :class:`~repro.core.traffic.TrafficCounter`; ``report()`` returns the
 plan's predicted per-image :class:`~repro.core.traffic.TrafficReport`
-with the measurement attached — model vs machine in one object.
+with the measurement attached — model vs machine in one object (sessions
+carry their own, masked-lane-exact, measurement: ``Session.report``).
 """
 from __future__ import annotations
 
-from typing import Iterable, Iterator, Sequence
+import collections
+import dataclasses
+import warnings
+from typing import TYPE_CHECKING, Iterable, Iterator, Sequence
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core.traffic import TrafficCounter, TrafficReport
+from repro.models import cnn
 from repro.runtime import span_engine
-from repro.runtime.stap_pipeline import StapPipeline
 
 from . import registry
 from .place import PIPELINE, SINGLE, Placement
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.runtime.stap_pipeline import StapPipeline, StapRing
 
 class Deployment:
     """A compiled, runnable placement. Build via ``Placement.compile``."""
@@ -64,7 +84,12 @@ class Deployment:
                                     backend=backend)
         self.counter = TrafficCounter()
         self._images = 0
-        self._pipes: dict[int, StapPipeline] = {}
+        self._pipes: dict[int, "StapPipeline"] = {}
+        self._rings: dict[int, "StapRing"] = {}
+        # single-device serving steps, one jit per round_batch; the dict
+        # holds (fn, lowering-counter) pairs
+        self._steps: dict[int, tuple] = {}
+        self._per_image_cache: TrafficCounter | None = None
 
     # -- execution ----------------------------------------------------------
 
@@ -72,10 +97,12 @@ class Deployment:
     def kind(self) -> str:
         return self.placement.kind
 
-    def pipeline(self, batch: int) -> StapPipeline:
+    def pipeline(self, batch: int) -> "StapPipeline":
         """The compiled STAP pipeline for streams of ``batch`` images
         (cached — repeated ``run`` calls at one batch size never
         retrace)."""
+        from repro.runtime.stap_pipeline import StapPipeline
+
         if self.kind != PIPELINE:
             raise ValueError("single-device deployment has no pipeline; "
                              "use .run directly")
@@ -87,6 +114,81 @@ class Deployment:
                 mesh=self.mesh, devices=self.devices, routes=self.routes)
             self._pipes[batch] = pipe
         return pipe
+
+    def ring(self, microbatch: int) -> "StapRing":
+        """The compiled single-tick serving ring for ``microbatch`` images
+        per slot (cached — every session at one round geometry shares ONE
+        lowering)."""
+        from repro.runtime.stap_pipeline import StapRing
+
+        if self.kind != PIPELINE:
+            raise ValueError("single-device deployment has no serving "
+                             "ring; serve() runs whole rounds per tick")
+        ring = self._rings.get(microbatch)
+        if ring is None:
+            ring = StapRing(
+                self.plan.net, self.plan.partition, microbatch,
+                plan=self.placement.stap, mesh=self.mesh,
+                devices=self.devices, routes=self.routes)
+            self._rings[microbatch] = ring
+        return ring
+
+    def _per_image_profile(self) -> TrafficCounter:
+        """Per-image transfer profile of this deployment's spans (cached —
+        a pure function of the deployment; sessions scale it by their
+        valid lanes for masked-lane accounting)."""
+        if self._per_image_cache is None:
+            from repro.runtime.stap_pipeline import plan_span_stages
+
+            per = TrafficCounter()
+            for st in plan_span_stages(self.plan.net, self.plan.partition,
+                                       routes=self.routes):
+                a, b = st.span
+                cnn.count_span_reads(per, self.plan.net, a, b, 1)
+                cnn.count_span_writes(per, self.plan.net, b, st.spill, 1)
+            self._per_image_cache = per
+        return self._per_image_cache
+
+    def _serve_step(self, round_batch: int):
+        """SINGLE-kind serving step: one jitted whole-round execution at
+        the fixed (round_batch, H, W, C) shape, cached per round_batch so
+        every session at one geometry shares one lowering. Returns
+        ``(fn, counts)`` where ``counts["lowerings"]`` increments at
+        trace time (the one-compile regression signal)."""
+        cached = self._steps.get(round_batch)
+        if cached is not None:
+            return cached
+        counts = {"lowerings": 0}
+        plan = self.plan
+
+        def fn(params, xs):
+            counts["lowerings"] += 1
+            return span_engine.execute_partition(
+                params, xs, plan.net, plan.partition, counter=None,
+                interpret=self.interpret, routes=self.routes)
+
+        cached = (jax.jit(fn), counts)
+        self._steps[round_batch] = cached
+        return cached
+
+    def serve(self, params: Sequence[dict], *,
+              round_batch: int | None = None,
+              max_pending: int = 16) -> "Session":
+        """Open a continuous serving session (the steady-state surface).
+
+        ``round_batch``: images per compiled round — the ONE fixed shape
+        every request is packed into (default: the plan's recorded
+        serving default, else round_width x the placement microbatch; for
+        a pipeline it must be a multiple of the round width). Mixed
+        ``submit`` sizes all serve from a single lowering; the final
+        partial round of a flush is padded with masked lanes that skip
+        compute, are dropped from outputs, and are excluded from measured
+        traffic. ``max_pending``: completed rounds the session buffers
+        before ``submit`` demands a ``results()`` drain (host-side
+        backpressure).
+        """
+        return Session(self, params, round_batch=round_batch,
+                       max_pending=max_pending)
 
     def run(self, params: Sequence[dict], xs: jax.Array,
             counter: TrafficCounter | None = None) -> jax.Array:
@@ -113,7 +215,17 @@ class Deployment:
 
     def stream(self, params: Sequence[dict],
                batches: Iterable[jax.Array]) -> Iterator[jax.Array]:
-        """Serve a stream of batches (generator; see ``run``)."""
+        """Deprecated: serve a stream of batches (generator over ``run``).
+
+        A stream of equal-sized batches retraces per batch size and banks
+        whole-stream buffers; :meth:`serve` packs ragged traffic into one
+        compiled round shape instead. This shim survives for pre-serving
+        callers and will be removed.
+        """
+        warnings.warn(
+            "Deployment.stream is deprecated; open a serving session: "
+            "session = deployment.serve(params); session.submit(xs); "
+            "session.results()", DeprecationWarning, stacklevel=2)
         for xs in batches:
             yield self.run(params, xs)
 
@@ -144,4 +256,300 @@ class Deployment:
             pipes = {b: p.report() for b, p in self._pipes.items()}
             if pipes:
                 d["pipelines"] = pipes
+            rings = {r.round_batch: r.report()
+                     for r in self._rings.values()}
+            if rings:
+                d["rings"] = rings
         return d
+
+
+# --------------------------------------------------------------------------
+# Continuous serving sessions
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Ticket:
+    """Handle for one ``Session.submit`` call: ``uid`` orders results
+    (submit order is result order), ``images`` is the submit size."""
+
+    uid: int
+    images: int
+
+
+class _TicketState:
+    __slots__ = ("ticket", "chunks", "remaining")
+
+    def __init__(self, ticket: Ticket):
+        self.ticket = ticket
+        self.chunks: list[jax.Array] = []   # output lanes, round by round
+        self.remaining = ticket.images
+
+    @property
+    def done(self) -> bool:
+        return self.remaining == 0
+
+    def result(self) -> jax.Array:
+        return self.chunks[0] if len(self.chunks) == 1 \
+            else jnp.concatenate(self.chunks)
+
+
+class Session:
+    """A continuous serving session: requests of any size flow through
+    ONE compiled fixed round shape. Build via :meth:`Deployment.serve`.
+
+    ``submit(images) -> Ticket`` enqueues a request; the session packs
+    the queue into fixed ``round_batch`` rounds and advances the
+    pipeline eagerly as full rounds form. ``results()`` flushes — the
+    final partial round is padded with *masked* lanes (they skip compute
+    in the pipeline ring, never appear in outputs, and are excluded from
+    measured traffic) and the ring drains — then returns every completed
+    ``(ticket, outputs)`` pair in submit order. ``ready()`` peeks at
+    completed tickets without flushing (results stay collectable).
+
+    One lowering serves every submit size (``compile_count`` is the
+    regression signal); a pipeline session iterates a single-tick
+    :class:`~repro.runtime.stap_pipeline.StapRing` whose per-chip
+    buffers are O(round_batch) however long the stream runs.
+    ``report()`` attaches the session's masked-lane-exact measurement to
+    the plan's per-image prediction — ``matches_prediction`` holds under
+    any mix of submit sizes.
+    """
+
+    def __init__(self, deployment: Deployment, params: Sequence[dict], *,
+                 round_batch: int | None = None, max_pending: int = 16):
+        if max_pending < 1:
+            raise ValueError("max_pending must be >= 1")
+        self.deployment = deployment
+        self.params = params
+        placement = deployment.placement
+        self.round_batch, self.microbatch = \
+            placement.serve_geometry(round_batch)
+        self.ring_depth = placement.ring_depth
+        self.max_pending = max_pending
+        if deployment.kind == PIPELINE:
+            self._ring = deployment.ring(self.microbatch)
+            self.ring_depth = self._ring.ring_depth
+            self._state = self._ring.init_state()
+            self._empty_round = jnp.zeros(
+                (self._ring.round_width, self.microbatch,
+                 self._ring.payload_width))
+            self._masks = [np.zeros(self._ring.round_width, dtype=bool)
+                           for _ in range(self.ring_depth)]
+        else:
+            self._ring = None
+            self._state = None
+        # per-image transfer profile for masked-lane accounting: sessions
+        # count per_image x valid lanes, never per_span x round size
+        self._per_image = deployment._per_image_profile()
+        self.counter = TrafficCounter()
+        self._images = 0            # valid images entered (masked excluded)
+        self._next_uid = 0
+        self._tickets: dict[int, _TicketState] = {}
+        self._queue: collections.deque = collections.deque()  # [uid, xs, off]
+        self._queued = 0
+        # rounds resident in the ring, oldest last: segment lists or None
+        self._in_flight: collections.deque = collections.deque(
+            [None] * (self.ring_depth - 1))
+        self._banked_rounds = 0     # completed, not yet results()-collected
+        self._closed = False
+
+    # -- the serving surface ------------------------------------------------
+
+    def submit(self, images: jax.Array) -> Ticket:
+        """Enqueue a request of any size -> :class:`Ticket`.
+
+        ``images``: (B, H, W, C) or a single (H, W, C) image. Full rounds
+        advance the pipeline immediately; a trailing remainder waits for
+        more traffic (flush it with ``results()``).
+        """
+        if self._closed:
+            raise RuntimeError("session is closed")
+        xs = jnp.asarray(images)
+        if xs.ndim == 3:
+            xs = xs[None]
+        if xs.ndim != 4 or xs.shape[0] < 1 or \
+                xs.shape[1:] != self.deployment.plan.net.map_shape(0):
+            raise ValueError(
+                f"submit takes (B >= 1,) + "
+                f"{self.deployment.plan.net.map_shape(0)} images, got "
+                f"{tuple(xs.shape)}")
+        ticket = Ticket(self._next_uid, int(xs.shape[0]))
+        self._next_uid += 1
+        self._tickets[ticket.uid] = _TicketState(ticket)
+        self._queue.append([ticket.uid, xs, 0])
+        self._queued += ticket.images
+        while self._queued >= self.round_batch:
+            # backpressure BEFORE popping the round: a refused submit
+            # leaves the queue intact, so results() still serves it
+            if self._banked_rounds >= self.max_pending:
+                raise RuntimeError(
+                    f"session holds {self._banked_rounds} completed "
+                    f"rounds (max_pending={self.max_pending}); drain "
+                    f"with results()")
+            self._tick(*self._take_round())
+        return ticket
+
+    def ready(self) -> tuple[Ticket, ...]:
+        """Tickets whose results are complete right now (no flushing),
+        in submit order."""
+        return tuple(ts.ticket for ts in self._tickets.values() if ts.done)
+
+    def results(self, *, flush: bool = True
+                ) -> list[tuple[Ticket, jax.Array]]:
+        """Collect completed requests in submit order.
+
+        ``flush=True`` (default) first packs any queued remainder into a
+        masked partial round and drains the ring, so every outstanding
+        ticket completes; ``flush=False`` returns only what full rounds
+        already finished. Collected tickets leave the session.
+        """
+        if flush:
+            self.flush()
+        out = []
+        for uid in list(self._tickets):
+            ts = self._tickets[uid]
+            if ts.done:
+                out.append((ts.ticket, ts.result()))
+                del self._tickets[uid]
+        # recompute the backpressure gauge from what actually remains
+        # buffered: each chunk on an open ticket is one delivered round
+        # segment still held (a conservative, upper-bound round count) —
+        # collecting nothing must not reset the max_pending bound
+        self._banked_rounds = sum(len(ts.chunks)
+                                  for ts in self._tickets.values())
+        return out
+
+    def flush(self) -> None:
+        """Push the queued remainder through as a masked partial round
+        and run drain ticks until the ring holds no live rounds. The
+        session stays open — steady-state serving resumes on the next
+        ``submit``."""
+        while self._queued:     # full rounds a refused submit left behind,
+            self._tick(*self._take_round())   # then the masked partial one
+        while any(m is not None for m in self._in_flight):
+            self._tick(None, 0)
+
+    def sync(self) -> "Session":
+        """Block until every dispatched tick has finished (ticks dispatch
+        asynchronously — time steady-state throughput against this)."""
+        if self._state is not None:
+            jax.block_until_ready(self._state)
+        for ts in self._tickets.values():
+            if ts.chunks:
+                jax.block_until_ready(ts.chunks[-1])
+        return self
+
+    def close(self) -> list[tuple[Ticket, jax.Array]]:
+        """Flush, collect the final results, and end the session."""
+        if self._closed:
+            return []
+        out = self.results()
+        self._closed = True
+        self._state = None
+        return out
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- reporting ----------------------------------------------------------
+
+    @property
+    def compile_count(self) -> int:
+        """Lowerings behind this session — 1 however submit sizes mix
+        (the retrace-count regression signal)."""
+        if self._ring is not None:
+            return self._ring.trace_count
+        return self.deployment._serve_step(self.round_batch)[1]["lowerings"]
+
+    def report(self) -> TrafficReport:
+        """The plan's per-image prediction with this session's measured
+        transfers attached. Masked (padding) lanes are excluded from both
+        ``measured_*`` and ``images``, so ``matches_prediction`` holds
+        under any mix of submit sizes."""
+        return self.deployment.plan.predicted.with_measured(
+            self.counter, self._images)
+
+    def describe(self) -> dict:
+        """Machine-readable session state (benchmarks, logs)."""
+        d = {
+            "kind": self.deployment.kind,
+            "round_batch": self.round_batch,
+            "microbatch": self.microbatch,
+            "ring_depth": self.ring_depth,
+            "max_pending": self.max_pending,
+            "compile_count": self.compile_count,
+            "images_entered": self._images,
+            "tickets_open": len(self._tickets),
+            "queued_images": self._queued,
+        }
+        if self._ring is not None:
+            d["ring"] = self._ring.report()
+        return d
+
+    # -- internals ----------------------------------------------------------
+
+    def _take_round(self):
+        """Pop up to round_batch queued images -> (segments, images)."""
+        segs, parts, n = [], [], 0
+        while self._queue and n < self.round_batch:
+            entry = self._queue[0]
+            uid, xs, off = entry
+            take = min(xs.shape[0] - off, self.round_batch - n)
+            parts.append(xs[off:off + take])
+            segs.append((uid, take))
+            n += take
+            if off + take == xs.shape[0]:
+                self._queue.popleft()
+            else:
+                entry[2] = off + take
+        self._queued -= n
+        return segs, parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+    def _tick(self, segs, xs) -> None:
+        """Advance one round: account its valid lanes, run it, deliver
+        the round leaving the ring to its tickets."""
+        n_valid = 0 if segs is None else \
+            sum(take for _uid, take in segs)
+        if n_valid:
+            self.counter.add_scaled(self._per_image, n_valid)
+            self._images += n_valid
+        if self._ring is None:
+            self._deliver(segs, self._run_single(xs))
+            return
+        ring = self._ring
+        if n_valid:
+            in_round = ring.pack_round(xs)
+            mask = np.zeros(ring.round_width, dtype=bool)
+            mask[:-(-n_valid // self.microbatch)] = True
+        else:
+            in_round, mask = self._empty_round, \
+                np.zeros(ring.round_width, dtype=bool)
+        self._masks = [mask] + self._masks[:-1]
+        self._state, lanes = ring.tick(self.params, self._state, in_round,
+                                       np.stack(self._masks))
+        if self.ring_depth > 1:
+            self._in_flight.appendleft(segs if n_valid else None)
+            exiting = self._in_flight.pop()
+        else:
+            exiting = segs if n_valid else None
+        if exiting is not None:
+            self._deliver(exiting, lanes)
+
+    def _run_single(self, xs: jax.Array) -> jax.Array:
+        step, _counts = self.deployment._serve_step(self.round_batch)
+        pad = self.round_batch - xs.shape[0]
+        if pad:
+            xs = jnp.pad(xs, ((0, pad),) + ((0, 0),) * 3)
+        return step(self.params, xs)
+
+    def _deliver(self, segs, lanes: jax.Array) -> None:
+        off = 0
+        for uid, take in segs:
+            ts = self._tickets[uid]
+            ts.chunks.append(lanes[off:off + take])
+            ts.remaining -= take
+            off += take
+        self._banked_rounds += 1

@@ -12,7 +12,8 @@ from __future__ import annotations
 import dataclasses
 from typing import TYPE_CHECKING, Sequence
 
-from repro.core.stap import StapPlan, StaggeredSchedule, staggered_schedule
+from repro.core.stap import (StapPlan, StaggeredSchedule, SteadySchedule,
+                             staggered_schedule, steady_schedule)
 
 from .plan import Plan
 
@@ -49,6 +50,47 @@ class Placement:
             raise ValueError("single-device placements have no staggered "
                              "schedule")
         return staggered_schedule(self.stap, n_microbatches)
+
+    def steady_schedule(self) -> SteadySchedule:
+        """The ring-of-rounds steady-state view (PIPELINE): the static
+        per-tick facts a serving session compiles against, independent of
+        any stream length."""
+        if self.kind != PIPELINE:
+            raise ValueError("single-device placements have no steady "
+                             "schedule; serve() runs whole rounds per tick")
+        return steady_schedule(self.stap)
+
+    @property
+    def ring_depth(self) -> int:
+        """Rounds resident in the serving ring — submit-to-result latency
+        in ticks (1 for the single-device degenerate case)."""
+        return 1 if self.kind == SINGLE else len(self.stap.replicas)
+
+    def serve_geometry(self, round_batch: int | None = None
+                       ) -> tuple[int, int]:
+        """Size one serving round: ``(round_batch, microbatch)``.
+
+        A pipeline session's SPMD tick is ``round_width`` slots wide
+        (lcm of the replica counts — the slot -> replica assignment must
+        repeat every round), so ``round_batch`` must be a positive
+        multiple of it; the per-slot microbatch is what scales. Default:
+        the plan's recorded serving default, else round_width x the
+        placement microbatch. Single-device rounds have width 1 — any
+        positive ``round_batch`` works.
+        """
+        if round_batch is None:
+            round_batch = self.plan.serving.round_batch
+        width = 1 if self.kind == SINGLE else \
+            self.steady_schedule().round_width
+        if round_batch is None:
+            round_batch = width * self.microbatch
+        round_batch = int(round_batch)
+        if round_batch < 1 or round_batch % width:
+            raise ValueError(
+                f"round_batch must be a positive multiple of the round "
+                f"width {width} (lcm of replicas "
+                f"{tuple(self.replicas)}), got {round_batch}")
+        return round_batch, round_batch // width
 
     def compile(self, backend: str = "auto", *, mesh=None,
                 devices=None, interpret: bool | None = None) -> "Deployment":

@@ -21,10 +21,41 @@ from repro.runtime import span_engine
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from .place import Placement
 
-PLAN_FORMAT_VERSION = 1
+# v1: partition + routes + prediction. v2 adds the "serving" block
+# (session defaults: round_batch, ring_depth); ``load_plan`` migrates v1
+# payloads transparently.
+PLAN_FORMAT_VERSION = 2
+_READABLE_VERSIONS = (1, 2)
 
 _PREDICTED_FIELDS = ("scheme", "feature_elems", "filter_elems",
                      "compute_macs", "boundary_elems")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingDefaults:
+    """Serving-session defaults that ship with a plan (schema v2).
+
+    ``round_batch``: images per serving round — the fixed shape
+    ``Deployment.serve`` compiles when the caller does not override it
+    (``None``: derived at serve time as round_width x microbatch).
+    ``ring_depth``: rounds resident in the serving ring — one per
+    pipeline stage, recorded so a serving host can size queues and
+    latency budgets without re-running the planner.
+    """
+
+    round_batch: int | None = None
+    ring_depth: int | None = None
+
+    def to_dict(self) -> dict:
+        return {"round_batch": self.round_batch,
+                "ring_depth": self.ring_depth}
+
+    @classmethod
+    def from_dict(cls, d: dict | None) -> "ServingDefaults":
+        d = d or {}
+        rb, rd = d.get("round_batch"), d.get("ring_depth")
+        return cls(int(rb) if rb is not None else None,
+                   int(rd) if rd is not None else None)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +73,7 @@ class Plan:
     partition: PartitionResult
     routes: tuple[span_engine.SpanRoute, ...]
     predicted: TrafficReport   # per-image, scheme="occam"
+    serving: ServingDefaults = ServingDefaults()  # session defaults (v2)
 
     # -- introspection ------------------------------------------------------
 
@@ -103,6 +135,7 @@ class Plan:
                        for r in self.routes],
             "predicted": {f: getattr(self.predicted, f)
                           for f in _PREDICTED_FIELDS},
+            "serving": self.serving.to_dict(),
         }
 
     def to_json(self, indent: int | None = 2) -> str:
@@ -113,18 +146,26 @@ class Plan:
             f.write(self.to_json())
 
 
-def plan(net: NetSpec, capacity_elems: int, *, batch: int = 1) -> Plan:
-    """Run the DP + engine routing for ``net`` under ``capacity_elems``."""
+def plan(net: NetSpec, capacity_elems: int, *, batch: int = 1,
+         round_batch: int | None = None) -> Plan:
+    """Run the DP + engine routing for ``net`` under ``capacity_elems``.
+
+    ``round_batch`` records a serving-round size with the plan (schema
+    v2): the fixed shape ``Deployment.serve`` compiles by default.
+    """
     part = partition_cnn(net, capacity_elems, batch=batch)
     routes = span_engine.plan_routes(net, part)
     predicted = occam_traffic(net, capacity_elems, batch, part)
-    return Plan(net, capacity_elems, batch, part, routes, predicted)
+    serving = ServingDefaults(round_batch, part.n_spans)
+    return Plan(net, capacity_elems, batch, part, routes, predicted,
+                serving)
 
 
 def plan_from_dict(d: dict) -> Plan:
-    if d.get("version") != PLAN_FORMAT_VERSION:
-        raise ValueError(f"unsupported plan version {d.get('version')!r} "
-                         f"(this build reads {PLAN_FORMAT_VERSION})")
+    version = d.get("version")
+    if version not in _READABLE_VERSIONS:
+        raise ValueError(f"unsupported plan version {version!r} "
+                         f"(this build reads {_READABLE_VERSIONS})")
     net = net_from_dict(d["net"])
     spans = [Span(int(s), int(e), bool(f)) for (s, e, f) in d["spans"]]
     # The DP tables are planner scratch, not part of the shipped artifact;
@@ -135,8 +176,14 @@ def plan_from_dict(d: dict) -> Plan:
     routes = tuple(span_engine.SpanRoute(int(a), int(b), route, reason)
                    for (a, b, route, reason) in d["routes"])
     predicted = TrafficReport(**d["predicted"])
+    if version == 1:
+        # transparent v1 migration: no serving block existed; derive the
+        # ring depth from the partition, leave round_batch to serve time
+        serving = ServingDefaults(None, len(spans))
+    else:
+        serving = ServingDefaults.from_dict(d.get("serving"))
     return Plan(net, int(d["capacity_elems"]), int(d["batch"]), part,
-                routes, predicted)
+                routes, predicted, serving)
 
 
 def plan_from_json(doc: str) -> Plan:

@@ -10,7 +10,9 @@ span instead of hard-coding the dispatch, so a new backend is one
 priority dispatch *and* becomes a valid forced ``backend=`` name for
 ``Placement.compile``.
 
-An engine is two callables:
+An engine is two callables (plus an optional third for pipelines —
+``make_spmd_body``, the stage-body builder the STAP pipeline dispatches
+through; see :class:`EngineSpec`):
 
 * ``accepts(net, a, b, ctx) -> (ok, reason)`` — pure eligibility check for
   SPAN(a, b). ``ctx`` carries partition-level facts (currently: whether the
@@ -59,6 +61,37 @@ class EngineSpec:
     # Can this engine's span body trace under shard_map (drive a pipeline
     # placement stage)? Python-loop or real-hardware-only engines say no.
     spmd_capable: bool = False
+    # Builder for the engine's SPMD pipeline stage body:
+    # ``make_spmd_body(net, a, b, spill, src_keys) -> body`` where
+    # ``body(span_params, x, srcs) -> (out, {map -> spilled})`` traces
+    # under shard_map (span_params: the span's own parameter slices;
+    # x: (mb, h, w, c) span input; srcs: upstream residual sources in
+    # ``src_keys`` order). The builder runs once at pipeline build time so
+    # it may precompute static schedules. ``None`` means this engine has
+    # no SPMD body of its own — ``spmd_fallback`` names the engine whose
+    # body executes its spans in a pipeline (e.g. the Pallas kernel needs
+    # a real TPU under shard_map, so its pipeline twin is the scan).
+    make_spmd_body: Callable | None = None
+    spmd_fallback: str | None = None
+
+
+def resolve_spmd_engine(name: str) -> "EngineSpec":
+    """The engine whose SPMD body actually executes spans routed to
+    ``name`` in a pipeline: ``name`` itself if it registered a body
+    builder, else its declared ``spmd_fallback`` (chains allowed).
+    Raises :class:`BackendError` when the chain dead-ends — a span routed
+    there cannot drive a pipeline stage."""
+    seen: list[str] = []
+    spec = get_engine(name)
+    while spec.make_spmd_body is None:
+        seen.append(spec.name)
+        if spec.spmd_fallback is None or spec.spmd_fallback in seen:
+            raise BackendError(
+                f"engine {name!r} has no SPMD stage body (fallback chain "
+                f"{seen!r}); register it with make_spmd_body= or "
+                f"spmd_fallback= to run in a pipeline")
+        spec = get_engine(spec.spmd_fallback)
+    return spec
 
 
 _ENGINES: dict[str, EngineSpec] = {}
@@ -69,6 +102,8 @@ def register_engine(name: str, *, priority: int,
                     run: Callable[..., tuple],
                     description: str = "",
                     spmd_capable: bool = False,
+                    make_spmd_body: Callable | None = None,
+                    spmd_fallback: str | None = None,
                     overwrite: bool = False) -> EngineSpec:
     """Register (or, with ``overwrite=True``, replace) a span engine."""
     if name == AUTO:
@@ -77,7 +112,7 @@ def register_engine(name: str, *, priority: int,
         raise ValueError(f"engine {name!r} already registered "
                          "(pass overwrite=True to replace it)")
     spec = EngineSpec(name, priority, accepts, run, description,
-                      spmd_capable)
+                      spmd_capable, make_spmd_body, spmd_fallback)
     _ENGINES[name] = spec
     return spec
 

@@ -245,23 +245,59 @@ def _run_interpreted(params, net: NetSpec, a: int, b: int, stored, spill, *,
     return jnp.stack(outs), {m: jnp.stack(v) for m, v in spills.items()}
 
 
+# --------------------------------------------------------------------------
+# SPMD pipeline stage bodies (shard_map-traceable span cores)
+# --------------------------------------------------------------------------
+
+def _scan_spmd_body(net: NetSpec, a: int, b: int, spill, src_keys):
+    """Stage-body builder for the scan engine: the same row-streaming math
+    as ``_run_scan``, with the static span schedule precomputed once at
+    pipeline build time."""
+    schedule = closure.span_schedule(net, a, b, spill=spill)
+    fn = functools.partial(cnn._span_scan_jit, net=net, a=a, b=b,
+                           schedule=schedule, spill=spill,
+                           src_keys=src_keys)
+
+    def body(span_params, x, srcs):
+        out, spills = jax.vmap(fn, in_axes=(None, 0, 0))(
+            tuple(span_params), x, srcs)
+        return out, dict(zip(spill, spills))
+
+    return body
+
+
+def _oracle_spmd_body(net: NetSpec, a: int, b: int, spill, src_keys):
+    """Stage-body builder for the oracle engine (lower-bound spans)."""
+    def body(span_params, x, srcs):
+        stored = {a: x, **dict(zip(src_keys, srcs))}
+        full = [{}] * a + list(span_params)
+        return _run_oracle(full, net, a, b, stored, spill, interpret=False)
+
+    return body
+
+
 # Auto-dispatch order: kernel > compiled scan > oracle. The interpreted
 # specification never wins auto (the oracle accepts everything first) but
 # is a valid forced backend. spmd_capable marks the engines whose bodies
 # trace under shard_map: the Pallas kernel needs a real TPU there and the
 # interpreted loop cannot trace at all, so pipeline placements take only
-# scan/oracle (and future engines registered spmd_capable=True).
+# scan/oracle (and future engines registered spmd_capable=True). Pipeline
+# stage bodies dispatch through make_spmd_body: kernel-routed spans
+# declare the scan as their shard_map twin (same schedule, same row math)
+# via spmd_fallback, so a future real-TPU pallas stage body is one
+# ``register_engine(..., make_spmd_body=...)`` call, not a pipeline edit.
 registry.register_engine(
     ROUTE_PALLAS, priority=10, accepts=_pallas_accepts, run=_run_pallas,
+    spmd_fallback=ROUTE_SCAN,
     description="generated N-layer fused-span Pallas kernel")
 registry.register_engine(
     ROUTE_SCAN, priority=20, accepts=_scan_accepts, run=_run_scan,
-    spmd_capable=True,
+    spmd_capable=True, make_spmd_body=_scan_spmd_body,
     description="jitted row-streaming scan (residual-capable)")
 registry.register_engine(
     ROUTE_ORACLE, priority=30, accepts=_always_accepts(
         "layer-by-layer fallback"), run=_run_oracle,
-    spmd_capable=True,
+    spmd_capable=True, make_spmd_body=_oracle_spmd_body,
     description="layer-by-layer oracle (lower-bound spans)")
 registry.register_engine(
     ROUTE_INTERPRETED, priority=100, accepts=_always_accepts(
@@ -269,6 +305,3 @@ registry.register_engine(
     description="Python RowRing loop (executable specification)")
 
 
-def _oracle_span(params, net: NetSpec, a: int, b: int, stored, spill):
-    """Direct entry to the oracle runner (stap_pipeline stage bodies)."""
-    return _run_oracle(params, net, a, b, stored, spill, interpret=False)

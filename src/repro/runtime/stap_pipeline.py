@@ -35,15 +35,31 @@ is sharded over the stage axis (chip row i holds rounds [i*chunk,
 ``ppermute`` hops walks each round to stage 0 exactly when the schedule
 consumes it, keeping per-chip input memory at O(stream/S).
 
+Output staging is the same trick in reverse: no device banks the full
+(rounds, width, slot) output buffer. The last stage injects each finished
+round into an output conveyor that hops it along the cyclic stage ring to
+its bank row, so every chip banks only ceil(rounds/S) rounds of output —
+per-chip output memory O(stream/S), symmetric to the input side
+(``collect_staged_outputs`` undoes the banking on the host).
+
+Two executable forms share the span stages (whose bodies dispatch through
+the engine registry — ``EngineSpec.make_spmd_body``):
+
+* :class:`StapPipeline` — the fixed-round batch program: one ``lax.scan``
+  over the whole staggered schedule, compiled per stream length.
+* :class:`StapRing` — the serving form: ONE compiled fixed-shape SPMD
+  tick (a ring of rounds, one per stage) iterated host-side, so a single
+  lowering serves an unbounded stream of mixed submit sizes
+  (``repro.occam.Deployment.serve`` builds sessions on it).
+
 Runs on CPU CI via ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
 (see ``tests/conftest.py``). Deployment entry: the staged API
-(``repro.occam``: plan -> place -> compile -> run); streaming demo:
-``examples/stap_serve.py``.
+(``repro.occam``: plan -> place -> compile -> run / serve); streaming
+demo: ``examples/stap_serve.py``.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Sequence
 
 import numpy as np
@@ -53,13 +69,13 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import closure
 from repro.core.graph import NetSpec
 from repro.core.partition import PartitionResult
 from repro.core.stap import (StaggeredSchedule, StapPlan, plan_replication,
-                             staggered_schedule)
+                             staggered_schedule, steady_schedule)
 from repro.models import cnn
 from repro.models.sharding import shard_map_compat as _shard_map
+from repro.occam import registry
 from repro.runtime import span_engine
 
 STAGE_AXIS = "stage"
@@ -258,6 +274,41 @@ def feed_chunk_rounds(n_rounds: int, n_stages: int) -> int:
     return -(-n_rounds // n_stages)
 
 
+def out_chunk_rounds(n_rounds: int, n_stages: int) -> int:
+    """Rounds of output banked per chip row — the same ceil(n_rounds / S)
+    chunking as the input side (one rule, two conveyors)."""
+    return feed_chunk_rounds(n_rounds, n_stages)
+
+
+def output_bank_row(rg: int, n_rounds: int, n_stages: int) -> int:
+    """Bank row of finished round ``rg`` under the output conveyor.
+
+    Round rg finishes on the last stage row at tick rg + S - 1 and then
+    hops cyclically (row S-1 -> 0 -> 1 -> ...) for h = (rounds-1-rg) mod S
+    hops, landing on row (S-1+h) mod S. The reverse round-robin assignment
+    is forced by finishing times: the *last* round finishes on the final
+    tick and must bank with zero hops (row S-1), round rounds-2 gets at
+    most one hop, and so on — so the conveyor drains within the schedule's
+    existing ticks, with no extra drain ticks, while still spreading the
+    rounds evenly (ceil(rounds/S) per row, round rg in bank slot rg // S).
+    """
+    return (n_rounds + n_stages - 2 - rg) % n_stages
+
+
+def collect_staged_outputs(out: jax.Array, sched: StaggeredSchedule
+                           ) -> jax.Array:
+    """Undo the output conveyor's banking on the host: the staged
+    (S * R * chunk, width, *slot) executable output -> (n_rounds, width,
+    *slot) finished rounds in stream order, replica partials summed (each
+    replica banked only its owned slots, zeros elsewhere — summed here
+    instead of an inter-replica all-reduce of mostly-zero buffers)."""
+    s, r, rounds = sched.n_stages, sched.max_replicas, sched.n_rounds
+    chunk = out_chunk_rounds(rounds, s)
+    arr = out.reshape((s, r, chunk) + out.shape[1:]).sum(axis=1)
+    rg = np.arange(rounds)
+    return arr[output_bank_row(rg, rounds, s), rg // s]
+
+
 def stage_feed(feed: jax.Array, n_stages: int) -> jax.Array:
     """Pad a (n_rounds, ...) feed to (S * chunk, ...) for stage sharding.
 
@@ -278,8 +329,10 @@ def _round_executor(step, stage_params, feed: jax.Array, mesh: Mesh,
     trailing slot shape. ``feed``: (n_rounds, round_width, *slot) input —
     or its ``stage_feed`` padded form (S*chunk, round_width, *slot) when
     the caller already staged it onto devices. ``stage_params``: pytree
-    with leading stage dim on every leaf. Returns the last stage's
-    (n_rounds, round_width, *slot) outputs.
+    with leading stage dim on every leaf. Returns the *staged* outputs —
+    (S * R * chunk, round_width, *slot), each chip row banking
+    ceil(n_rounds/S) finished rounds — which ``collect_staged_outputs``
+    reassembles into (n_rounds, round_width, *slot) on the host.
 
     Input staging: the feed is *sharded over the stage axis* on its rounds
     dimension (chip row i holds rounds [i*chunk, (i+1)*chunk), replicated
@@ -290,6 +343,16 @@ def _round_executor(step, stage_params, feed: jax.Array, mesh: Mesh,
     and banks the round arriving from the row behind it in the freed slot.
     Row i's slot (t mod chunk) therefore holds round i*chunk + t at tick
     t, i.e. stage 0's head is exactly round t when it needs it.
+
+    Output staging is the input conveyor in reverse: the last stage row
+    injects each finished round into a one-slot transit buffer that hops
+    along the *cyclic* stage ring (S-1 -> 0 -> 1 -> ...) once per tick;
+    the row ``output_bank_row`` assigns to the round banks it when it
+    arrives. Rounds enter transit one tick apart and move in lockstep, so
+    at most one live round occupies any row's transit slot, and the
+    reverse round-robin bank assignment drains the conveyor within the
+    schedule's existing ticks (the last round banks with zero hops). No
+    device ever materializes the full (rounds, width, *slot) buffer.
 
     Tick t: stage i serves round t - i; each replica runs only its owned
     *live* slots (``lax.cond`` — the skipped branch costs nothing at run
@@ -313,10 +376,12 @@ def _round_executor(step, stage_params, feed: jax.Array, mesh: Mesh,
     if feed.shape[0] != s_stages * chunk:
         raise ValueError(f"feed has {feed.shape[0]} rounds; schedule needs "
                          f"{rounds} (staged: {s_stages * chunk})")
+    out_chunk = out_chunk_rounds(rounds, s_stages)
     owner = jnp.asarray(np.array(sched.owner_table()))          # (S, R, W)
     live = jnp.asarray(np.array(sched.slot_live()))             # (G*W,)
     perms = [sched.slot_perm(w) for w in range(width)]
     conveyor = [(k, k - 1) for k in range(1, s_stages)]
+    out_conveyor = [(k, (k + 1) % s_stages) for k in range(s_stages)]
 
     def per_device(params_local, queue0):
         i = lax.axis_index(stage_axis)
@@ -324,10 +389,11 @@ def _round_executor(step, stage_params, feed: jax.Array, mesh: Mesh,
         p_here = jax.tree.map(lambda l: l[0], params_local)
         slot_shape = queue0.shape[2:]
         buf0 = jnp.zeros((width,) + slot_shape, queue0.dtype)
-        outs0 = jnp.zeros((rounds, width) + slot_shape, queue0.dtype)
+        outq0 = jnp.zeros((out_chunk, width) + slot_shape, queue0.dtype)
+        transit0 = jnp.zeros((width,) + slot_shape, queue0.dtype)
 
         def tick(carry, t):
-            buf, outs, queue = carry
+            buf, outq, transit, queue = carry
             rg = t - i
             active = jnp.logical_and(rg >= 0, rg < rounds)
             rgc = jnp.clip(rg, 0, rounds - 1)
@@ -347,10 +413,28 @@ def _round_executor(step, stage_params, feed: jax.Array, mesh: Mesh,
                     lambda x: jnp.zeros_like(x),
                     slot_in[w]))
             y = jnp.stack(ys)
-            # the last stage banks its finished round (its owned slots)
-            dep = lax.dynamic_update_index_in_dim(outs, y, rgc, 0)
-            outs = jnp.where(jnp.logical_and(active, i == s_stages - 1),
-                             dep, outs)
+            # output conveyor: the last stage row injects its finished
+            # round (inactive ticks injected zeros above); everyone else
+            # passes along what arrived over the cyclic ring hop
+            if s_stages > 1:
+                incoming_out = lax.ppermute(transit, stage_axis,
+                                            out_conveyor)
+            else:
+                incoming_out = transit
+            arriving = jnp.where(i == s_stages - 1, y, incoming_out)
+            # the round arriving at row i this tick (injected at tick
+            # rg + S - 1, it reaches row i after (i + 1) mod S hops);
+            # bank it here if output_bank_row — the single source of
+            # truth shared with collect_staged_outputs — says so
+            rg_o = t - (i + 1) % s_stages - (s_stages - 1)
+            bank = jnp.logical_and(
+                jnp.logical_and(rg_o >= 0, rg_o < rounds),
+                output_bank_row(rg_o, rounds, s_stages) == i)
+            deposited = lax.dynamic_update_index_in_dim(
+                outq, arriving, jnp.clip(rg_o, 0, rounds - 1) // s_stages,
+                0)
+            outq = jnp.where(bank, deposited, outq)
+            transit = arriving
             if s_stages > 1:
                 # input conveyor: every row forwards its head one hop
                 # toward stage 0 and banks the round from the row behind
@@ -363,23 +447,22 @@ def _round_executor(step, stage_params, feed: jax.Array, mesh: Mesh,
                 buf = jnp.stack([
                     lax.ppermute(y[w], (stage_axis, replica_axis), perms[w])
                     for w in range(width)])
-            return (buf, outs, queue), None
+            return (buf, outq, transit, queue), None
 
-        (_, outs, _), _ = lax.scan(tick, (buf0, outs0, queue0),
-                                   jnp.arange(sched.n_ticks))
-        return outs
+        (_, outq, _, _), _ = lax.scan(tick, (buf0, outq0, transit0, queue0),
+                                      jnp.arange(sched.n_ticks))
+        return outq
 
-    # outputs stay replica-sharded (each replica banked only its owned
-    # slots, zeros elsewhere) — the last stage row's shards are combined
-    # here instead of an inter-replica all-reduce of the mostly-zero
-    # padded stream (the same zero-broadcast this module's
-    # pipeline_forward fix removed)
-    out = _shard_map(per_device, mesh=mesh,
-                     in_specs=(P(stage_axis), P(stage_axis)),
-                     out_specs=P((stage_axis, replica_axis)),
-                     check_vma=False)(stage_params, feed)
-    out = out[(s_stages - 1) * r_max * rounds:]
-    return out.reshape((r_max, rounds) + out.shape[1:]).sum(axis=0)
+    # each chip row banks only its ceil(rounds/S) conveyor-assigned rounds,
+    # still replica-sharded (each replica banked only its owned slots,
+    # zeros elsewhere) — collect_staged_outputs reassembles rounds and
+    # sums the replica partials on the host instead of an inter-replica
+    # all-reduce of the mostly-zero padded stream (the same zero-broadcast
+    # this module's pipeline_forward fix removed)
+    return _shard_map(per_device, mesh=mesh,
+                      in_specs=(P(stage_axis), P(stage_axis)),
+                      out_specs=P((stage_axis, replica_axis)),
+                      check_vma=False)(stage_params, feed)
 
 
 def replicated_forward(stage_fn, stage_params, microbatches: jax.Array,
@@ -404,9 +487,10 @@ def replicated_forward(stage_fn, stage_params, microbatches: jax.Array,
     def step(_i, params_local, slot):
         return stage_fn(params_local, slot)
 
-    outs = _round_executor(step, stage_params, feed, mesh, sched,
-                           stage_axis=stage_axis,
-                           replica_axis=replica_axis)
+    staged = _round_executor(step, stage_params, feed, mesh, sched,
+                             stage_axis=stage_axis,
+                             replica_axis=replica_axis)
+    outs = collect_staged_outputs(staged, sched)
     return outs.reshape((sched.n_slots,) + microbatches.shape[1:])[:m]
 
 
@@ -414,17 +498,17 @@ def replicated_forward(stage_fn, stage_params, microbatches: jax.Array,
 # The span pipeline: heterogeneous Occam spans as switch-selected bodies
 # --------------------------------------------------------------------------
 
-class StapPipeline:
-    """A compiled STAP executor for one (net, partition, plan, batch) tuple.
-
-    Build once, then ``run(params, xs)`` streams batches through the
-    replicated span pipeline (the jit caches on the feed/param shapes, so
-    repeated runs — serving — pay no retrace).
-    """
+class _SpanProgram:
+    """Shared static planning for the STAP executors: spans -> stages
+    whose SPMD bodies dispatch through the engine registry
+    (``EngineSpec.make_spmd_body``), flattened payload/parameter buffers,
+    and the (stage, replica) mesh. :class:`StapPipeline` (fixed-round
+    batch program) and :class:`StapRing` (single-tick serving step) both
+    build on it."""
 
     def __init__(self, net: NetSpec,
                  partition: PartitionResult | Sequence[int],
-                 batch: int, microbatch: int = 1, *,
+                 microbatch: int = 1, *,
                  plan: StapPlan | None = None,
                  stage_times: Sequence[float] | None = None,
                  max_chips: int | None = None,
@@ -438,7 +522,6 @@ class StapPipeline:
         self.stages = plan_span_stages(net, partition, routes=routes)
         n_stages = len(self.stages)
         self.microbatch = microbatch
-        self.batch = batch
         self.stage_times = tuple(stage_times) if stage_times is not None \
             else model_stage_times(net, self.stages)
         if plan is None:
@@ -451,16 +534,13 @@ class StapPipeline:
             raise ValueError(f"plan has {len(plan.replicas)} stages, "
                              f"partition has {n_stages}")
         self.plan = plan
-        self.n_microbatches = -(-batch // microbatch)
-        self.schedule = staggered_schedule(plan, self.n_microbatches)
         self.mesh = mesh if mesh is not None else stap_mesh(
-            n_stages, self.schedule.max_replicas, devices)
+            n_stages, max(plan.replicas), devices)
         self.payload_width = max(max(st.in_spec.elems, st.out_spec.elems)
                                  for st in self.stages)
         self.param_width = max(
             (_span_param_elems(net, *st.span) for st in self.stages),
             default=1) or 1
-        self._fn = jax.jit(self._build())
 
     # -- static reporting ---------------------------------------------------
 
@@ -471,6 +551,107 @@ class StapPipeline:
         the DP's minimized quantity; input delivery is accounted
         separately (:meth:`conveyor_elems_per_image`)."""
         return sum(st.out_spec.elems for st in self.stages[:-1])
+
+    def executed_engine(self, stage: StageSpec) -> str:
+        """The engine whose SPMD body the stage actually runs under
+        shard_map, resolved through the registry: the route itself when it
+        registered a ``make_spmd_body``, else its declared
+        ``spmd_fallback`` (the Pallas kernel needs a real TPU, so
+        kernel-routed spans execute their scan twin — same schedule and
+        row math)."""
+        return registry.resolve_spmd_engine(stage.route.route).name
+
+    # -- SPMD program -------------------------------------------------------
+
+    def _make_body(self, stage: StageSpec):
+        """One stage's shard_map-traceable body: unflatten the span's
+        parameter slice, unpack the boundary payload, run the span core
+        the registry resolved for the route, and pack the outgoing
+        payload (output map + spills + forwarded upstream sources)."""
+        net, (a, b) = self.net, stage.span
+        spec = registry.resolve_spmd_engine(stage.route.route)
+        core = spec.make_spmd_body(net, a, b, stage.spill, stage.src_keys)
+
+        def body(p_flat, slot):
+            span_params = _unflatten_span_params(p_flat, net, a, b)
+            parts = _unpack(slot, stage.in_spec, net)
+            x = parts[a]
+            srcs = tuple(parts[s] for s in stage.src_keys)
+            out, spilled = core(span_params, x, srcs)
+            out_parts = {}
+            for s in stage.out_spec.keys:
+                if s == b:
+                    out_parts[s] = out
+                elif s in spilled:
+                    out_parts[s] = spilled[s]
+                elif s == a:
+                    out_parts[s] = x       # edge source == this span's input
+                else:
+                    out_parts[s] = parts[s]  # upstream source: forward it
+            return _pack(out_parts, stage.out_spec, self.payload_width)
+
+        return body
+
+    def _step(self):
+        """step(stage_idx, p_flat, slot) -> slot' switching between the
+        per-span bodies — only the selected branch executes at run time."""
+        bodies = [self._make_body(st) for st in self.stages]
+
+        def step(i_stage, p_flat, slot):
+            return lax.switch(i_stage, bodies, p_flat, slot)
+
+        return step
+
+    def _stack_params(self, params: Sequence[dict]) -> jax.Array:
+        # serving calls reuse the same weights; key the flatten/pad work on
+        # the leaf buffers themselves (held by reference — an id() key
+        # would go stale when the allocator recycles a freed array's
+        # address) so steady-state run() skips it
+        leaves = tuple(p[k] for p in params for k in sorted(p))
+        cached = getattr(self, "_pstack_cache", None)
+        if cached is not None and len(cached[0]) == len(leaves) and \
+                all(a is b for a, b in zip(cached[0], leaves)):
+            return cached[1]
+        stacked = jnp.stack([
+            _flatten_span_params(params, self.net, *st.span,
+                                 width=self.param_width)
+            for st in self.stages])
+        self._pstack_cache = (leaves, stacked)
+        return stacked
+
+
+class StapPipeline(_SpanProgram):
+    """A compiled STAP executor for one (net, partition, plan, batch) tuple.
+
+    Build once, then ``run(params, xs)`` streams batches through the
+    replicated span pipeline (the jit caches on the feed/param shapes, so
+    repeated runs at one batch size pay no retrace). For mixed batch
+    sizes from one compile, serve through :class:`StapRing`
+    (``Deployment.serve``) instead.
+    """
+
+    def __init__(self, net: NetSpec,
+                 partition: PartitionResult | Sequence[int],
+                 batch: int, microbatch: int = 1, *,
+                 plan: StapPlan | None = None,
+                 stage_times: Sequence[float] | None = None,
+                 max_chips: int | None = None,
+                 max_replicas: int | None = None,
+                 target_period: float | None = None,
+                 mesh: Mesh | None = None,
+                 devices: Sequence | None = None,
+                 routes: Sequence[span_engine.SpanRoute] | None = None):
+        super().__init__(net, partition, microbatch, plan=plan,
+                         stage_times=stage_times, max_chips=max_chips,
+                         max_replicas=max_replicas,
+                         target_period=target_period, mesh=mesh,
+                         devices=devices, routes=routes)
+        self.batch = batch
+        self.n_microbatches = -(-batch // microbatch)
+        self.schedule = staggered_schedule(self.plan, self.n_microbatches)
+        self._fn = jax.jit(self._build())
+
+    # -- static reporting ---------------------------------------------------
 
     @property
     def conveyor_elems_per_image(self) -> float:
@@ -486,12 +667,19 @@ class StapPipeline:
                  * sched.round_width * self.microbatch * self.payload_width)
         return moved / self.batch
 
-    def executed_engine(self, stage: StageSpec) -> str:
-        """The engine a stage actually runs under shard_map: the Pallas
-        route needs a real TPU, so kernel-eligible spans execute the scan
-        here (same schedule and row math)."""
-        return "oracle" if stage.route.route == span_engine.ROUTE_ORACLE \
-            else "scan"
+    @property
+    def out_conveyor_elems_per_image(self) -> float:
+        """Output-conveyor elements moved over stage links per image: the
+        cyclic ring hop forwards every row's one-slot transit buffer each
+        tick, in every replica column — the price of banking outputs at
+        O(stream/S) per chip instead of every chip holding the full
+        (rounds, width, slot) buffer."""
+        sched = self.schedule
+        if sched.n_stages == 1:
+            return 0.0
+        moved = (sched.n_ticks * sched.n_stages * sched.max_replicas
+                 * sched.round_width * self.microbatch * self.payload_width)
+        return moved / self.batch
 
     def report(self) -> dict:
         """Machine-readable run configuration (benchmarks / examples)."""
@@ -513,56 +701,15 @@ class StapPipeline:
             "payload_width_padded": self.payload_width,
             "link_elems_per_image": self.link_elems_per_image,
             "conveyor_elems_per_image": self.conveyor_elems_per_image,
+            "out_conveyor_elems_per_image": self.out_conveyor_elems_per_image,
             "dp_transfer_elems_per_image": cnn.predicted_transfers(
                 self.net, list(self.boundaries)),
         }
 
     # -- SPMD program -------------------------------------------------------
 
-    def _make_body(self, stage: StageSpec):
-        net, (a, b) = self.net, stage.span
-        oracle = stage.route.route == span_engine.ROUTE_ORACLE
-        sched = None if oracle else closure.span_schedule(
-            net, a, b, spill=stage.spill)
-
-        def body(p_flat, slot):
-            span_params = _unflatten_span_params(p_flat, net, a, b)
-            parts = _unpack(slot, stage.in_spec, net)
-            x = parts[a]
-            srcs = tuple(parts[s] for s in stage.src_keys)
-            if oracle:
-                stored = {a: x, **{s: parts[s] for s in stage.src_keys}}
-                full = [{}] * a + list(span_params)
-                out, spilled = span_engine._oracle_span(
-                    full, net, a, b, stored, stage.spill)
-            else:
-                fn = functools.partial(
-                    cnn._span_scan_jit, net=net, a=a, b=b, schedule=sched,
-                    spill=stage.spill, src_keys=stage.src_keys)
-                out, spills = jax.vmap(fn, in_axes=(None, 0, 0))(
-                    span_params, x, srcs)
-                spilled = dict(zip(stage.spill, spills))
-            out_parts = {}
-            for s in stage.out_spec.keys:
-                if s == b:
-                    out_parts[s] = out
-                elif s in spilled:
-                    out_parts[s] = spilled[s]
-                elif s == a:
-                    out_parts[s] = x       # edge source == this span's input
-                else:
-                    out_parts[s] = parts[s]  # upstream source: forward it
-            return _pack(out_parts, stage.out_spec, self.payload_width)
-
-        return body
-
     def _build(self):
-        bodies = [self._make_body(st) for st in self.stages]
-
-        def step(i_stage, p_flat, slot):
-            # only the selected span body executes at run time
-            return lax.switch(i_stage, bodies, p_flat, slot)
-
+        step = self._step()
         sched, mesh = self.schedule, self.mesh
 
         def fn(params_stacked, feed):
@@ -571,23 +718,6 @@ class StapPipeline:
         return fn
 
     # -- data movement ------------------------------------------------------
-
-    def _stack_params(self, params: Sequence[dict]) -> jax.Array:
-        # serving calls reuse the same weights; key the flatten/pad work on
-        # the leaf buffers themselves (held by reference — an id() key
-        # would go stale when the allocator recycles a freed array's
-        # address) so steady-state run() skips it
-        leaves = tuple(p[k] for p in params for k in sorted(p))
-        cached = getattr(self, "_pstack_cache", None)
-        if cached is not None and len(cached[0]) == len(leaves) and \
-                all(a is b for a, b in zip(cached[0], leaves)):
-            return cached[1]
-        stacked = jnp.stack([
-            _flatten_span_params(params, self.net, *st.span,
-                                 width=self.param_width)
-            for st in self.stages])
-        self._pstack_cache = (leaves, stacked)
-        return stacked
 
     def _pack_feed(self, xs: jax.Array) -> jax.Array:
         """Flatten + pad the stream, staged for the input conveyor: the
@@ -629,12 +759,193 @@ class StapPipeline:
         # stage the input onto the mesh up front: each chip row receives
         # only its conveyor chunk of rounds (no whole-feed replication)
         feed = jax.device_put(self._pack_feed(xs), self._stage_feed_sharding())
-        out = self._fn(self._stack_params(params), feed)
+        staged = self._fn(self._stack_params(params), feed)
+        # the executable's output is conveyor-banked (each chip row holds
+        # ceil(rounds/S) rounds); reassembly happens here, off the chips
+        out = collect_staged_outputs(staged, self.schedule)
         h, w, c = self.net.map_shape(self.net.n_layers)
         flat = out.reshape(self.schedule.n_slots, self.microbatch,
                            self.payload_width)[:self.n_microbatches]
         y = flat[:, :, :h * w * c].reshape(-1, h, w, c)
         return y[:self.batch]
+
+
+class StapRing(_SpanProgram):
+    """The serving form of the STAP pipeline: ONE compiled fixed-shape
+    SPMD tick, iterated host-side over an unbounded stream.
+
+    Where :class:`StapPipeline` lowers a whole fixed-round program per
+    stream length (the round count is baked into its ``lax.scan``), the
+    ring compiles a single round-width tick: stage i serves the round
+    that entered i ticks ago, then every slot's boundary payload hops one
+    stage down the pipe — the carried *ring state*, one pending round per
+    stage (``ring_depth`` rounds in flight). Every tick's shapes are
+    fixed by (round_width, microbatch, payload_width), so one lowering
+    serves every submit size; ragged traffic is packed into fixed rounds
+    by ``repro.occam.Session`` with a per-stage slot-validity mask
+    (masked slots skip their span body via ``lax.cond`` and are excluded
+    from outputs and measured traffic by the session).
+
+    Per-chip buffers are O(round_batch), independent of stream length:
+    the tick consumes one round, holds one round of ring state, and
+    emits one round — the serving limit of the batch pipeline's
+    input/output conveyors.
+    """
+
+    def __init__(self, net: NetSpec,
+                 partition: PartitionResult | Sequence[int],
+                 microbatch: int = 1, *,
+                 plan: StapPlan,
+                 mesh: Mesh | None = None,
+                 devices: Sequence | None = None,
+                 routes: Sequence[span_engine.SpanRoute] | None = None):
+        super().__init__(net, partition, microbatch, plan=plan, mesh=mesh,
+                         devices=devices, routes=routes)
+        self.steady = steady_schedule(self.plan)
+        self.trace_count = 0   # tick lowerings; regression: stays at 1
+        self._tick = jax.jit(self._build_tick())
+
+    # -- geometry -----------------------------------------------------------
+
+    @property
+    def round_width(self) -> int:
+        return self.steady.round_width
+
+    @property
+    def ring_depth(self) -> int:
+        """Rounds in flight (= stages): submit-to-result latency in ticks."""
+        return self.steady.ring_depth
+
+    @property
+    def round_batch(self) -> int:
+        """Images per serving round: round_width slots x microbatch."""
+        return self.steady.round_width * self.microbatch
+
+    def report(self) -> dict:
+        """Machine-readable serving configuration."""
+        return {
+            "boundaries": list(self.boundaries),
+            "spans": [list(st.span) for st in self.stages],
+            "planned_routes": [st.route.route for st in self.stages],
+            "engines": [self.executed_engine(st) for st in self.stages],
+            "replicas": list(self.plan.replicas),
+            "chips": self.plan.chips,
+            "mesh_shape": [self.steady.n_stages, self.steady.max_replicas],
+            "round_width": self.round_width,
+            "round_batch": self.round_batch,
+            "ring_depth": self.ring_depth,
+            "microbatch": self.microbatch,
+            "payload_width_padded": self.payload_width,
+            "link_elems_per_image": self.link_elems_per_image,
+            "tick_lowerings": self.trace_count,
+        }
+
+    # -- SPMD tick ----------------------------------------------------------
+
+    def init_state(self) -> jax.Array:
+        """A zeroed ring: each stage's pending-round payload slots,
+        sharded over the (stage, replica) mesh. Shape is fixed by the
+        geometry — O(round_batch) per chip, stream-independent."""
+        s, r = self.steady.n_stages, self.steady.max_replicas
+        state = jnp.zeros((s * r * self.round_width, self.microbatch,
+                           self.payload_width))
+        return jax.device_put(state, jax.sharding.NamedSharding(
+            self.mesh, P((STAGE_AXIS, REPLICA_AXIS))))
+
+    def _build_tick(self):
+        step = self._step()
+        steady, mesh = self.steady, self.mesh
+        s_stages, width = steady.n_stages, steady.round_width
+        owner = jnp.asarray(np.array(steady.owner_table()))     # (S, R, W)
+        perms = [steady.slot_perm(w) for w in range(width)]
+
+        def per_device(params_local, state, in_round, masks):
+            i = lax.axis_index(STAGE_AXIS)
+            j = lax.axis_index(REPLICA_AXIS)
+            p_here = jax.tree.map(lambda l: l[0], params_local)
+            slot_in = jnp.where(i == 0, in_round, state)
+            ys = []
+            for w in range(width):
+                # masks[i] is the validity of the round at stage i (the
+                # session tracks what entered i ticks ago); a masked slot
+                # skips its span body entirely
+                pred = jnp.logical_and(owner[i, j, w], masks[i, w])
+                ys.append(lax.cond(
+                    pred,
+                    lambda x: step(i, p_here, x),
+                    lambda x: jnp.zeros_like(x),
+                    slot_in[w]))
+            y = jnp.stack(ys)
+            out = jnp.where(i == s_stages - 1, y, jnp.zeros_like(y))
+            if s_stages > 1:
+                # boundary payloads hop one stage down the pipe — the
+                # ring state carried to the next tick
+                state = jnp.stack([
+                    lax.ppermute(y[w], (STAGE_AXIS, REPLICA_AXIS), perms[w])
+                    for w in range(width)])
+            else:
+                state = jnp.zeros_like(y)
+            return state, out
+
+        mapped = _shard_map(per_device, mesh=mesh,
+                            in_specs=(P(STAGE_AXIS),
+                                      P((STAGE_AXIS, REPLICA_AXIS)),
+                                      P(), P()),
+                            out_specs=(P((STAGE_AXIS, REPLICA_AXIS)),
+                                       P((STAGE_AXIS, REPLICA_AXIS))),
+                            check_vma=False)
+        r_max, mb = steady.max_replicas, self.microbatch
+        h, w, c = self.net.map_shape(self.net.n_layers)
+
+        def fn(params_stacked, state, in_round, masks):
+            # trace-time side effect: one increment per lowering, the
+            # one-compile-across-submit-sizes regression signal
+            self.trace_count += 1
+            state, out = mapped(params_stacked, state, in_round, masks)
+            # collect the exiting round inside the same dispatch: last
+            # stage row only, replica partials summed (still never an
+            # inter-replica all-reduce of the whole stream — this is one
+            # round), payload lanes cut down to output images
+            out = out[(s_stages - 1) * r_max * width:]
+            out = out.reshape((r_max, width * mb, self.payload_width)) \
+                .sum(axis=0)
+            lanes = out[:, :h * w * c].reshape(-1, h, w, c)
+            return state, lanes
+
+        return fn
+
+    def tick(self, params: Sequence[dict], state: jax.Array,
+             in_round: jax.Array, masks) -> tuple[jax.Array, jax.Array]:
+        """Advance the ring one tick.
+
+        ``in_round``: (round_width, mb, payload_width) packed round
+        entering stage 0 (see :meth:`pack_round`). ``masks``: (S, W) bool
+        — slot validity of the round resident at each stage this tick.
+        Returns ``(state', lanes)`` where ``lanes`` (round_batch, h, w, c)
+        is the round leaving the last stage (the one submitted
+        ``ring_depth - 1`` ticks ago; replica partials combined inside
+        the tick's dispatch — one round, never an all-reduce of a
+        stream-sized buffer).
+        """
+        return self._tick(self._stack_params(params), state,
+                          jnp.asarray(in_round),
+                          jnp.asarray(masks, dtype=bool))
+
+    # -- data movement ------------------------------------------------------
+
+    def pack_round(self, xs: jax.Array) -> jax.Array:
+        """(n <= round_batch, H, W, C) images -> (W, mb, payload_width)
+        flat round, zero-padded on trailing lanes (mask them)."""
+        xs = jnp.asarray(xs)
+        pad = self.round_batch - xs.shape[0]
+        if pad < 0:
+            raise ValueError(f"round takes at most {self.round_batch} "
+                             f"images, got {xs.shape[0]}")
+        xs = jnp.pad(xs, ((0, pad),) + ((0, 0),) * 3)
+        flat = xs.reshape(self.round_width, self.microbatch, -1)
+        return jnp.pad(flat, ((0, 0), (0, 0),
+                              (0, self.payload_width - flat.shape[-1])))
+
 
 
 def stream(params: Sequence[dict], xs: jax.Array, net: NetSpec,

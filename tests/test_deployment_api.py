@@ -101,6 +101,39 @@ def test_plan_version_gate():
         occam.plan_from_dict(d)
 
 
+def test_plan_v2_carries_serving_defaults():
+    """Schema v2: serving defaults (round_batch, ring depth) ship with
+    the plan and round-trip through JSON."""
+    net, *_ = vgg_case()
+    plan = occam.plan(net, CAPACITY, batch=2, round_batch=8)
+    assert plan.serving == occam.ServingDefaults(8, plan.n_spans)
+    d = plan.to_dict()
+    assert d["version"] == occam.PLAN_FORMAT_VERSION == 2
+    assert d["serving"] == {"round_batch": 8, "ring_depth": plan.n_spans}
+    loaded = occam.plan_from_json(plan.to_json())
+    assert loaded.serving == plan.serving
+    assert loaded.boundaries == plan.boundaries
+    assert loaded.routes == plan.routes
+    assert loaded.predicted == plan.predicted
+
+
+def test_plan_v1_payload_migrates_transparently():
+    """A v1 document (no serving block) loads as a v2 plan with derived
+    serving defaults — same partition, routes, and prediction."""
+    net, params, xs, ref = vgg_case()
+    plan = occam.plan(net, CAPACITY, batch=xs.shape[0])
+    d = plan.to_dict()
+    d["version"] = 1
+    del d["serving"]
+    migrated = occam.plan_from_dict(d)
+    assert migrated.serving == occam.ServingDefaults(None, plan.n_spans)
+    assert migrated.boundaries == plan.boundaries
+    assert migrated.routes == plan.routes
+    assert migrated.predicted == plan.predicted
+    y = migrated.place().compile(interpret=True).run(params, xs)
+    assert_close(y, ref)
+
+
 # --------------------------------------------------------------------------
 # Staged pipeline reproduces the legacy entry points exactly
 # --------------------------------------------------------------------------
@@ -255,7 +288,8 @@ def test_pipeline_report_and_stream():
     net, params, xs, ref = vgg_case()
     dep = occam.plan(net, CAPACITY, batch=2) \
         .place(pipeline=True, microbatch=2).compile()
-    outs = list(dep.stream(params, [xs, xs]))
+    with pytest.warns(DeprecationWarning, match="serve"):
+        outs = list(dep.stream(params, [xs, xs]))
     assert_close(outs[0], ref)
     assert_close(outs[1], ref)
     rep = dep.report()

@@ -1,0 +1,425 @@
+"""Continuous serving sessions (``Deployment.serve`` -> ``Session``):
+one lowering serves every submit size, partial rounds mask correctly
+(bit-identical lanes, masked lanes excluded from outputs and measured
+traffic), ticket ordering survives replicated completion, the steady
+schedule view matches the closed form, per-chip output buffers on the
+lowered batch executable are O(stream/S) (output-conveyor regression,
+symmetric to the input side), and pipeline stage bodies dispatch through
+the engine registry."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import require_devices
+from repro import occam
+from repro.core.graph import chain
+from repro.core.stap import (plan_replication, staggered_schedule,
+                             steady_schedule)
+from repro.models import cnn
+from repro.runtime import stap_pipeline
+
+C, P = "conv", "pool"
+CAPACITY = 6000
+
+
+def _vgg(hw=16):
+    specs = [(C, 3, 1, 1, 8), (C, 3, 1, 1, 8), (P, 2, 2, 0, 0),
+             (C, 3, 1, 1, 16), (C, 3, 1, 1, 16), (P, 2, 2, 0, 0),
+             (C, 3, 1, 1, 16)]
+    return chain("vgg_mini", specs, in_h=hw, in_w=hw, in_ch=3)
+
+
+def _ref(params, net, xs):
+    return jax.vmap(lambda im: cnn.reference_forward(params, im, net))(xs)
+
+
+def assert_close(got, ref):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.fixture(scope="module")
+def served():
+    """One replicated pipeline deployment shared by the session tests
+    (the serving ring is cached on the deployment, so every session here
+    shares ONE compiled tick)."""
+    require_devices(6)
+    net = _vgg()
+    params = cnn.init_params(jax.random.PRNGKey(0), net)
+    plan = occam.plan(net, CAPACITY, batch=2)
+    assert plan.n_spans == 3
+    dep = plan.place(chips=plan.n_spans + 1, max_replicas=2,
+                     microbatch=2).compile()
+    assert max(dep.placement.replicas) == 2  # bottleneck really replicated
+    return net, params, dep
+
+
+# --------------------------------------------------------------------------
+# One compile across mixed submit sizes (the retrace-count regression)
+# --------------------------------------------------------------------------
+
+def test_one_compile_across_mixed_submit_sizes(served):
+    net, params, dep = served
+    sess = dep.serve(params)
+    rb = sess.round_batch
+    sizes = [1, 3, rb, 2 * rb + 1]
+    xs = [jax.random.normal(jax.random.PRNGKey(10 + i),
+                            (b,) + net.map_shape(0))
+          for i, b in enumerate(sizes)]
+    tickets = [sess.submit(x) for x in xs]
+    res = sess.results()
+    # ONE lowering across every submit size — the serving guarantee
+    assert sess.compile_count == 1
+    assert [t.uid for t, _ in res] == [t.uid for t in tickets]
+    assert [t.images for t, _ in res] == sizes
+    for (_t, y), x in zip(res, xs):
+        assert y.shape[0] == x.shape[0]
+        assert_close(y, _ref(params, net, x))
+    # the flush did not end the session: steady serving resumes, still
+    # on the same lowering
+    sess.submit(xs[1])
+    (t2, y2), = sess.results()
+    assert_close(y2, _ref(params, net, xs[1]))
+    assert sess.compile_count == 1
+    # a second session at the same geometry shares the compiled ring
+    sess2 = dep.serve(params)
+    sess2.submit(xs[0])
+    sess2.results()
+    assert sess2.compile_count == 1
+
+
+# --------------------------------------------------------------------------
+# Partial-final-round masking
+# --------------------------------------------------------------------------
+
+def test_partial_round_masked_lanes_bit_identical(served):
+    """A flushed partial round computes its valid lanes bit-identically
+    to an unmasked full round of the same images (masked lanes change
+    nothing), and the padding never leaks into outputs."""
+    net, params, dep = served
+    s_full, s_part = dep.serve(params), dep.serve(params)
+    rb = s_full.round_batch
+    xs = jax.random.normal(jax.random.PRNGKey(42), (rb,) + net.map_shape(0))
+    s_full.submit(xs)
+    (_, y_full), = s_full.results()
+    for n in range(1, rb):
+        s_part.submit(xs[:n])
+        (_, y_part), = s_part.results()
+        assert y_part.shape[0] == n
+        # bit-identical: same executable, same slot inputs — the mask on
+        # the trailing lanes cannot perturb the valid ones
+        assert np.array_equal(np.asarray(y_part), np.asarray(y_full[:n]))
+
+
+def test_session_report_masked_lanes_excluded(served):
+    """measured_* counts valid lanes only: after any mix of submit sizes
+    (with partial, masked final rounds) the per-image measurement equals
+    the plan's prediction exactly."""
+    net, params, dep = served
+    sess = dep.serve(params)
+    rb = sess.round_batch
+    sizes = [1, rb - 1, rb + 2, 2]
+    for i, b in enumerate(sizes):
+        sess.submit(jax.random.normal(jax.random.PRNGKey(60 + i),
+                                      (b,) + net.map_shape(0)))
+    sess.results()
+    rep = sess.report()
+    assert rep.images == sum(sizes)
+    assert rep.measured_elems == rep.images * rep.offchip_elems
+    assert rep.matches_prediction
+    assert rep.offchip_elems == cnn.predicted_transfers(
+        net, dep.plan.boundaries)
+
+
+# --------------------------------------------------------------------------
+# Ticket semantics
+# --------------------------------------------------------------------------
+
+def test_ticket_ordering_across_replicated_rounds(served):
+    """Results come back in submit order even though round slots complete
+    on different replicas of the replicated bottleneck stage and tickets
+    straddle round boundaries arbitrarily."""
+    net, params, dep = served
+    sess = dep.serve(params)
+    rb = sess.round_batch
+    sizes = [rb - 1, 1, 3, rb, 2, 2 * rb + 1]
+    xs = [jax.random.normal(jax.random.PRNGKey(80 + i),
+                            (b,) + net.map_shape(0))
+          for i, b in enumerate(sizes)]
+    tickets = [sess.submit(x) for x in xs]
+    assert [t.uid for t in tickets] == sorted(t.uid for t in tickets)
+    res = sess.results()
+    assert [t.uid for t, _ in res] == [t.uid for t in tickets]
+    for (_t, y), x in zip(res, xs):
+        assert_close(y, _ref(params, net, x))
+
+
+def test_ready_peeks_without_flushing(served):
+    net, params, dep = served
+    sess = dep.serve(params)
+    rb, depth = sess.round_batch, sess.ring_depth
+    assert depth == 3
+    xs = jax.random.normal(jax.random.PRNGKey(7), (rb,) + net.map_shape(0))
+    t1 = sess.submit(xs)
+    assert sess.ready() == ()          # still inside the ring
+    later = [sess.submit(xs) for _ in range(depth - 1)]
+    assert sess.ready() == (t1,)       # full rounds pushed it out — no flush
+    got = sess.results(flush=False)
+    assert [t.uid for t, _ in got] == [t1.uid]
+    assert_close(got[0][1], _ref(params, net, xs))
+    rest = sess.results()              # flush drains the ring
+    assert [t.uid for t, _ in rest] == [t.uid for t in later]
+
+
+def test_max_pending_backpressure(served):
+    net, params, dep = served
+    sess = dep.serve(params, max_pending=1)
+    rb, depth = sess.round_batch, sess.ring_depth
+    xs = jax.random.normal(jax.random.PRNGKey(9), (rb,) + net.map_shape(0))
+    accepted = []
+    with pytest.raises(RuntimeError, match="max_pending"):
+        for _ in range(depth + 2):
+            accepted.append(sess.submit(xs))
+    # the refused submit's images were NOT lost: its ticket is queued and
+    # results() serves it along with everything accepted before it
+    res = sess.results()
+    assert len(res) == len(accepted) + 1
+    assert [t.uid for t, _ in res] == sorted(t.uid for t, _ in res)
+    for _t, y in res:
+        assert_close(y, _ref(params, net, xs))
+    sess.submit(xs)                    # backpressure cleared; serving resumes
+    assert len(sess.results()) == 1
+
+
+# --------------------------------------------------------------------------
+# Serving geometry (ring schedule sizing on the placement)
+# --------------------------------------------------------------------------
+
+def test_serve_geometry_and_ring_sizing():
+    net = _vgg()
+    plan = occam.plan(net, CAPACITY, batch=2)
+    placement = plan.place(replicas=(1, 2, 1), microbatch=2)
+    assert placement.ring_depth == 3
+    steady = placement.steady_schedule()
+    assert steady.round_width == 2     # lcm(1, 2, 1)
+    assert steady.ring_depth == 3
+    assert placement.serve_geometry() == (4, 2)     # W x microbatch
+    assert placement.serve_geometry(6) == (6, 3)
+    for bad in (3, 0, -2):
+        with pytest.raises(ValueError, match="round_batch"):
+            placement.serve_geometry(bad)
+    # a plan-recorded serving default is honored
+    plan2 = occam.plan(net, CAPACITY, batch=2, round_batch=8)
+    assert plan2.serving.round_batch == 8
+    p2 = plan2.place(replicas=(1, 2, 1), microbatch=2)
+    assert p2.serve_geometry() == (8, 4)
+    # single-device degenerate case: width-1 rounds, depth-1 ring
+    ps = plan.place()
+    assert ps.ring_depth == 1
+    assert ps.serve_geometry(5) == (5, 5)
+    with pytest.raises(ValueError, match="steady"):
+        ps.steady_schedule()
+
+
+def test_single_device_session():
+    net = chain("t", [(C, 3, 1, 1, 4), (C, 3, 2, 1, 8)], in_h=10, in_w=10,
+                in_ch=3)
+    params = cnn.init_params(jax.random.PRNGKey(0), net)
+    dep = occam.plan(net, 10**6).place().compile(interpret=True)
+    sess = dep.serve(params, round_batch=4)
+    sizes = [1, 3, 9]
+    xs = [jax.random.normal(jax.random.PRNGKey(20 + i),
+                            (b, 10, 10, 3)) for i, b in enumerate(sizes)]
+    tickets = [sess.submit(x) for x in xs]
+    res = sess.results()
+    assert sess.compile_count == 1     # one jit at the fixed round shape
+    assert [t.uid for t, _ in res] == [t.uid for t in tickets]
+    for (_t, y), x in zip(res, xs):
+        assert_close(y, _ref(params, net, x))
+    rep = sess.report()
+    assert rep.images == sum(sizes)
+    assert rep.matches_prediction      # padded lanes never counted
+    # degenerate submits are rejected, not silently enqueued
+    with pytest.raises(ValueError, match="B >= 1"):
+        sess.submit(jnp.zeros((0, 10, 10, 3)))
+    with pytest.raises(ValueError, match="images"):
+        sess.submit(jnp.zeros((2, 7, 7, 3)))
+
+
+# --------------------------------------------------------------------------
+# Buffer regressions: conveyors in both directions, ring O(round)
+# --------------------------------------------------------------------------
+
+def test_output_conveyor_banks_o_stream_over_s(served):
+    """Regression (ROADMAP output-staging item): no chip banks the full
+    (rounds, width, slot) output buffer — the lowered batch executable's
+    output is conveyor-banked at ceil(rounds/S) rounds per chip row,
+    symmetric to the input conveyor."""
+    net, params, dep = served
+    batch = 16
+    pipe = dep.pipeline(batch)
+    sched = pipe.schedule
+    s, r, rounds = sched.n_stages, sched.max_replicas, sched.n_rounds
+    chunk = stap_pipeline.out_chunk_rounds(rounds, s)
+    assert rounds > chunk >= 1         # really smaller than the stream
+    feed = jax.device_put(pipe._pack_feed(
+        jnp.zeros((batch,) + net.map_shape(0))), pipe._stage_feed_sharding())
+    compiled = pipe._fn.lower(pipe._stack_params(params), feed).compile()
+    shardings = compiled.output_shardings
+    sharding = shardings[0] if isinstance(shardings, (list, tuple)) \
+        else shardings
+    global_shape = (s * r * chunk, sched.round_width, pipe.microbatch,
+                    pipe.payload_width)
+    # per-device output shard: one conveyor chunk, not the whole stream
+    assert sharding.shard_shape(global_shape)[0] == chunk
+    # and the banking round-trips: a real run still matches the reference
+    xs = jax.random.normal(jax.random.PRNGKey(33),
+                           (batch,) + net.map_shape(0))
+    assert_close(pipe.run(params, xs), _ref(params, net, xs))
+
+
+def test_output_bank_row_covers_all_rounds():
+    """The reverse conveyor's bank assignment is a balanced, collision-
+    free cover: every round lands on exactly one row/slot, each row holds
+    at most ceil(rounds/S), and every store happens within the schedule's
+    existing ticks (the round that finishes last takes zero hops)."""
+    for s in (1, 2, 3, 5):
+        for rounds in (1, 2, 3, 7, 8):
+            chunk = stap_pipeline.out_chunk_rounds(rounds, s)
+            seen = {}
+            for rg in range(rounds):
+                row = stap_pipeline.output_bank_row(rg, rounds, s)
+                slot = rg // s
+                assert slot < chunk
+                assert (row, slot) not in seen
+                seen[(row, slot)] = rg
+                hops = (row - (s - 1)) % s
+                finish, n_ticks = rg + s - 1, rounds + s - 1
+                assert finish + hops <= n_ticks - 1
+            per_row = [sum(1 for (row, _s) in seen if row == i)
+                       for i in range(s)]
+            assert max(per_row) <= chunk
+
+
+def test_ring_state_is_one_round_per_chip(served):
+    """The serving ring's carried state and tick output are O(round_batch)
+    per chip — nothing in the tick executable scales with stream length."""
+    net, params, dep = served
+    ring = dep.ring(2)
+    state = ring.init_state()
+    per_chip = {sh.data.shape for sh in state.addressable_shards}
+    assert per_chip == {(ring.round_width, 2, ring.payload_width)}
+    masks = np.zeros((ring.ring_depth, ring.round_width), dtype=bool)
+    zero = jnp.zeros((ring.round_width, 2, ring.payload_width))
+    state2, lanes = ring._tick(ring._stack_params(params), state, zero,
+                               masks)
+    assert {sh.data.shape for sh in state2.addressable_shards} == per_chip
+    # the exiting round is one round of output images, nothing bigger
+    assert lanes.shape == (ring.round_batch,) + net.map_shape(net.n_layers)
+
+
+# --------------------------------------------------------------------------
+# Steady-state schedule view
+# --------------------------------------------------------------------------
+
+def test_steady_schedule_view_matches_closed_form():
+    plan = plan_replication([15.0, 35.0, 40.0, 10.0], target_period=20.0)
+    steady = steady_schedule(plan)
+    sched = staggered_schedule(plan, 24)
+    assert sched.steady() == steady
+    assert steady.round_width == sched.round_width
+    assert steady.owner_table() == sched.owner_table()
+    assert all(steady.slot_perm(w) == sched.slot_perm(w)
+               for w in range(steady.round_width))
+    assert steady.ring_depth == len(plan.replicas)
+    t = plan.stage_times
+    assert math.isclose(steady.predicted_throughput(t), plan.throughput)
+    # the finite schedule's throughput converges to the steady prediction
+    big = staggered_schedule(plan, 10_000 * steady.round_width)
+    assert big.predicted_throughput(t) == pytest.approx(
+        steady.predicted_throughput(t), rel=1e-2)
+
+
+# --------------------------------------------------------------------------
+# Registry-driven stage bodies
+# --------------------------------------------------------------------------
+
+def test_spmd_body_resolution():
+    """Pipeline stage bodies resolve through the registry: engines with a
+    body builder run themselves; the Pallas kernel falls back to its scan
+    twin; the interpreted loop dead-ends loudly."""
+    assert occam.resolve_spmd_engine("scan").name == "scan"
+    assert occam.resolve_spmd_engine("oracle").name == "oracle"
+    assert occam.resolve_spmd_engine("pallas").name == "scan"
+    with pytest.raises(occam.BackendError, match="SPMD"):
+        occam.resolve_spmd_engine("interpreted")
+
+
+def test_registered_spmd_body_drives_pipeline_stage():
+    """A future real-TPU stage body is a register_engine call: a custom
+    engine's make_spmd_body is built and executed by StapPipeline without
+    any pipeline edits."""
+    require_devices(2)
+    built, executed = [], []
+    oracle = occam.get_engine("oracle")
+
+    def make_body(net, a, b, spill, src_keys):
+        built.append((a, b))
+        inner = oracle.make_spmd_body(net, a, b, spill, src_keys)
+
+        def body(span_params, x, srcs):
+            executed.append((a, b))   # trace-time: body really selected
+            return inner(span_params, x, srcs)
+
+        return body
+
+    occam.register_engine(
+        "test_spmd", priority=1, accepts=lambda n, a, b, c: (True, "test"),
+        run=oracle.run, spmd_capable=True, make_spmd_body=make_body)
+    try:
+        net = chain("t", [(C, 3, 1, 1, 4), (C, 3, 1, 1, 4)], in_h=8,
+                    in_w=8, in_ch=3)
+        params = cnn.init_params(jax.random.PRNGKey(0), net)
+        xs = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+        pipe = stap_pipeline.StapPipeline(net, [1], 2, 1)
+        assert [st.route.route for st in pipe.stages] == ["test_spmd"] * 2
+        assert [pipe.executed_engine(st) for st in pipe.stages] == \
+            ["test_spmd"] * 2
+        y = pipe.run(params, xs)
+        assert built == [(0, 1), (1, 2)]
+        assert executed  # the registered body traced into the program
+        assert_close(y, _ref(params, net, xs))
+    finally:
+        occam.unregister_engine("test_spmd")
+
+
+# --------------------------------------------------------------------------
+# Acceptance: steady-state session throughput vs the schedule prediction
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_serve_throughput_matches_steady_prediction():
+    """Steady-state measured session throughput is within 30% of the
+    steady schedule's prediction under deployed stage times (the PR-2
+    band; same timeshared-host caveats as the STAP acceptance check)."""
+    require_devices(6)
+    import os as _os
+
+    if (_os.cpu_count() or 1) < 2:
+        pytest.skip("needs >= 2 host cores for replica concurrency")
+    from benchmarks.occam_serve import serve_measurement
+
+    best = None
+    for _attempt in range(2):       # serve_measurement retries internally
+        row = serve_measurement()
+        assert row["session_compile_count"] == 1
+        ratio = row["serve_thr_measured_over_predicted"]
+        best = ratio if best is None or abs(ratio - 1) < abs(best - 1) \
+            else best
+        if abs(best - 1) <= 0.30:
+            break
+    assert abs(best - 1) <= 0.30, \
+        f"measured/predicted serving throughput off by {best:.2f}x"
