@@ -59,12 +59,24 @@ def _occam_serve():
     return occam_serve()
 
 
+def _occam_autoplan():
+    # fleet-aware planning frontier (occam.autoplan): frontier best ==
+    # exhaustive capacity x placement enumeration, memoized DP sweep vs
+    # naive per-capacity re-runs; writes results/BENCH_autoplan.json
+    from benchmarks.occam_autoplan import occam_autoplan
+
+    return occam_autoplan()
+
+
 BENCHES.append(
     ("occam_stap", _occam_stap,
      "STAP pipeline throughput measured/predicted (1.0 = exact)"))
 BENCHES.append(
     ("occam_serve", _occam_serve,
      "serving session throughput measured/predicted (1.0 = exact)"))
+BENCHES.append(
+    ("occam_autoplan", _occam_autoplan,
+     "memoized DP-sweep speedup vs naive (frontier == exhaustive best)"))
 
 
 def main() -> None:

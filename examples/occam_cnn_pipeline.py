@@ -1,6 +1,7 @@
-"""The paper, end to end on one CNN: plan ResNet-34's deployment with the
-staged API (DP partition + engine routes), validate traffic, and place
-its STAP pipeline under several chip budgets.
+"""The paper, end to end on one CNN: describe the hardware as an
+``occam.Fleet``, let ``occam.autoplan`` search ResNet-34's planning
+frontier (capacity sweep x STAP placements), validate traffic, and watch
+the frontier's best pick change as the fleet grows.
 
     PYTHONPATH=src python examples/occam_cnn_pipeline.py
 """
@@ -14,9 +15,16 @@ from repro.models.zoo import get_network
 CAP = 3 * 1024 * 1024
 
 net = get_network("resnet34")
-plan = occam.plan(net, CAP)
+fleet = occam.Fleet(chips=16, vmem_elems=CAP)
+frontier = occam.autoplan(net, fleet, objective="throughput")
+plan = frontier.best("traffic").plan    # min-traffic candidate's plan
 part = plan.partition
-print(f"ResNet-34 -> {plan.n_spans} spans at 3MB "
+print(f"ResNet-34 under Fleet(chips=16, vmem=3MB): "
+      f"{frontier.stats['capacities_swept']} capacities swept with "
+      f"{frontier.stats['dp_runs']} DP runs, "
+      f"{frontier.stats['placements_scored']} placements scored, "
+      f"{len(frontier)} Pareto candidates")
+print(f"min-traffic candidate -> {plan.n_spans} spans "
       f"(paper Table II: 10 spans); routes "
       f"{sorted(set(r.route for r in plan.routes))}")
 rep = partition_report(net, CAP)
@@ -35,18 +43,27 @@ r = compare_schemes(net, CAP)
 print(f"modeled speedup {r['speedup_occam']:.2f}x, energy saving "
       f"{r['energy_saving_occam']:.0%}")
 
-# deploy: each span on its own chip; compute per-span latency from MACs,
-# then place the plan under growing chip budgets (planning only — pass
-# max_replicas to lift the one-host mesh cap)
+# deploy: grow the fleet and re-run the frontier search — the
+# best-throughput candidate replicates its bottleneck stages further as
+# chips appear (planning only; validate each with the event simulator)
 m = MachineModel()
-span_macs = [sum(net.layers[i].macs for i in range(sp.start, sp.end))
-             for sp in part.spans]
-times = [mc / m.macs_per_sec * 1e6 for mc in span_macs]  # us
-print(f"\nstage latencies (us): {[round(t, 1) for t in times]}")
-for budget in (plan.n_spans, plan.n_spans + 4, plan.n_spans + 8):
-    placement = plan.place(chips=budget, stage_times=times,
-                           max_replicas=budget)
-    stats = simulate(placement.stap, 500)
-    print(f"  {budget:2d} chips: replicas {placement.replicas} -> "
-          f"{stats.throughput*1e6:.2f} img/s/1e6, "
-          f"latency {stats.mean_latency:.0f}us")
+print("\nfleet sweep (best-throughput candidate per fleet; a pipeline "
+      "with S stages and r replicas occupies an S x max(r) mesh):")
+for chips in (plan.n_spans, 2 * plan.n_spans, 4 * plan.n_spans):
+    fr = occam.autoplan(net, occam.Fleet(chips=chips, vmem_elems=CAP,
+                                         macs_per_s=m.macs_per_sec))
+    cand = fr.best("throughput")
+    placement = cand.placement()
+    sim = (f"simulated {simulate(placement.stap, 500).throughput * m.macs_per_sec:.4g} img/s"
+           if placement.kind == occam.PIPELINE else "single chip")
+    print(f"  {chips:2d}-chip fleet: {cand.kind} replicas "
+          f"{cand.replicas} ({cand.chips} chips used) -> predicted "
+          f"{cand.throughput:.4g} img/s, {sim}, "
+          f"round width {cand.round_width}")
+# the observed arrival rate closes the loop: the frontier hands back the
+# cheapest candidate meeting it (Session.scale does this per session)
+rate = 0.5 * frontier.best("throughput").throughput
+cheap = frontier.for_rate(rate)
+print(f"\nfor_rate({rate:.0f} img/s): {cheap.kind} on {cheap.chips} "
+      f"chips, replicas {cheap.replicas} "
+      f"(predicted {cheap.throughput:.0f} img/s)")

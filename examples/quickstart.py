@@ -39,7 +39,7 @@ print(f"off-chip traffic reduction: {r['traffic_reduction_occam']:.1f}x; "
       f"modeled speedup {r['speedup_occam']:.2f}x vs base, "
       f"{r['speedup_occam_vs_lf']:.2f}x vs Layer Fusion")
 
-# --- execution: plan -> place -> compile -> run ------------------------------
+# --- execution: Fleet -> autoplan -> Frontier -> deploy ----------------------
 key = jax.random.PRNGKey(0)
 # miniature input for a quick CPU run
 from repro.core.graph import chain
@@ -48,8 +48,12 @@ tiny = chain("tiny", [("conv", 3, 1, 1, 8), ("conv", 3, 1, 1, 8),
              in_h=16, in_w=16, in_ch=3)
 params = cnn.init_params(key, tiny)
 x = jax.random.normal(jax.random.PRNGKey(1), (16, 16, 3))
-plan = occam.plan(tiny, 3000)           # DP partition + engine routes
-dep = plan.place().compile()            # single chip, auto backend
+# describe the hardware once; the planner derives capacity + placement
+fleet = occam.Fleet(chips=1, vmem_elems=3000)
+frontier = occam.autoplan(tiny, fleet)  # capacity sweep x placements
+best = frontier.best("traffic")         # Pareto winner per objective
+plan = best.plan                        # an ordinary (schema v3) Plan
+dep = best.deploy()                     # place + compile inside
 y_stream = dep.run(params, x)
 y_ref = cnn.reference_forward(params, x, tiny)
 np.testing.assert_allclose(np.asarray(y_stream), np.asarray(y_ref),
@@ -60,7 +64,10 @@ print(f"staged execution == oracle; measured transfers "
       f"{int(report.measured_elems)} == DP prediction "
       f"{int(plan.predicted_transfers)} "
       f"(routes: {[r.route for r in plan.routes]})")
-# plans are serializable: ship the JSON, compile on the serving host
+# frontiers (and the plans inside them) are serializable: ship the JSON,
+# deploy on the serving host without re-running the search
+frontier2 = occam.frontier_from_json(frontier.to_json())
+assert frontier2.best("traffic").plan.boundaries == plan.boundaries
 plan2 = occam.plan_from_json(plan.to_json())
 assert plan2.boundaries == plan.boundaries
 
@@ -72,12 +79,14 @@ stats = simulate(splan, n_jobs=100, arrival_period=splan.bottleneck_period)
 print(f"STAP 15-35-40-10 with replicas {splan.replicas}: "
       f"throughput 1/{1/stats.throughput:.0f} per unit (paper: 1/20), "
       f"latency {stats.mean_latency:.0f} (paper: 100)")
-# the same replication planning, staged: a multi-chip Placement of the
-# tiny net (plan.place(chips=...) wraps plan_replication + the schedule;
-# max_replicas lifts the default one-device mesh cap — planning only)
-placement = plan.place(chips=plan.n_spans + 1, max_replicas=2)
-unrep = plan.place(pipeline=True)
-print(f"plan.place({plan.n_spans + 1} chips): replicas "
-      f"{placement.replicas} on a {plan.n_spans}-stage STAP pipeline, "
-      f"throughput x{placement.stap.throughput / unrep.stap.throughput:.1f} "
-      f"over unreplicated")
+# the same replication planning, fleet-aware: grow the fleet and the
+# frontier's best-throughput candidate picks up replicated pipelines
+# (planning only — no devices touched)
+big = occam.autoplan(tiny, occam.Fleet(chips=2 * plan.n_spans + 2,
+                                       vmem_elems=3000))
+fast = big.best("throughput")
+print(f"autoplan on a {big.fleet.chips}-chip fleet: best-throughput "
+      f"candidate is a {fast.kind} placement, replicas {fast.replicas}, "
+      f"{fast.chips} chips, x{best.period / fast.period:.1f} predicted "
+      f"throughput over the 1-chip fleet "
+      f"({len(big)} Pareto candidates on the frontier)")

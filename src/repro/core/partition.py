@@ -151,13 +151,18 @@ class CNNPartitionProblem:
     def boundary_cost(self, i: int) -> float:
         return float(self.batch * self.net.map_elems(i))
 
-    def span_fits(self, i: int, j: int) -> bool:
-        # Feature-map closures scale with batch; filters are shared (Eqn. 6).
+    def footprint(self, i: int, j: int) -> float:
+        """fp(i, j): batch-scaled closure + chip-resident filters — the
+        one definition of the DP's feasibility quantity (shared with
+        :class:`PartitionSweep`'s memo). Feature-map closures scale with
+        batch; filters are shared (Eqn. 6)."""
         from .closure import span_closure_elems
 
-        fp = (self.batch * span_closure_elems(self.net, i, j)
-              + self.net.span_weight_elems(i, j))
-        return fp <= self.capacity_elems
+        return float(self.batch * span_closure_elems(self.net, i, j)
+                     + self.net.span_weight_elems(i, j))
+
+    def span_fits(self, i: int, j: int) -> bool:
+        return self.footprint(i, j) <= self.capacity_elems
 
     def residual_edges(self) -> Sequence[tuple[int, int]]:
         return self.net.residual_edges
@@ -246,6 +251,146 @@ def partition_transformer(layer_weight_bytes: Sequence[float],
     return optimal_partition(TransformerPartitionProblem(
         list(layer_weight_bytes), list(layer_act_bytes),
         boundary_act_bytes, stage_capacity_bytes, list(edges)))
+
+
+# --------------------------------------------------------------------------
+# Memoized capacity sweeps (fleet-aware planning — repro.occam.autoplan)
+# --------------------------------------------------------------------------
+
+class _TabulatedCNNProblem(CNNPartitionProblem):
+    """CNN problem whose ``span_fits`` reads a sweep's footprint memo
+    instead of re-walking dependence closures per capacity."""
+
+    def __init__(self, sweep: "PartitionSweep", capacity_elems: int):
+        super().__init__(sweep.net, capacity_elems, sweep.batch)
+        self._sweep = sweep
+
+    def span_fits(self, i: int, j: int) -> bool:
+        return self._sweep.footprint(i, j) <= self.capacity_elems
+
+
+@dataclasses.dataclass(frozen=True)
+class SweptPartition:
+    """One point of a capacity sweep: the DP's optimum at this capacity."""
+
+    capacity_elems: int
+    result: PartitionResult
+
+
+class PartitionSweep:
+    """Memoized Occam DP sweep over on-chip capacities (one net, one batch).
+
+    The DP depends on capacity only through ``span_fits``; the span
+    footprints ``fp(i, j) = batch * |DC(i, j)| + sum W`` are themselves
+    capacity-independent. A fleet-aware planner sweeping many capacities
+    therefore shares ONE footprint table (the O(n^3) closure walks)
+    across the whole sweep instead of re-deriving it per capacity, and
+    the DP re-runs only when the *fits set* actually changes.
+
+    Two more exact prunes keep the sweep cheap:
+
+    * ``candidate_capacities`` — the DP result is constant between
+      consecutive distinct footprint values, so only those thresholds
+      (<= the fleet's vmem) are ever evaluated.
+    * ``sweep`` bisects the threshold list: transfers(C) is
+      non-increasing in C, and a partition optimal at both ends of an
+      interval with *equal* cost stays feasible (its spans still fit at
+      any larger capacity) and hence optimal throughout — the interior
+      fills without running the DP.
+    """
+
+    def __init__(self, net: NetSpec, batch: int = 1):
+        self.net = net
+        self.batch = batch
+        self._problem = CNNPartitionProblem(net, 0, batch)  # formula owner
+        self._fp: dict[tuple[int, int], float] = {}
+        self._results: dict[int, PartitionResult] = {}
+        self._by_fits: dict[frozenset, PartitionResult] = {}
+        self.dp_runs = 0           # DPs actually executed (memo diagnostics)
+
+    def footprint(self, i: int, j: int) -> float:
+        """``CNNPartitionProblem.footprint`` (the one definition of the
+        DP's feasibility quantity), memoized across the whole sweep."""
+        key = (i, j)
+        fp = self._fp.get(key)
+        if fp is None:
+            fp = self._problem.footprint(i, j)
+            self._fp[key] = fp
+        return fp
+
+    def candidate_capacities(self, vmem_elems: int) -> list[int]:
+        """The finite set of capacities that matter under ``vmem_elems``:
+        the distinct span footprints <= vmem, ascending (the DP's fits
+        set — hence its result — is constant between consecutive
+        thresholds). When no span fits at all, ``[vmem_elems]`` (the DP
+        still partitions, in per-layer lower-bound mode)."""
+        n = self.net.n_layers
+        caps = sorted({int(self.footprint(i, j))
+                       for i in range(n) for j in range(i + 1, n + 1)
+                       if self.footprint(i, j) <= vmem_elems})
+        return caps or [int(vmem_elems)]
+
+    def partition_at(self, capacity_elems: int) -> PartitionResult:
+        """The optimal partition at one capacity (memoized twice: by
+        capacity and by fits-set signature, so capacities between the
+        same thresholds never re-run the DP)."""
+        res = self._results.get(capacity_elems)
+        if res is not None:
+            return res
+        n = self.net.n_layers
+        fits = frozenset((i, j) for i in range(n)
+                         for j in range(i + 1, n + 1)
+                         if self.footprint(i, j) <= capacity_elems)
+        res = self._by_fits.get(fits)
+        if res is None:
+            res = optimal_partition(_TabulatedCNNProblem(self,
+                                                         capacity_elems))
+            self.dp_runs += 1
+            self._by_fits[fits] = res
+        self._results[capacity_elems] = res
+        return res
+
+    def _refit(self, res: PartitionResult,
+               capacity_elems: int) -> PartitionResult:
+        """Re-evaluate per-span ``fits`` flags at another capacity (the
+        cuts and transfer count carry over unchanged — an oversized
+        single layer's lower bound equals its cost once it fits, which
+        is exactly why the bisection fill is transfer-exact — but the
+        flags drive engine routing and must reflect the new capacity)."""
+        spans = [Span(sp.start, sp.end,
+                      self.footprint(sp.start, sp.end) <= capacity_elems)
+                 for sp in res.spans]
+        if all(a.fits == b.fits for a, b in zip(spans, res.spans)):
+            return res
+        return PartitionResult(list(res.boundaries), spans, res.transfers,
+                               res.table_X, res.table_p)
+
+    def sweep(self, vmem_elems: int) -> list[SweptPartition]:
+        """Optimal partitions at every candidate capacity <= vmem."""
+        caps = self.candidate_capacities(vmem_elems)
+        out: list[PartitionResult | None] = [None] * len(caps)
+        out[0] = self.partition_at(caps[0])
+        out[-1] = self.partition_at(caps[-1])
+
+        def refine(lo: int, hi: int) -> None:
+            if hi - lo < 2:
+                return
+            a, b = out[lo], out[hi]
+            if a.transfers == b.transfers:
+                # a's spans fit at caps[lo], hence at every larger
+                # capacity, and transfers(C) is non-increasing — a is
+                # optimal on the whole interval. Fill without the DP.
+                for k in range(lo + 1, hi):
+                    out[k] = self._refit(a, caps[k])
+                    self._results.setdefault(caps[k], out[k])
+                return
+            mid = (lo + hi) // 2
+            out[mid] = self.partition_at(caps[mid])
+            refine(lo, mid)
+            refine(mid, hi)
+
+        refine(0, len(caps) - 1)
+        return [SweptPartition(c, r) for c, r in zip(caps, out)]
 
 
 # --------------------------------------------------------------------------

@@ -47,7 +47,9 @@ class StapPlan:
 def plan_replication(stage_times: Sequence[float],
                      target_period: float | None = None,
                      max_chips: int | None = None,
-                     max_replicas: int | None = None) -> StapPlan:
+                     max_replicas: int | None = None,
+                     harmonize: bool = False,
+                     harmonize_eps: float = 0.05) -> StapPlan:
     """Pick replica counts r_i.
 
     With ``target_period`` T: r_i = ceil(t_i / T)  (minimum replicas meeting T).
@@ -59,6 +61,13 @@ def plan_replication(stage_times: Sequence[float],
     (stage, replica) device mesh whose replica axis is max_replicas wide
     (a capped target_period plan may miss the target; the returned
     throughput is always honest).
+
+    ``harmonize=True`` applies the round-width economy pass: snap each
+    r_i to a divisor of max(r) so the executable's lcm(replicas) slot
+    unroll shrinks (e.g. 4-3-2 -> 4-4-2: round width 12 -> 4), snapping
+    *up* when the chip budget allows (throughput never drops) and *down*
+    only when the predicted throughput loss stays within
+    ``harmonize_eps`` (relative).
     """
     times = [float(t) for t in stage_times]
     if any(t <= 0 for t in times):
@@ -85,8 +94,49 @@ def plan_replication(stage_times: Sequence[float],
             budget -= 1
     else:
         reps = [1] * n
+    if harmonize:
+        reps = _harmonize_replicas(times, reps, max_chips, harmonize_eps)
     thr = 1.0 / max(t / r for t, r in zip(times, reps))
     return StapPlan(tuple(times), tuple(reps), thr, sum(times), sum(reps))
+
+
+def _harmonize_replicas(times: Sequence[float], reps: Sequence[int],
+                        max_chips: int | None, eps: float) -> list[int]:
+    """Round-width economy: snap replica counts to divisors of max(reps).
+
+    The SPMD executor unrolls lcm(replicas) slots per tick
+    (:class:`StaggeredSchedule`), so pairwise-coprime vectors like 4-3-2
+    pay a 12-wide round. When every r_i divides r_max the width collapses
+    to r_max. Per stage (bottleneck untouched — it already holds r_max):
+    prefer the smallest divisor of r_max *above* r_i (more replicas,
+    throughput can only rise) when the chip budget allows it, else fall
+    back to the largest divisor *below* r_i if the resulting throughput
+    stays within ``eps`` of the unharmonized plan. Stages that cannot
+    snap keep their count — the pass never makes throughput worse than
+    the eps band and never exceeds ``max_chips``.
+    """
+    reps = [int(r) for r in reps]
+    r_max = max(reps)
+    divisors = [d for d in range(1, r_max + 1) if r_max % d == 0]
+    base_thr = 1.0 / max(t / r for t, r in zip(times, reps))
+    budget = max_chips if max_chips is not None else math.inf
+    chips = sum(reps)
+    for i in range(len(reps)):
+        if r_max % reps[i] == 0:
+            continue
+        up = min(d for d in divisors if d > reps[i])
+        down = max(d for d in divisors if d < reps[i])
+        if chips - reps[i] + up <= budget:
+            chips += up - reps[i]
+            reps[i] = up
+            continue
+        trial = reps.copy()
+        trial[i] = down
+        thr = 1.0 / max(t / r for t, r in zip(times, trial))
+        if thr >= (1.0 - eps) * base_thr:
+            chips += down - reps[i]
+            reps[i] = down
+    return reps
 
 
 # --------------------------------------------------------------------------

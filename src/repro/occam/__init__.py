@@ -1,11 +1,25 @@
-"""Staged Occam deployment API: ``plan -> place -> compile -> run``.
+"""Staged Occam deployment API: ``autoplan`` / ``plan -> place -> compile``.
 
 The paper's pipeline is inherently staged — DP partitioning for a capacity
 (§III-D), chip placement with STAP replication (§III-E), then execution
 with boundary-only off-chip traffic — and this package is that pipeline as
-an AOT-style API (modeled on JAX's ``lower``/``compile`` staging)::
+an AOT-style API (modeled on JAX's ``lower``/``compile`` staging).
+
+The front door is fleet-aware: describe the hardware once and let the
+planner derive capacity and placement instead of hand-feeding them::
 
     from repro import occam
+
+    fleet = occam.Fleet(chips=8, vmem_elems=3 * 1024 * 1024)
+    frontier = occam.autoplan(net, fleet, objective="throughput")
+    frontier.save("resnet18.frontier.json")     # ships like a plan
+
+    dep = frontier.best("traffic").deploy()     # place + compile inside
+    session = dep.serve(params)                 # continuous serving
+    session = session.scale(arrival_rate=rate)  # frontier-driven autoscale
+
+``plan``/``place`` remain the low-level surface when you already know the
+capacity and placement you want::
 
     plan = occam.plan(net, capacity_elems, batch=1)   # DP + engine routes
     plan.save("resnet18.plan.json")                   # ships to serving
@@ -32,6 +46,7 @@ See ``docs/deployment_api.md``.
 """
 from . import registry
 from .deploy import Deployment, Session, Ticket
+from .fleet import Fleet, load_fleet
 from .place import PIPELINE, SINGLE, Placement
 from .plan import (PLAN_FORMAT_VERSION, Plan, ServingDefaults, load_plan,
                    plan, plan_from_dict, plan_from_json)
@@ -39,13 +54,18 @@ from .registry import (AUTO, BackendError, EngineSpec, RouteContext,
                        backend_names, get_engine, register_engine,
                        registered_engines, resolve_spmd_engine,
                        unregister_engine)
+from .search import (FRONTIER_FORMAT_VERSION, OBJECTIVES, Candidate,
+                     Frontier, autoplan, frontier_from_dict,
+                     frontier_from_json, load_frontier)
 
 __all__ = [
-    "AUTO", "PIPELINE", "PLAN_FORMAT_VERSION", "SINGLE",
-    "BackendError", "Deployment", "EngineSpec", "Placement", "Plan",
-    "RouteContext", "ServingDefaults", "Session", "Ticket",
-    "backend_names", "get_engine", "load_plan", "plan",
-    "plan_from_dict", "plan_from_json", "register_engine",
-    "registered_engines", "registry", "resolve_spmd_engine",
-    "unregister_engine",
+    "AUTO", "FRONTIER_FORMAT_VERSION", "OBJECTIVES", "PIPELINE",
+    "PLAN_FORMAT_VERSION", "SINGLE",
+    "BackendError", "Candidate", "Deployment", "EngineSpec", "Fleet",
+    "Frontier", "Placement", "Plan", "RouteContext", "ServingDefaults",
+    "Session", "Ticket", "autoplan", "backend_names", "frontier_from_dict",
+    "frontier_from_json", "get_engine", "load_fleet", "load_frontier",
+    "load_plan", "plan", "plan_from_dict", "plan_from_json",
+    "register_engine", "registered_engines", "registry",
+    "resolve_spmd_engine", "unregister_engine",
 ]

@@ -55,6 +55,8 @@ from .place import PIPELINE, SINGLE, Placement
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.runtime.stap_pipeline import StapPipeline, StapRing
 
+    from .search import Candidate, Frontier
+
 class Deployment:
     """A compiled, runnable placement. Build via ``Placement.compile``."""
 
@@ -84,6 +86,10 @@ class Deployment:
                                     backend=backend)
         self.counter = TrafficCounter()
         self._images = 0
+        # set by Candidate.deploy: where this deployment sits on a
+        # planning frontier (drives reconcile / Session.scale)
+        self.candidate: "Candidate | None" = None
+        self.frontier: "Frontier | None" = None
         self._pipes: dict[int, "StapPipeline"] = {}
         self._rings: dict[int, "StapRing"] = {}
         # single-device serving steps, one jit per round_batch; the dict
@@ -173,7 +179,8 @@ class Deployment:
 
     def serve(self, params: Sequence[dict], *,
               round_batch: int | None = None,
-              max_pending: int = 16) -> "Session":
+              max_pending: int = 16,
+              max_wait_ticks: int | None = None) -> "Session":
         """Open a continuous serving session (the steady-state surface).
 
         ``round_batch``: images per compiled round — the ONE fixed shape
@@ -185,10 +192,49 @@ class Deployment:
         compute, are dropped from outputs, and are excluded from measured
         traffic. ``max_pending``: completed rounds the session buffers
         before ``submit`` demands a ``results()`` drain (host-side
-        backpressure).
+        backpressure). ``max_wait_ticks``: latency budget for sub-round
+        traffic — a queued partial round auto-flushes once it has waited
+        this many *subsequent* session ticks (``submit``/``ready``
+        calls; the submit that starts the partial doesn't count, so
+        later traffic always gets a chance to batch into it) without
+        filling — a lone small request completes under polling without
+        an explicit ``flush()``/``results()`` (default: wait
+        indefinitely).
         """
         return Session(self, params, round_batch=round_batch,
-                       max_pending=max_pending)
+                       max_pending=max_pending,
+                       max_wait_ticks=max_wait_ticks)
+
+    def reconcile(self, frontier: "Frontier | None" = None, *,
+                  arrival_rate: float) -> "Deployment":
+        """Serve-time autoscaling: the deployment for the cheapest
+        frontier candidate meeting ``arrival_rate`` (images/s).
+
+        Returns ``self`` when this deployment's own candidate is already
+        the pick; otherwise the chosen candidate's (cached) deployment —
+        compiled placements are reused per candidate, and the DP never
+        re-runs (the frontier already holds every plan). ``frontier``
+        defaults to the one this deployment was deployed from
+        (``Candidate.deploy``).
+        """
+        f = frontier if frontier is not None else self.frontier
+        if f is None:
+            raise ValueError(
+                "no frontier to reconcile against: deploy via "
+                "occam.autoplan(...) -> Candidate.deploy(), or pass "
+                "frontier=")
+        cand = f.for_rate(arrival_rate)
+        if self.candidate is not None and cand is self.candidate:
+            return self
+        # the pick inherits this deployment's bindings: same backend,
+        # same interpret mode, same device pool. A pinned *mesh* cannot
+        # carry over (its shape fits only this candidate's stage x
+        # replica geometry) — its devices do.
+        devices = self.devices
+        if devices is None and self.mesh is not None:
+            devices = tuple(self.mesh.devices.flat)
+        return cand.deploy(self.backend, devices=devices,
+                           interpret=self.interpret)
 
     def run(self, params: Sequence[dict], xs: jax.Array,
             counter: TrafficCounter | None = None) -> jax.Array:
@@ -316,11 +362,17 @@ class Session:
     """
 
     def __init__(self, deployment: Deployment, params: Sequence[dict], *,
-                 round_batch: int | None = None, max_pending: int = 16):
+                 round_batch: int | None = None, max_pending: int = 16,
+                 max_wait_ticks: int | None = None):
         if max_pending < 1:
             raise ValueError("max_pending must be >= 1")
+        if max_wait_ticks is not None and max_wait_ticks < 1:
+            raise ValueError("max_wait_ticks must be >= 1 (or None to "
+                             "wait indefinitely)")
         self.deployment = deployment
         self.params = params
+        self.max_wait_ticks = max_wait_ticks
+        self._waited = 0            # session ticks the queued partial aged
         placement = deployment.placement
         self.round_batch, self.microbatch = \
             placement.serve_geometry(round_batch)
@@ -364,6 +416,7 @@ class Session:
         """
         if self._closed:
             raise RuntimeError("session is closed")
+        had_partial = self._queued > 0
         xs = jnp.asarray(images)
         if xs.ndim == 3:
             xs = xs[None]
@@ -387,11 +440,20 @@ class Session:
                     f"rounds (max_pending={self.max_pending}); drain "
                     f"with results()")
             self._tick(*self._take_round())
+        # age only a PRE-EXISTING partial: the submit that starts (or
+        # extends) a fresh remainder must give later traffic at least
+        # one tick to fill it, or max_wait_ticks=1 would degenerate to
+        # flush-per-submit with no cross-submit batching ever
+        if had_partial:
+            self._age_partial()
         return ticket
 
     def ready(self) -> tuple[Ticket, ...]:
-        """Tickets whose results are complete right now (no flushing),
-        in submit order."""
+        """Tickets whose results are complete right now, in submit order.
+        Never flushes on demand — but under a ``max_wait_ticks`` budget
+        each call ages the queued partial round one tick, so polling
+        eventually pushes a lone sub-round submit through."""
+        self._age_partial()
         return tuple(ts.ticket for ts in self._tickets.values() if ts.done)
 
     def results(self, *, flush: bool = True
@@ -428,6 +490,7 @@ class Session:
             self._tick(*self._take_round())   # then the masked partial one
         while any(m is not None for m in self._in_flight):
             self._tick(None, 0)
+        self._waited = 0
 
     def sync(self) -> "Session":
         """Block until every dispatched tick has finished (ticks dispatch
@@ -438,6 +501,35 @@ class Session:
             if ts.chunks:
                 jax.block_until_ready(ts.chunks[-1])
         return self
+
+    def scale(self, *, arrival_rate: float) -> "Session":
+        """Serve-time autoscaling: re-pick the deployment for an observed
+        ``arrival_rate`` (images/s) from the planning frontier.
+
+        Returns ``self`` when the current deployment already is the
+        cheapest candidate meeting the rate. Otherwise the session is
+        flushed (outstanding tickets complete and stay collectable via
+        ``results()`` here) and a NEW session on the chosen candidate's
+        cached deployment is returned — submit new traffic there. The
+        frontier is reused as-is: no DP, no search, and candidates the
+        session scaled through before keep their compiled deployments.
+        This session's ``round_batch`` carries over when the new
+        placement's round width still divides it; otherwise the new
+        session falls back to the candidate's own geometry default (an
+        explicit round size cannot outlive the geometry it sized).
+        """
+        dep = self.deployment.reconcile(arrival_rate=arrival_rate)
+        if dep is self.deployment:
+            return self
+        self.flush()
+        try:
+            dep.placement.serve_geometry(self.round_batch)
+            round_batch = self.round_batch
+        except ValueError:
+            round_batch = None
+        return dep.serve(self.params, round_batch=round_batch,
+                         max_pending=self.max_pending,
+                         max_wait_ticks=self.max_wait_ticks)
 
     def close(self) -> list[tuple[Ticket, jax.Array]]:
         """Flush, collect the final results, and end the session."""
@@ -480,6 +572,7 @@ class Session:
             "microbatch": self.microbatch,
             "ring_depth": self.ring_depth,
             "max_pending": self.max_pending,
+            "max_wait_ticks": self.max_wait_ticks,
             "compile_count": self.compile_count,
             "images_entered": self._images,
             "tickets_open": len(self._tickets),
@@ -490,6 +583,20 @@ class Session:
         return d
 
     # -- internals ----------------------------------------------------------
+
+    def _age_partial(self) -> None:
+        """Sub-round latency budget (``max_wait_ticks``): age the queued
+        partial round by one session tick (a ``submit`` or ``ready``
+        call); once it has waited the budget out, auto-flush it through
+        as a masked partial round."""
+        if not self._queued:
+            self._waited = 0
+            return
+        if self.max_wait_ticks is None:
+            return
+        self._waited += 1
+        if self._waited >= self.max_wait_ticks:
+            self.flush()
 
     def _take_round(self):
         """Pop up to round_batch queued images -> (segments, images)."""

@@ -1,0 +1,105 @@
+"""Declarative hardware model for fleet-aware planning (``occam.Fleet``).
+
+Occam's DP guarantees least off-chip traffic *for a given on-chip
+capacity* (paper §III-C/D) and STAP picks replicas *for a given stage-time
+profile* (§III-E) — both are functions of the machine, not free knobs. A
+:class:`Fleet` states what the machine actually is: how many chips there
+are, how much on-chip (VMEM) capacity each holds, and optionally the
+bandwidths that bound the roofline. ``occam.autoplan(net, fleet)``
+derives capacity and placement from it instead of asking the caller to
+hand-feed ``capacity_elems=`` / ``chips=`` / ``replicas=``.
+
+Fleets are JSON documents like plans are: ``to_json`` / ``save`` /
+``load_fleet`` ship the hardware description to wherever planning runs,
+and plan schema v3 embeds the fleet a plan was searched under.
+
+Sizes are in *elements* (dtype-agnostic, as everywhere in ``repro.core``);
+rates are elements (or MACs) per second.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+# The paper's scaled single-inference slice (Table I): 15K MAC units at
+# ~1 GHz. Stage-time models count MACs; this converts them to seconds so
+# optional bandwidth bounds (elements/s) compose on one axis.
+DEFAULT_MACS_PER_S = 15_000 * 1.0e9
+
+
+@dataclasses.dataclass(frozen=True)
+class Fleet:
+    """The hardware a deployment will actually run on.
+
+    ``chips``: devices available — a STAP placement of S stages with
+    replica vector r occupies an S x max(r) mesh, which must fit here.
+    ``vmem_elems``: per-chip on-chip capacity in elements — the DP's C;
+    ``autoplan`` sweeps the candidate dependence-closure thresholds up to
+    it. ``link_elems_per_s`` / ``hbm_elems_per_s``: optional inter-chip
+    and off-chip bandwidths; when given, candidate periods are
+    roofline-bounded by boundary-payload and off-chip traffic.
+    ``macs_per_s``: per-chip compute rate used to put the MAC-count stage
+    model in seconds (default: the paper's scaled slice).
+    """
+
+    chips: int
+    vmem_elems: int
+    link_elems_per_s: float | None = None
+    hbm_elems_per_s: float | None = None
+    macs_per_s: float = DEFAULT_MACS_PER_S
+
+    def __post_init__(self) -> None:
+        if self.chips < 1:
+            raise ValueError("a fleet needs at least one chip")
+        if self.vmem_elems < 1:
+            raise ValueError("vmem_elems must be positive")
+        for field in ("link_elems_per_s", "hbm_elems_per_s"):
+            v = getattr(self, field)
+            if v is not None and v <= 0:
+                raise ValueError(f"{field} must be positive when given")
+        if self.macs_per_s <= 0:
+            raise ValueError("macs_per_s must be positive")
+
+    def max_replicas(self, n_stages: int) -> int:
+        """Widest replica axis an ``n_stages``-stage mesh can hold here
+        (0 when the fleet cannot host the pipeline at all)."""
+        return self.chips // n_stages
+
+    # -- serialization ------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {
+            "chips": self.chips,
+            "vmem_elems": self.vmem_elems,
+            "link_elems_per_s": self.link_elems_per_s,
+            "hbm_elems_per_s": self.hbm_elems_per_s,
+            "macs_per_s": self.macs_per_s,
+        }
+
+    def to_json(self, indent: int | None = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Fleet":
+        return cls(
+            chips=int(d["chips"]),
+            vmem_elems=int(d["vmem_elems"]),
+            link_elems_per_s=(None if d.get("link_elems_per_s") is None
+                              else float(d["link_elems_per_s"])),
+            hbm_elems_per_s=(None if d.get("hbm_elems_per_s") is None
+                             else float(d["hbm_elems_per_s"])),
+            macs_per_s=float(d.get("macs_per_s", DEFAULT_MACS_PER_S)),
+        )
+
+    @classmethod
+    def from_json(cls, doc: str) -> "Fleet":
+        return cls.from_dict(json.loads(doc))
+
+
+def load_fleet(path: str) -> Fleet:
+    with open(path) as f:
+        return Fleet.from_json(f.read())

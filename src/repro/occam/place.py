@@ -117,7 +117,8 @@ def place_plan(plan: Plan, *, chips: int | None = None,
                max_replicas: int | None = None,
                microbatch: int | None = None,
                mesh=None, devices=None,
-               pipeline: bool | None = None) -> Placement:
+               pipeline: bool | None = None,
+               harmonize: bool = False) -> Placement:
     """Implementation of :meth:`Plan.place` (see its docstring)."""
     microbatch = microbatch if microbatch is not None else plan.batch
     # Any multi-chip knob selects the pipeline: a knob that would
@@ -162,7 +163,8 @@ def place_plan(plan: Plan, *, chips: int | None = None,
         stap = default_stap_plan(times, max_chips=chips,
                                  max_replicas=max_replicas,
                                  target_period=target_period,
-                                 mesh=mesh, devices=devices)
+                                 mesh=mesh, devices=devices,
+                                 harmonize=harmonize)
     return Placement(plan, PIPELINE, microbatch, stap=stap,
                      stage_times=times, mesh=mesh,
                      devices=tuple(devices) if devices is not None else None)

@@ -18,14 +18,18 @@ from repro.core.partition import PartitionResult, Span, partition_cnn
 from repro.core.traffic import TrafficReport, occam_traffic
 from repro.runtime import span_engine
 
+from .fleet import Fleet
+
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from .place import Placement
 
 # v1: partition + routes + prediction. v2 adds the "serving" block
-# (session defaults: round_batch, ring_depth); ``load_plan`` migrates v1
-# payloads transparently.
-PLAN_FORMAT_VERSION = 2
-_READABLE_VERSIONS = (1, 2)
+# (session defaults: round_batch, ring_depth). v3 adds the "fleet" block
+# (the declarative hardware model the plan was searched under —
+# ``occam.autoplan``). ``load_plan`` migrates v1/v2 payloads
+# transparently.
+PLAN_FORMAT_VERSION = 3
+_READABLE_VERSIONS = (1, 2, 3)
 
 _PREDICTED_FIELDS = ("scheme", "feature_elems", "filter_elems",
                      "compute_macs", "boundary_elems")
@@ -74,6 +78,7 @@ class Plan:
     routes: tuple[span_engine.SpanRoute, ...]
     predicted: TrafficReport   # per-image, scheme="occam"
     serving: ServingDefaults = ServingDefaults()  # session defaults (v2)
+    fleet: Fleet | None = None  # hardware model planned against (v3)
 
     # -- introspection ------------------------------------------------------
 
@@ -101,7 +106,8 @@ class Plan:
               max_replicas: int | None = None,
               microbatch: int | None = None,
               mesh=None, devices=None,
-              pipeline: bool | None = None) -> "Placement":
+              pipeline: bool | None = None,
+              harmonize: bool = False) -> "Placement":
         """Commit the plan to chips -> :class:`~repro.occam.Placement`.
 
         With no arguments: the degenerate single-device placement (every
@@ -110,6 +116,8 @@ class Plan:
         ``stage_times`` / ``max_replicas`` / ``devices``) or
         ``pipeline=True`` selects the multi-chip STAP pipeline (one stage
         per span, bottleneck stages replicated per ``plan_replication``).
+        ``harmonize=True`` applies the round-width economy pass to the
+        planned replica vector (see ``core.stap.plan_replication``).
         """
         from .place import place_plan
 
@@ -117,7 +125,8 @@ class Plan:
                           stage_times=stage_times,
                           target_period=target_period,
                           max_replicas=max_replicas, microbatch=microbatch,
-                          mesh=mesh, devices=devices, pipeline=pipeline)
+                          mesh=mesh, devices=devices, pipeline=pipeline,
+                          harmonize=harmonize)
 
     # -- serialization ------------------------------------------------------
 
@@ -136,6 +145,7 @@ class Plan:
             "predicted": {f: getattr(self.predicted, f)
                           for f in _PREDICTED_FIELDS},
             "serving": self.serving.to_dict(),
+            "fleet": self.fleet.to_dict() if self.fleet else None,
         }
 
     def to_json(self, indent: int | None = 2) -> str:
@@ -147,18 +157,22 @@ class Plan:
 
 
 def plan(net: NetSpec, capacity_elems: int, *, batch: int = 1,
-         round_batch: int | None = None) -> Plan:
+         round_batch: int | None = None,
+         fleet: Fleet | None = None) -> Plan:
     """Run the DP + engine routing for ``net`` under ``capacity_elems``.
 
     ``round_batch`` records a serving-round size with the plan (schema
     v2): the fixed shape ``Deployment.serve`` compiles by default.
+    ``fleet`` records the hardware model the capacity came from (schema
+    v3) — ``occam.autoplan`` derives the capacity from the fleet instead
+    of taking it as an argument.
     """
     part = partition_cnn(net, capacity_elems, batch=batch)
     routes = span_engine.plan_routes(net, part)
     predicted = occam_traffic(net, capacity_elems, batch, part)
     serving = ServingDefaults(round_batch, part.n_spans)
     return Plan(net, capacity_elems, batch, part, routes, predicted,
-                serving)
+                serving, fleet)
 
 
 def plan_from_dict(d: dict) -> Plan:
@@ -182,8 +196,12 @@ def plan_from_dict(d: dict) -> Plan:
         serving = ServingDefaults(None, len(spans))
     else:
         serving = ServingDefaults.from_dict(d.get("serving"))
+    # transparent v1/v2 migration: no fleet block existed — the plan's
+    # capacity stands alone, exactly as hand-fed plans always did
+    fleet = Fleet.from_dict(d["fleet"]) \
+        if version >= 3 and d.get("fleet") else None
     return Plan(net, int(d["capacity_elems"]), int(d["batch"]), part,
-                routes, predicted, serving)
+                routes, predicted, serving, fleet)
 
 
 def plan_from_json(doc: str) -> Plan:

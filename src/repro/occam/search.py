@@ -1,0 +1,426 @@
+"""Objective-driven planning frontier: ``occam.autoplan(net, fleet)``.
+
+The staged API's front door used to be hand-fed: the caller asserted a
+``capacity_elems`` for :func:`~repro.occam.plan` and then chips/replicas
+for ``Plan.place``. ``autoplan`` derives both from a declarative
+:class:`~repro.occam.Fleet`:
+
+* **Capacity sweep** — the DP result only changes at the finite set of
+  dependence-closure footprint thresholds <= ``fleet.vmem_elems``
+  (``core.partition.PartitionSweep``), so the sweep shares one footprint
+  table across all capacities and re-runs the DP only when the fits set
+  changes (memoized, bisection-pruned — never from scratch per
+  capacity).
+* **Placement enumeration** — for each distinct optimal partition, every
+  replica vector ``plan_replication`` produces under the fleet's chip
+  budgets (water-fill per budget, replica axis capped at what an
+  ``n_stages x max_replicas`` mesh can physically hold, round-width
+  ``harmonize`` applied), plus the degenerate single-chip placement.
+* **Scoring** — each (partition, placement) pair becomes a
+  :class:`Candidate` scored on predicted off-chip traffic, steady period
+  (inverse images/s, roofline-bounded by the fleet's optional HBM and
+  link bandwidths), fill latency, and chips occupied, reusing
+  ``plan_replication`` / ``steady_schedule`` arithmetic.
+
+The Pareto-optimal candidates form a :class:`Frontier`:
+``Frontier.best(objective)`` picks per objective,
+``Candidate.deploy(backend=)`` compiles through the ordinary staged path
+(``place -> compile``), and ``to_json`` / :func:`load_frontier` ship the
+whole frontier to a serving host exactly like plans ship (each candidate
+embeds its schema-v3 plan). At serve time ``Session.scale(arrival_rate=)``
+/ ``Deployment.reconcile(...)`` re-pick from the frontier — autoscaling
+without ever re-running the DP.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import math
+from typing import TYPE_CHECKING, Sequence
+
+from repro.core.graph import NetSpec
+from repro.core.partition import PartitionResult, PartitionSweep
+from repro.core.stap import plan_replication
+from repro.core.traffic import occam_traffic
+
+from .fleet import Fleet
+from .place import PIPELINE, SINGLE
+from .plan import Plan, ServingDefaults, plan_from_dict
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .deploy import Deployment
+    from .place import Placement
+
+FRONTIER_FORMAT_VERSION = 1
+
+OBJECTIVES = ("throughput", "latency", "traffic")
+
+# sort keys per objective: minimize the named metric, break ties toward
+# fewer chips and less traffic (the cheaper deployment wins a draw)
+_OBJECTIVE_KEYS = {
+    "throughput": lambda c: (c.period, c.chips, c.traffic, c.fill_latency),
+    "latency": lambda c: (c.fill_latency, c.chips, c.traffic, c.period),
+    "traffic": lambda c: (c.traffic, c.period, c.chips, c.fill_latency),
+}
+
+
+@dataclasses.dataclass
+class Candidate:
+    """One point of the planning frontier: a (partition, placement) pair
+    with its predicted scores.
+
+    ``plan`` is a full schema-v3 :class:`~repro.occam.Plan` (fleet block
+    included); ``replicas`` / ``stage_times`` reproduce the placement via
+    the ordinary ``Plan.place`` path. Scores: ``traffic`` (predicted
+    off-chip elements per image), ``period`` (steady seconds per image —
+    1/throughput), ``fill_latency`` (seconds until the first result),
+    ``chips`` (devices the placement occupies: the ``stages x
+    max(replicas)`` mesh for a pipeline, 1 for the degenerate case).
+    """
+
+    plan: Plan
+    kind: str                      # SINGLE | PIPELINE
+    replicas: tuple[int, ...]
+    stage_times: tuple[float, ...]  # per-image stage latency model (MACs)
+    traffic: float
+    period: float
+    fill_latency: float
+    chips: int
+    _frontier: "Frontier | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _deployments: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+
+    @property
+    def throughput(self) -> float:
+        """Predicted steady images per second (1 / period)."""
+        return 1.0 / self.period
+
+    @property
+    def round_width(self) -> int:
+        return functools.reduce(math.lcm, self.replicas, 1)
+
+    def placement(self, *, mesh=None, devices=None) -> "Placement":
+        """Re-enter the staged path: the :class:`~repro.occam.Placement`
+        this candidate scored."""
+        if self.kind == SINGLE:
+            return self.plan.place()
+        return self.plan.place(replicas=self.replicas,
+                               stage_times=self.stage_times,
+                               mesh=mesh, devices=devices)
+
+    def deploy(self, backend: str = "auto", *, mesh=None, devices=None,
+               interpret: bool | None = None) -> "Deployment":
+        """Compile this candidate -> :class:`~repro.occam.Deployment`.
+
+        Deployments are cached per ``(backend, interpret, mesh,
+        devices)``, so frontier-driven autoscaling (``Session.scale`` /
+        ``Deployment.reconcile``) flips between candidates without
+        recompiling — and never re-runs the DP.
+        """
+        try:
+            key = (backend, interpret, mesh,
+                   None if devices is None else tuple(devices))
+            hash(key)
+        except TypeError:       # unhashable mesh/devices: build fresh
+            key = None
+        if key is not None:
+            dep = self._deployments.get(key)
+            if dep is not None:
+                return dep
+        dep = self.placement(mesh=mesh, devices=devices).compile(
+            backend=backend, interpret=interpret)
+        dep.candidate = self
+        dep.frontier = self._frontier
+        if key is not None:
+            self._deployments[key] = dep
+        return dep
+
+    def scores(self) -> dict:
+        return {"traffic": self.traffic, "period": self.period,
+                "fill_latency": self.fill_latency, "chips": self.chips}
+
+    def to_dict(self) -> dict:
+        return {
+            "kind": self.kind,
+            "replicas": list(self.replicas),
+            "stage_times": list(self.stage_times),
+            "scores": self.scores(),
+            "plan": self.plan.to_dict(),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Candidate":
+        s = d["scores"]
+        return cls(plan=plan_from_dict(d["plan"]), kind=d["kind"],
+                   replicas=tuple(int(r) for r in d["replicas"]),
+                   stage_times=tuple(float(t) for t in d["stage_times"]),
+                   traffic=float(s["traffic"]), period=float(s["period"]),
+                   fill_latency=float(s["fill_latency"]),
+                   chips=int(s["chips"]))
+
+
+def _dominates(a: Candidate, b: Candidate) -> bool:
+    """Pareto order over (traffic, period, fill_latency, chips): a is at
+    least as good everywhere and strictly better somewhere."""
+    le = (a.traffic <= b.traffic and a.period <= b.period
+          and a.fill_latency <= b.fill_latency and a.chips <= b.chips)
+    lt = (a.traffic < b.traffic or a.period < b.period
+          or a.fill_latency < b.fill_latency or a.chips < b.chips)
+    return le and lt
+
+
+@dataclasses.dataclass
+class Frontier:
+    """The Pareto frontier ``autoplan`` returns: every candidate not
+    dominated on (traffic, period, fill_latency, chips), sorted fastest
+    first. Ships like a plan (``to_json`` / :func:`load_frontier`); a
+    serving host re-picks from it at runtime (``for_rate`` /
+    ``Deployment.reconcile``) without re-running any search."""
+
+    fleet: Fleet
+    objective: str
+    candidates: tuple[Candidate, ...]
+    arrival_rate: float | None = None
+    stats: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        for c in self.candidates:
+            c._frontier = self
+
+    def __len__(self) -> int:
+        return len(self.candidates)
+
+    def __iter__(self):
+        return iter(self.candidates)
+
+    def best(self, objective: str | None = None) -> Candidate:
+        """The winning candidate for ``objective`` (default: the one
+        ``autoplan`` was called with). When the frontier carries an
+        ``arrival_rate``, only candidates meeting the rate compete
+        (unless none does — then the honest best effort wins)."""
+        objective = objective or self.objective
+        if objective not in _OBJECTIVE_KEYS:
+            raise ValueError(f"unknown objective {objective!r} "
+                             f"(one of {OBJECTIVES})")
+        pool = list(self.candidates)
+        if self.arrival_rate is not None:
+            meeting = [c for c in pool
+                       if c.throughput >= self.arrival_rate]
+            pool = meeting or pool
+        return min(pool, key=_OBJECTIVE_KEYS[objective])
+
+    def for_rate(self, arrival_rate: float) -> Candidate:
+        """The cheapest candidate whose predicted throughput meets
+        ``arrival_rate`` (fewest chips, then least traffic) — the
+        serve-time autoscaling pick. Falls back to the highest-throughput
+        candidate when no one meets the rate."""
+        meeting = [c for c in self.candidates
+                   if c.throughput >= arrival_rate]
+        if meeting:
+            return min(meeting,
+                       key=lambda c: (c.chips, c.traffic, c.period))
+        return min(self.candidates,
+                   key=lambda c: (c.period, c.chips, c.traffic))
+
+    def deploy(self, objective: str | None = None, backend: str = "auto",
+               **kw) -> "Deployment":
+        """``best(objective).deploy(...)`` in one call."""
+        return self.best(objective).deploy(backend, **kw)
+
+    # -- serialization ------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {
+            "version": FRONTIER_FORMAT_VERSION,
+            "objective": self.objective,
+            "arrival_rate": self.arrival_rate,
+            "fleet": self.fleet.to_dict(),
+            "stats": dict(self.stats),
+            "candidates": [c.to_dict() for c in self.candidates],
+        }
+
+    def to_json(self, indent: int | None = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+
+def frontier_from_dict(d: dict) -> Frontier:
+    version = d.get("version")
+    if version != FRONTIER_FORMAT_VERSION:
+        raise ValueError(f"unsupported frontier version {version!r} "
+                         f"(this build reads {FRONTIER_FORMAT_VERSION})")
+    return Frontier(
+        fleet=Fleet.from_dict(d["fleet"]),
+        objective=d["objective"],
+        candidates=tuple(Candidate.from_dict(c) for c in d["candidates"]),
+        arrival_rate=(None if d.get("arrival_rate") is None
+                      else float(d["arrival_rate"])),
+        stats=dict(d.get("stats") or {}),
+    )
+
+
+def frontier_from_json(doc: str) -> Frontier:
+    return frontier_from_dict(json.loads(doc))
+
+
+def load_frontier(path: str) -> Frontier:
+    with open(path) as f:
+        return frontier_from_json(f.read())
+
+
+# --------------------------------------------------------------------------
+# The search
+# --------------------------------------------------------------------------
+
+def _make_plan(net: NetSpec, capacity: int, batch: int,
+               part: PartitionResult, fleet: Fleet) -> Plan:
+    """A schema-v3 Plan from an already-computed partition (the sweep
+    never calls ``occam.plan`` — that would re-run the DP)."""
+    from repro.runtime import span_engine
+
+    routes = span_engine.plan_routes(net, part)
+    predicted = occam_traffic(net, capacity, batch, part)
+    return Plan(net, capacity, batch, part, routes, predicted,
+                ServingDefaults(None, part.n_spans), fleet)
+
+
+def _replica_vectors(stage_times: Sequence[float], fleet: Fleet,
+                     harmonize: bool) -> list[tuple[int, ...]]:
+    """Every distinct replica vector the fleet can host for this stage
+    profile: water-fill under each chip budget, replica axis capped at
+    what an S x r mesh physically fits."""
+    s = len(stage_times)
+    r_cap_max = fleet.max_replicas(s)
+    vectors: set[tuple[int, ...]] = set()
+    for r_cap in range(1, r_cap_max + 1):
+        for budget in range(s, s * r_cap + 1):
+            rep = plan_replication(stage_times, max_chips=budget,
+                                   max_replicas=r_cap,
+                                   harmonize=harmonize).replicas
+            if s * max(rep) <= fleet.chips:
+                vectors.add(rep)
+    return sorted(vectors)
+
+
+def _score(net: NetSpec, plan: Plan, fleet: Fleet, kind: str,
+           replicas: tuple[int, ...],
+           stage_times: tuple[float, ...]) -> Candidate:
+    """Predict (traffic, period, fill latency, chips) for one placement.
+
+    Stage times are the MAC-count model; ``fleet.macs_per_s`` converts to
+    seconds so the optional HBM / link bandwidth bounds compose on one
+    roofline axis. The per-slot microbatch cancels out of throughput
+    (m images per slot, m x the slot time) but not out of latency.
+    """
+    times_s = [t / fleet.macs_per_s for t in stage_times]
+    traffic = plan.predicted.offchip_elems
+    batch = plan.batch
+    if kind == SINGLE:
+        period = sum(times_s)                      # one chip, spans in turn
+        fill = batch * sum(times_s)
+        chips = 1
+        # single chip: span-boundary traffic is DRAM write+read — the
+        # whole per-image quantity streams through this chip's HBM
+        if fleet.hbm_elems_per_s is not None:
+            period = max(period, traffic / fleet.hbm_elems_per_s)
+    else:
+        bottleneck = max(t / r for t, r in zip(times_s, replicas))
+        period = bottleneck                        # 1 / closed-form thr
+        width = functools.reduce(math.lcm, replicas, 1)
+        # ring depth = n_stages ticks to first result, each tick
+        # W * batch * bottleneck long (SteadySchedule.steady_tick_time)
+        fill = len(replicas) * width * batch * bottleneck
+        chips = len(replicas) * max(replicas)
+        # pipeline: boundary payloads move stage-to-stage over links
+        # (ppermute is the runtime's ONLY inter-stage traffic; no chip
+        # replays the whole net through its own HBM), so the busiest
+        # cut's payload bounds the period against the link rate
+        if fleet.link_elems_per_s is not None:
+            from repro.runtime.stap_pipeline import payload_spec
+
+            link = max((payload_spec(net, b).elems / fleet.link_elems_per_s
+                        for b in plan.boundaries), default=0.0)
+            period = max(period, link)
+    return Candidate(plan, kind, replicas, stage_times,
+                     traffic=traffic, period=period, fill_latency=fill,
+                     chips=chips)
+
+
+def autoplan(net: NetSpec, fleet: Fleet, *,
+             objective: str = "throughput", batch: int = 1,
+             arrival_rate: float | None = None,
+             harmonize: bool = True) -> Frontier:
+    """Search (capacity x placement) under a fleet -> :class:`Frontier`.
+
+    ``objective``: what ``Frontier.best()`` optimizes by default —
+    ``"throughput"`` (min steady period), ``"latency"`` (min fill
+    latency), or ``"traffic"`` (min predicted off-chip elements).
+    ``batch`` is the per-chip resident image count, as in ``occam.plan``.
+    ``arrival_rate`` (images/s) records the load the frontier should
+    serve: ``best`` then prefers candidates meeting it, and
+    ``Session.scale`` re-picks against observed rates. ``harmonize``
+    applies the round-width economy pass to every enumerated replica
+    vector (see ``core.stap.plan_replication``).
+    """
+    if objective not in OBJECTIVES:
+        raise ValueError(f"unknown objective {objective!r} "
+                         f"(one of {OBJECTIVES})")
+    if batch < 1:
+        raise ValueError("batch must be >= 1")
+    from repro.runtime.stap_pipeline import (model_stage_times,
+                                             plan_span_stages)
+
+    sweep = PartitionSweep(net, batch)
+    swept = sweep.sweep(fleet.vmem_elems)
+
+    # distinct partitions only — keep the LARGEST capacity achieving
+    # each boundary set (swept ascending, last wins): traffic is
+    # identical by construction, but the per-span fits flags grow with
+    # capacity and drive engine routing — the deployed chip really holds
+    # fleet.vmem_elems, so a span it can hold must not ship flagged as
+    # an oversized-lower-bound (oracle-routed) span
+    by_boundaries: dict[tuple, tuple[int, PartitionResult]] = {}
+    for pt in swept:
+        by_boundaries[tuple(pt.result.boundaries)] = \
+            (pt.capacity_elems, pt.result)
+
+    candidates: list[Candidate] = []
+    for capacity, part in by_boundaries.values():
+        plan = _make_plan(net, capacity, batch, part, fleet)
+        stages = plan_span_stages(net, part, routes=plan.routes)
+        times = model_stage_times(net, stages)
+        s = len(stages)
+        candidates.append(_score(net, plan, fleet, SINGLE,
+                                 (1,) * s, times))
+        if fleet.max_replicas(s) >= 1:
+            for reps in _replica_vectors(times, fleet, harmonize):
+                candidates.append(_score(net, plan, fleet, PIPELINE,
+                                         reps, times))
+
+    # exact-score duplicates are interchangeable (e.g. extra replicas
+    # inside the same mesh footprint that don't move the bottleneck) —
+    # keep the one powering the fewest chips
+    dedup: dict[tuple, Candidate] = {}
+    for c in candidates:
+        key = (c.traffic, c.period, c.fill_latency, c.chips)
+        prev = dedup.get(key)
+        if prev is None or sum(c.replicas) < sum(prev.replicas):
+            dedup[key] = c
+    unique = list(dedup.values())
+    pareto = [c for c in unique
+              if not any(_dominates(o, c) for o in unique)]
+    pareto.sort(key=_OBJECTIVE_KEYS[objective])
+    return Frontier(fleet, objective, tuple(pareto),
+                    arrival_rate=arrival_rate,
+                    stats={
+                        "capacities_swept": len(swept),
+                        "dp_runs": sweep.dp_runs,
+                        "partitions": len(by_boundaries),
+                        "placements_scored": len(candidates),
+                        "pareto_size": len(pareto),
+                    })

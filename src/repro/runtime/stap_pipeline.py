@@ -168,7 +168,8 @@ def default_stap_plan(stage_times: Sequence[float], *,
                       max_replicas: int | None = None,
                       target_period: float | None = None,
                       mesh: Mesh | None = None,
-                      devices: Sequence | None = None) -> StapPlan:
+                      devices: Sequence | None = None,
+                      harmonize: bool = False) -> StapPlan:
     """The replication-planning defaults shared by :class:`StapPipeline`
     and ``repro.occam.Plan.place``: cap replicas at what the available
     (stage, replica) mesh can physically hold, and treat a replica-capable
@@ -190,7 +191,8 @@ def default_stap_plan(stage_times: Sequence[float], *,
         # schedule must match the mesh shape exactly)
         max_chips = n_stages * max_replicas
     return plan_replication(stage_times, target_period=target_period,
-                            max_chips=max_chips, max_replicas=max_replicas)
+                            max_chips=max_chips, max_replicas=max_replicas,
+                            harmonize=harmonize)
 
 
 def stap_mesh(n_stages: int, max_replicas: int,

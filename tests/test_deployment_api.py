@@ -102,13 +102,13 @@ def test_plan_version_gate():
 
 
 def test_plan_v2_carries_serving_defaults():
-    """Schema v2: serving defaults (round_batch, ring depth) ship with
-    the plan and round-trip through JSON."""
+    """Serving defaults (round_batch, ring depth — the v2 block) ship
+    with the plan and round-trip through JSON."""
     net, *_ = vgg_case()
     plan = occam.plan(net, CAPACITY, batch=2, round_batch=8)
     assert plan.serving == occam.ServingDefaults(8, plan.n_spans)
     d = plan.to_dict()
-    assert d["version"] == occam.PLAN_FORMAT_VERSION == 2
+    assert d["version"] == occam.PLAN_FORMAT_VERSION == 3
     assert d["serving"] == {"round_batch": 8, "ring_depth": plan.n_spans}
     loaded = occam.plan_from_json(plan.to_json())
     assert loaded.serving == plan.serving
@@ -117,21 +117,74 @@ def test_plan_v2_carries_serving_defaults():
     assert loaded.predicted == plan.predicted
 
 
+def test_plan_v3_carries_fleet_block():
+    """Schema v3: the fleet the plan was searched under ships with it
+    and round-trips through JSON (None when hand-fed)."""
+    net, *_ = vgg_case()
+    fleet = occam.Fleet(chips=8, vmem_elems=CAPACITY,
+                        hbm_elems_per_s=1e9)
+    plan = occam.plan(net, CAPACITY, batch=2, fleet=fleet)
+    d = plan.to_dict()
+    assert d["version"] == 3
+    assert d["fleet"] == fleet.to_dict()
+    loaded = occam.plan_from_json(plan.to_json())
+    assert loaded.fleet == fleet
+    # hand-fed plans carry no fleet — and still round-trip
+    bare = occam.plan(net, CAPACITY)
+    assert bare.to_dict()["fleet"] is None
+    assert occam.plan_from_json(bare.to_json()).fleet is None
+
+
 def test_plan_v1_payload_migrates_transparently():
-    """A v1 document (no serving block) loads as a v2 plan with derived
-    serving defaults — same partition, routes, and prediction."""
+    """A v1 document (no serving, no fleet block) loads as a v3 plan
+    with derived serving defaults — same partition, routes, prediction."""
     net, params, xs, ref = vgg_case()
     plan = occam.plan(net, CAPACITY, batch=xs.shape[0])
     d = plan.to_dict()
     d["version"] = 1
     del d["serving"]
+    del d["fleet"]
     migrated = occam.plan_from_dict(d)
     assert migrated.serving == occam.ServingDefaults(None, plan.n_spans)
+    assert migrated.fleet is None
     assert migrated.boundaries == plan.boundaries
     assert migrated.routes == plan.routes
     assert migrated.predicted == plan.predicted
     y = migrated.place().compile(interpret=True).run(params, xs)
     assert_close(y, ref)
+
+
+def test_plan_v2_payload_migrates_transparently():
+    """A v2 document (serving block, no fleet block) loads as a v3 plan:
+    serving defaults preserved, fleet None — same partition, routes,
+    prediction, same outputs."""
+    net, params, xs, ref = vgg_case()
+    plan = occam.plan(net, CAPACITY, batch=xs.shape[0], round_batch=8)
+    d = plan.to_dict()
+    d["version"] = 2
+    del d["fleet"]
+    migrated = occam.plan_from_dict(d)
+    assert migrated.serving == plan.serving
+    assert migrated.fleet is None
+    assert migrated.boundaries == plan.boundaries
+    assert migrated.routes == plan.routes
+    assert migrated.predicted == plan.predicted
+    y = migrated.place().compile(interpret=True).run(params, xs)
+    assert_close(y, ref)
+
+
+def test_plan_v3_roundtrip_preserves_fleet_both_ways():
+    """v3 -> dict -> v3: the fleet block survives unchanged, and a v3
+    plan saved/loaded through a file is the same plan."""
+    net, *_ = vgg_case()
+    fleet = occam.Fleet(chips=4, vmem_elems=CAPACITY,
+                        link_elems_per_s=2e9, hbm_elems_per_s=5e9,
+                        macs_per_s=1e12)
+    plan = occam.plan(net, CAPACITY, batch=2, round_batch=8, fleet=fleet)
+    loaded = occam.plan_from_dict(plan.to_dict())
+    assert loaded.fleet == fleet
+    assert loaded.serving == plan.serving
+    assert loaded.to_dict() == plan.to_dict()
 
 
 # --------------------------------------------------------------------------

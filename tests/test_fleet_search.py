@@ -1,0 +1,374 @@
+"""Fleet-aware planning frontier: ``occam.Fleet`` + ``occam.autoplan``.
+
+Covers the ISSUE-5 acceptance surface: the memoized capacity sweep
+agrees point-for-point with from-scratch DPs, the frontier's best-traffic
+candidate matches brute-force capacity x placement enumeration on tiny
+nets, a bigger fleet never has a worse best-objective score, the
+degenerate one-chip fleet reduces to ``plan(net, vmem).place()``,
+frontiers round-trip through JSON, ``Candidate.deploy()`` round-trips on
+the emulated mesh with ``matches_prediction``, and ``Session.scale`` /
+``Deployment.reconcile`` re-pick candidates from the frontier without
+ever re-running the DP."""
+import jax
+import numpy as np
+import pytest
+
+from conftest import require_devices
+from repro import occam
+from repro.core.graph import chain
+from repro.core.partition import (CNNPartitionProblem, PartitionSweep,
+                                  brute_force_partition, partition_cnn)
+from repro.models import cnn
+
+C, P = "conv", "pool"
+VMEM = 6000
+
+
+def _vgg(hw=16):
+    specs = [(C, 3, 1, 1, 8), (C, 3, 1, 1, 8), (P, 2, 2, 0, 0),
+             (C, 3, 1, 1, 16), (C, 3, 1, 1, 16), (P, 2, 2, 0, 0),
+             (C, 3, 1, 1, 16)]
+    return chain("vgg_mini", specs, in_h=hw, in_w=hw, in_ch=3)
+
+
+def _resnetish():
+    specs = [(C, 3, 1, 1, 8), (C, 3, 1, 1, 8), (C, 3, 1, 1, 8),
+             (C, 3, 1, 1, 8), (P, 2, 2, 0, 0), (C, 3, 1, 1, 16)]
+    return chain("res_mini", specs, in_h=12, in_w=12, in_ch=3,
+                 residual_edges=((1, 3), (0, 4)))
+
+
+def assert_close(got, ref):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# Fleet: the declarative hardware model
+# --------------------------------------------------------------------------
+
+def test_fleet_validation_and_json_roundtrip(tmp_path):
+    fleet = occam.Fleet(chips=8, vmem_elems=VMEM, link_elems_per_s=2e9,
+                        hbm_elems_per_s=5e9, macs_per_s=1e12)
+    path = tmp_path / "fleet.json"
+    fleet.save(str(path))
+    assert occam.load_fleet(str(path)) == fleet
+    assert occam.Fleet.from_dict(fleet.to_dict()) == fleet
+    # bandwidths default to None, macs_per_s to the paper slice
+    bare = occam.Fleet.from_dict({"chips": 2, "vmem_elems": 100})
+    assert bare.link_elems_per_s is None and bare.hbm_elems_per_s is None
+    with pytest.raises(ValueError, match="chip"):
+        occam.Fleet(chips=0, vmem_elems=VMEM)
+    with pytest.raises(ValueError, match="vmem"):
+        occam.Fleet(chips=1, vmem_elems=0)
+    with pytest.raises(ValueError, match="hbm_elems_per_s"):
+        occam.Fleet(chips=1, vmem_elems=VMEM, hbm_elems_per_s=-1.0)
+
+
+# --------------------------------------------------------------------------
+# The memoized capacity sweep (core/partition.PartitionSweep)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("net_fn,batch", [(_vgg, 1), (_vgg, 2),
+                                          (_resnetish, 1)])
+def test_partition_sweep_matches_scratch_dp(net_fn, batch):
+    """Every sweep point must equal a from-scratch partition_cnn at that
+    capacity — same optimal transfer count, a feasible partition — while
+    running strictly fewer DPs than capacities (the memo/bisection win)."""
+    net = net_fn()
+    sweep = PartitionSweep(net, batch)
+    pts = sweep.sweep(VMEM)
+    assert sweep.dp_runs <= len(pts)
+    for pt in pts:
+        scratch = partition_cnn(net, pt.capacity_elems, batch=batch)
+        assert pt.result.transfers == scratch.transfers
+        # the returned partition is feasible at its capacity
+        prob = CNNPartitionProblem(net, pt.capacity_elems, batch)
+        for sp in pt.result.spans:
+            assert sp.fits == prob.span_fits(sp.start, sp.end)
+
+
+def test_candidate_capacities_are_footprint_thresholds():
+    net = _vgg()
+    sweep = PartitionSweep(net, 1)
+    caps = sweep.candidate_capacities(VMEM)
+    assert caps == sorted(set(caps))
+    assert all(c <= VMEM for c in caps)
+    n = net.n_layers
+    fps = {int(sweep.footprint(i, j)) for i in range(n)
+           for j in range(i + 1, n + 1)}
+    assert set(caps) == {f for f in fps if f <= VMEM}
+    # nothing fits at all -> the vmem itself (lower-bound planning)
+    assert sweep.candidate_capacities(1) == [1]
+
+
+# --------------------------------------------------------------------------
+# autoplan: optimality, degeneracy, monotonicity
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("net_fn,batch", [(_vgg, 1), (_vgg, 2),
+                                          (_resnetish, 1)])
+def test_autoplan_best_traffic_matches_brute_force(net_fn, batch):
+    """The frontier's best-traffic candidate equals the exponential PBS
+    enumeration at full vmem (capacity x placement exhaustive best)."""
+    net = net_fn()
+    frontier = occam.autoplan(net, occam.Fleet(chips=4, vmem_elems=VMEM),
+                              batch=batch)
+    best = frontier.best("traffic")
+    bf_cost, _ = brute_force_partition(
+        CNNPartitionProblem(net, VMEM, batch))
+    assert best.traffic == bf_cost / batch
+    assert best.plan.predicted.offchip_elems == best.traffic
+
+
+def test_degenerate_one_chip_fleet_is_plan_place():
+    """Fleet(chips=1) reduces to the hand-fed path: same partition, same
+    prediction as occam.plan(net, vmem), single-device placement."""
+    net = _vgg()
+    frontier = occam.autoplan(net, occam.Fleet(chips=1, vmem_elems=VMEM),
+                              batch=2)
+    assert all(c.kind == occam.SINGLE and c.chips == 1 for c in frontier)
+    best = frontier.best("traffic")
+    ref = occam.plan(net, VMEM, batch=2)
+    assert best.plan.boundaries == ref.boundaries
+    assert best.plan.predicted == ref.predicted
+    placement = best.placement()
+    assert placement.kind == ref.place().kind == occam.SINGLE
+
+
+@pytest.mark.parametrize("objective", occam.OBJECTIVES)
+def test_bigger_fleet_never_worse(objective):
+    """Monotonicity: growing the fleet (chips and/or vmem) never worsens
+    the best score for any objective."""
+    net = _vgg()
+    metric = {"throughput": lambda c: c.period,
+              "latency": lambda c: c.fill_latency,
+              "traffic": lambda c: c.traffic}[objective]
+    fleets = [occam.Fleet(chips=ch, vmem_elems=vm)
+              for ch in (1, 4, 8) for vm in (2500, VMEM, 4 * VMEM)]
+    best = {}
+    for f in fleets:
+        fr = occam.autoplan(net, f, objective=objective)
+        best[(f.chips, f.vmem_elems)] = metric(fr.best(objective))
+    for (c1, v1), s1 in best.items():
+        for (c2, v2), s2 in best.items():
+            if c2 >= c1 and v2 >= v1:
+                assert s2 <= s1, (
+                    f"fleet ({c2}, {v2}) worse than ({c1}, {v1}) "
+                    f"on {objective}: {s2} > {s1}")
+
+
+def test_autoplan_objectives_and_arrival_rate():
+    net = _vgg()
+    fleet = occam.Fleet(chips=8, vmem_elems=VMEM)
+    fr = occam.autoplan(net, fleet)
+    assert fr.objective == "throughput"
+    bt, bl, bf = (fr.best("throughput"), fr.best("traffic"),
+                  fr.best("latency"))
+    assert bt.period == min(c.period for c in fr)
+    assert bl.traffic == min(c.traffic for c in fr)
+    assert bf.fill_latency == min(c.fill_latency for c in fr)
+    with pytest.raises(ValueError, match="objective"):
+        fr.best("speed")
+    with pytest.raises(ValueError, match="objective"):
+        occam.autoplan(net, fleet, objective="speed")
+    # a recorded arrival rate restricts best() to candidates meeting it
+    slow = fr.for_rate(1.0)             # any candidate meets rate 1 img/s
+    assert slow.chips == min(c.chips for c in fr)
+    rated = occam.autoplan(net, fleet, objective="traffic",
+                           arrival_rate=0.9 * bt.throughput)
+    assert rated.best().throughput >= 0.9 * bt.throughput
+
+
+def test_frontier_json_roundtrip(tmp_path):
+    net = _resnetish()
+    fleet = occam.Fleet(chips=6, vmem_elems=VMEM, hbm_elems_per_s=1e9)
+    fr = occam.autoplan(net, fleet, batch=2, arrival_rate=3.0)
+    path = tmp_path / "net.frontier.json"
+    fr.save(str(path))
+    loaded = occam.load_frontier(str(path))
+    assert loaded.fleet == fleet
+    assert loaded.objective == fr.objective
+    assert loaded.arrival_rate == fr.arrival_rate
+    assert len(loaded) == len(fr)
+    for a, b in zip(fr, loaded):
+        assert a.scores() == b.scores()
+        assert a.kind == b.kind and a.replicas == b.replicas
+        assert a.plan.boundaries == b.plan.boundaries
+        assert a.plan.predicted == b.plan.predicted
+        assert a.plan.fleet == fleet        # v3 plans ride along
+    # the loaded frontier picks the same winners
+    for obj in occam.OBJECTIVES:
+        assert loaded.best(obj).scores() == fr.best(obj).scores()
+    with pytest.raises(ValueError, match="version"):
+        occam.frontier_from_dict({"version": 99})
+
+
+def test_hbm_bound_floors_single_chip_but_not_pipelines():
+    """Bandwidth rooflines land where the runtime pays them: a slow HBM
+    floors the single-chip candidate (its boundary traffic is DRAM
+    write+read) but not pipelines (boundary payloads ride inter-stage
+    links), so replication still buys throughput; a slow link floors
+    pipelines at their busiest cut instead."""
+    net = _vgg()
+    hbm = 1e9      # slow enough that traffic/hbm dominates compute time
+    fr = occam.autoplan(net, occam.Fleet(chips=6, vmem_elems=VMEM,
+                                         hbm_elems_per_s=hbm))
+    singles = [c for c in fr if c.kind == occam.SINGLE]
+    pipes = [c for c in fr if c.kind == occam.PIPELINE]
+    assert singles and pipes
+    for c in singles:
+        assert c.period >= c.traffic / hbm
+    assert min(p.period for p in pipes) < min(s.period for s in singles)
+
+    from repro.runtime.stap_pipeline import payload_spec
+
+    link = 1e9
+    fr2 = occam.autoplan(net, occam.Fleet(chips=6, vmem_elems=VMEM,
+                                          link_elems_per_s=link))
+    for c in fr2:
+        if c.kind == occam.PIPELINE:
+            worst = max(payload_spec(net, b).elems
+                        for b in c.plan.boundaries)
+            assert c.period >= worst / link
+
+
+def test_harmonize_threads_through_autoplan():
+    """harmonize (the default) only reshapes replica vectors — the
+    traffic frontier is untouched — and the harmonized candidates'
+    round widths never exceed the raw water-fill's worst case."""
+    net = _vgg()
+    fleet = occam.Fleet(chips=9, vmem_elems=VMEM)
+    fr = occam.autoplan(net, fleet)
+    raw = occam.autoplan(net, fleet, harmonize=False)
+    assert fr.best("traffic").traffic == raw.best("traffic").traffic
+
+    def worst_width(f):
+        return max((c.round_width for c in f
+                    if c.kind == occam.PIPELINE), default=1)
+
+    assert worst_width(fr) <= worst_width(raw)
+
+
+# --------------------------------------------------------------------------
+# Deploy round-trip + serve-time autoscaling (emulated mesh)
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def frontier_deployed():
+    """One frontier over the emulated mesh, its best-throughput candidate
+    deployed (compiles are cached per candidate and shared by tests)."""
+    require_devices(6)
+    net = _vgg()
+    params = cnn.init_params(jax.random.PRNGKey(0), net)
+    frontier = occam.autoplan(net, occam.Fleet(chips=6, vmem_elems=VMEM),
+                              batch=2)
+    assert any(c.kind == occam.PIPELINE for c in frontier)
+    return net, params, frontier
+
+
+def test_candidate_deploy_roundtrip_matches_prediction(frontier_deployed):
+    """Candidate.deploy() -> serve -> report(): the deployed frontier
+    candidate runs on the emulated mesh, reproduces the reference
+    outputs, and measures exactly its plan's predicted traffic."""
+    net, params, frontier = frontier_deployed
+    cand = frontier.best("throughput")
+    assert cand.kind == occam.PIPELINE
+    dep = cand.deploy()
+    assert dep.candidate is cand and dep.frontier is frontier
+    assert cand.deploy() is dep          # compiled deployments are cached
+    sess = dep.serve(params)
+    xs = jax.random.normal(jax.random.PRNGKey(1),
+                           (2 * sess.round_batch + 1,) + net.map_shape(0))
+    t = sess.submit(xs)
+    (tk, y), = sess.results()
+    assert tk.uid == t.uid
+    assert_close(y, jax.vmap(
+        lambda im: cnn.reference_forward(params, im, net))(xs))
+    assert sess.report().matches_prediction
+
+
+def test_session_scale_reuses_frontier_without_dp(frontier_deployed,
+                                                  monkeypatch):
+    """Session.scale(arrival_rate=) switches to the cheapest candidate
+    meeting the rate, reusing the frontier's plans and each candidate's
+    compiled deployment — the DP must never run again."""
+    net, params, frontier = frontier_deployed
+    fast = frontier.best("throughput")
+    dep = fast.deploy()
+
+    # after the frontier exists, any DP run is a regression
+    import repro.core.partition as partition_mod
+
+    def _boom(*a, **k):
+        raise AssertionError("optimal_partition re-ran during scale()")
+
+    monkeypatch.setattr(partition_mod, "optimal_partition", _boom)
+
+    sess = dep.serve(params)
+    # trivial load: the cheapest (single-chip) candidate suffices
+    low = sess.scale(arrival_rate=1e-6 / fast.period)
+    assert low is not sess
+    assert low.deployment.candidate.chips == \
+        min(c.chips for c in frontier)
+    # old session stays drainable after the handoff
+    assert sess.ready() == ()
+    # demand near the frontier's peak: scale back up; the fast
+    # candidate's deployment is reused, not recompiled
+    high = low.scale(arrival_rate=0.99 * fast.throughput)
+    assert high.deployment.candidate.throughput >= 0.99 * fast.throughput
+    picked = high.deployment.candidate
+    again = high.scale(arrival_rate=0.99 * fast.throughput)
+    assert again is high                 # already the right deployment
+    assert picked.deploy() is high.deployment
+    # reconcile with an explicit frontier works without back-refs
+    bare = fast.placement().compile()
+    assert bare.frontier is None
+    re = bare.reconcile(frontier, arrival_rate=1e-6 / fast.period)
+    assert re.candidate.chips == min(c.chips for c in frontier)
+    with pytest.raises(ValueError, match="frontier"):
+        bare.reconcile(arrival_rate=1.0)
+
+    # serving still works end-to-end on the scaled-to deployment
+    xs = jax.random.normal(jax.random.PRNGKey(2),
+                           (3,) + net.map_shape(0))
+    t = high.submit(xs)
+    (tk, y), = high.results()
+    assert tk.uid == t.uid
+    assert_close(y, jax.vmap(
+        lambda im: cnn.reference_forward(params, im, net))(xs))
+
+    # an explicit round_batch survives scaling when the new geometry
+    # still divides it (single-chip width 1 accepts anything)
+    wide_rb = 2 * dep.placement.serve_geometry(None)[0]
+    wide = dep.serve(params, round_batch=wide_rb)
+    moved = wide.scale(arrival_rate=1e-6 / fast.period)
+    assert moved.deployment.candidate.chips == 1
+    assert moved.round_batch == wide_rb
+
+
+# --------------------------------------------------------------------------
+# Benchmark schema (fast tier: small nets only)
+# --------------------------------------------------------------------------
+
+def test_autoplan_bench_schema_and_exhaustive_match():
+    """The benchmark row schema is stable and the chosen candidate
+    matches exhaustive-best (and brute force) on the small nets."""
+    from benchmarks.occam_autoplan import autoplan_measurement
+
+    doc = autoplan_measurement(nets=("alexnet", "zfnet"))
+    assert set(doc) == {"fleet", "nets", "all_match_exhaustive",
+                        "sweep_speedup_geomean"}
+    assert doc["all_match_exhaustive"] is True
+    assert doc["sweep_speedup_geomean"] > 0
+    required = {"net", "n_layers", "capacities", "dp_runs", "partitions",
+                "placements_scored", "pareto_size", "best_traffic",
+                "exhaustive_best_traffic", "matches_exhaustive",
+                "matches_brute_force", "best_throughput_replicas",
+                "best_throughput_chips", "autoplan_seconds",
+                "sweep_seconds", "naive_seconds", "sweep_speedup"}
+    for row in doc["nets"]:
+        assert required <= set(row)
+        assert row["matches_exhaustive"] is True
+        assert row["matches_brute_force"] is True   # both are tiny nets
+        assert row["dp_runs"] <= row["capacities"]

@@ -174,6 +174,58 @@ def test_ready_peeks_without_flushing(served):
     assert [t.uid for t, _ in rest] == [t.uid for t in later]
 
 
+def test_lone_submit_completes_under_max_wait_ticks(served):
+    """Sub-round latency budget: a lone 1-image submit auto-flushes after
+    max_wait_ticks session ticks — no explicit flush()/results() call."""
+    net, params, dep = served
+    sess = dep.serve(params, max_wait_ticks=2)
+    x = jax.random.normal(jax.random.PRNGKey(11), (1,) + net.map_shape(0))
+    t = sess.submit(x)
+    done = sess.ready()
+    for _ in range(sess.max_wait_ticks + sess.ring_depth):
+        if done:
+            break
+        done = sess.ready()            # each poll ages the partial round
+    assert done == (t,)
+    got = sess.results(flush=False)    # completed without any flush
+    assert [tk.uid for tk, _ in got] == [t.uid]
+    assert_close(got[0][1], _ref(params, net, x))
+    # masked-lane accounting still exact after the auto-flush
+    assert sess.report().matches_prediction
+
+
+def test_max_wait_one_still_batches_the_next_submit(served):
+    """max_wait_ticks=1 must not degenerate to flush-per-submit: the
+    submit that starts a partial round doesn't age it, so immediately
+    following traffic still batches into the same round."""
+    net, params, dep = served
+    sess = dep.serve(params, max_wait_ticks=1)
+    rb = sess.round_batch
+    t1 = sess.submit(jax.random.normal(jax.random.PRNGKey(13),
+                                       (1,) + net.map_shape(0)))
+    assert sess.describe()["queued_images"] == 1   # waiting, not flushed
+    t2 = sess.submit(jax.random.normal(jax.random.PRNGKey(14),
+                                       (rb - 1,) + net.map_shape(0)))
+    # both requests packed into ONE full (unmasked) round
+    assert sess.describe()["queued_images"] == 0
+    got = sess.results()
+    assert [tk.uid for tk, _ in got] == [t1.uid, t2.uid]
+    assert sess.report().matches_prediction
+
+
+def test_max_wait_ticks_none_waits_indefinitely(served):
+    """Default behavior unchanged: without a budget, a partial round
+    only flushes on demand, however often the session is polled."""
+    net, params, dep = served
+    sess = dep.serve(params)
+    x = jax.random.normal(jax.random.PRNGKey(12), (1,) + net.map_shape(0))
+    t = sess.submit(x)
+    for _ in range(8):
+        assert sess.ready() == ()
+    got = sess.results()               # explicit flush still required
+    assert [tk.uid for tk, _ in got] == [t.uid]
+
+
 def test_max_pending_backpressure(served):
     net, params, dep = served
     sess = dep.serve(params, max_pending=1)

@@ -100,6 +100,61 @@ def test_plan_replication_replica_cap():
     assert uncapped.replicas[0] > 2
 
 
+def test_harmonize_shrinks_round_width_without_throughput_loss():
+    """Round-width economy: 4-3-2 snaps up to 4-4-2 (every r_i divides
+    max r), collapsing the lcm slot unroll 12 -> 4 at zero predicted
+    throughput cost when no chip budget binds."""
+    base = plan_replication([4.0, 3.0, 2.0], target_period=1.0)
+    assert base.replicas == (4, 3, 2)
+    assert staggered_schedule(base, 12).round_width == 12
+    harm = plan_replication([4.0, 3.0, 2.0], target_period=1.0,
+                            harmonize=True)
+    assert harm.replicas == (4, 4, 2)
+    assert staggered_schedule(harm, 12).round_width == 4
+    assert harm.throughput >= base.throughput
+
+
+def test_harmonize_false_is_unchanged():
+    """harmonize=False (the default) must be bit-identical to the
+    pre-economy planner in every mode."""
+    for kwargs in ({"target_period": 1.0}, {"max_chips": 9},
+                   {"max_chips": 9, "max_replicas": 4}, {}):
+        a = plan_replication([4.0, 3.0, 2.0], **kwargs)
+        b = plan_replication([4.0, 3.0, 2.0], harmonize=False, **kwargs)
+        assert a == b
+
+
+def test_harmonize_respects_chip_budget_and_eps():
+    """Under a binding chip budget the up-snap is impossible; the
+    down-snap only happens when the throughput loss fits the eps band."""
+    base = plan_replication([4.0, 3.0, 2.0], target_period=1.0)
+    assert base.replicas == (4, 3, 2)  # 9 chips
+    # budget pins chips at 9: stage 1 cannot go 3 -> 4; 3 -> 2 would
+    # drop throughput from 1.0 to 1/1.5 (-33%), outside eps=0.05
+    tight = plan_replication([4.0, 3.0, 2.0], target_period=1.0,
+                             max_chips=9, harmonize=True)
+    assert tight.replicas == (4, 3, 2)
+    # a generous eps accepts the down-snap — and the returned
+    # throughput stays honest about the loss
+    loose = plan_replication([4.0, 3.0, 2.0], target_period=1.0,
+                             max_chips=9, harmonize=True,
+                             harmonize_eps=0.5)
+    assert loose.replicas == (4, 2, 2)
+    assert staggered_schedule(loose, 8).round_width == 4
+    assert loose.throughput == pytest.approx(1 / 1.5)
+
+
+def test_harmonize_keeps_divisor_friendly_vectors():
+    """Already-harmonic vectors (each r_i divides max r) are fixpoints."""
+    for times, kwargs in ([[40.0, 10.0, 10.0], {"max_chips": 7}],
+                          [[15.0, 35.0, 40.0, 10.0],
+                           {"target_period": 20.0}]):
+        a = plan_replication(times, **kwargs)
+        b = plan_replication(times, harmonize=True, **kwargs)
+        assert all(max(a.replicas) % r == 0 for r in a.replicas)
+        assert a.replicas == b.replicas
+
+
 # --- staggered tick schedule (the executable form) --------------------------
 
 def test_schedule_round_width_is_lcm():
