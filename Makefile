@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: lint test-fast test bench
+.PHONY: lint test-fast test bench bench-smoke
 
 # Lint gate: no tracked bytecode, then ruff (config in pyproject.toml).
 # ruff is a dev extra (requirements-dev.txt) — skipped with a notice when
@@ -31,3 +31,9 @@ test: lint
 
 bench:
 	$(PY) -m benchmarks.run
+
+# Smallest config of every executable benchmark family, in seconds — a
+# regression gate (also run by the slow-marked test_bench_smoke), not a
+# measurement; tracked BENCH_*.json artifacts come from `make bench`.
+bench-smoke:
+	$(PY) -m benchmarks.smoke

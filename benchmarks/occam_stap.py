@@ -229,6 +229,21 @@ def main() -> None:
     t_plan = tuple(statistics.median(ts) for ts in
                    zip(*(solo_sampler() for _ in range(3))))
 
+    # stage-body engine delta: the same spans' bodies built through the
+    # registry's pallas route (the fused kernel, interpret-mode off TPU)
+    # vs forced onto the scan twin — what swapping the stage core costs
+    # or buys on this host, span by span
+    from repro.runtime import span_engine
+    from repro.runtime.stap_pipeline import StapPipeline
+
+    scan_pipe = StapPipeline(
+        net, res, BATCH, MICROBATCH,
+        routes=span_engine.plan_routes(net, res, backend="scan"))
+    scan_sampler = stage_timers(scan_pipe, params)
+    t_scan = tuple(statistics.median(ts) for ts in
+                   zip(*(scan_sampler() for _ in range(3))))
+    stage_engines = [unrep.executed_engine(st) for st in unrep.stages]
+
     # STAP: one extra chip, water-filled onto the measured bottleneck
     s = len(t_plan)
     place1 = plan.place(replicas=(1,) * s, stage_times=t_plan,
@@ -269,6 +284,11 @@ def main() -> None:
         "boundaries": list(res.boundaries),
         "stage_times_solo_ms": [round(t * 1e3, 2) for t in t_solo],
         "stage_times_deployed_ms": [round(t * 1e3, 2) for t in t_dep],
+        "stage_engines": stage_engines,
+        "stage_body_ms_pallas": [round(t * 1e3, 2) for t in t_plan],
+        "stage_body_ms_scan": [round(t * 1e3, 2) for t in t_scan],
+        "stage_body_pallas_over_scan": [
+            round(p / s, 2) for p, s in zip(t_plan, t_scan)],
         "host_parallel_scaling": round(
             plan2.replicas[hot] * t_solo[hot] / t_dep[hot], 2),
         "replicas_stap": list(plan2.replicas),

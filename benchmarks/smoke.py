@@ -1,0 +1,116 @@
+"""Smoke pass over every executable benchmark family at its smallest
+config: one tiny net through the span engine (residual case and out_rows
+sweep included), the STAP pipeline, the serving session, and the
+autoplan frontier. A regression gate, not a measurement — each family
+must still build, compile and produce sane numbers, in seconds.
+
+Writes nothing under results/ (the tracked BENCH_*.json artifacts come
+from the real configs). Re-executes itself with the emulated-device XLA
+flags so the pipeline/serving families get a mesh, exactly as
+``benchmarks.occam_stap`` does:
+
+    PYTHONPATH=src python -m benchmarks.smoke     # == make bench-smoke
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _tiny_case():
+    import jax
+
+    from repro.core.graph import chain
+    from repro.models import cnn
+
+    C, P = "conv", "pool"
+    specs = [(C, 3, 1, 1, 8), (C, 3, 1, 1, 8), (P, 2, 2, 0, 0),
+             (C, 3, 1, 1, 16)]
+    net = chain("smoke_vgg", specs, in_h=12, in_w=12, in_ch=3)
+    params = cnn.init_params(jax.random.PRNGKey(0), net)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (4, 12, 12, 3))
+    return net, params, xs
+
+
+def smoke_span_engine() -> float:
+    from benchmarks import tables
+
+    with tempfile.NamedTemporaryFile(suffix=".json") as tmp:
+        rows, derived = tables.occam_span_engine(hw=16, reps=1,
+                                                 out_json=tmp.name)
+    assert rows and derived > 0
+    return derived
+
+
+def smoke_stap() -> float:
+    import jax
+
+    from repro import occam
+
+    net, params, xs = _tiny_case()
+    plan = occam.plan(net, 2500, batch=1)
+    assert plan.n_spans >= 2
+    dep = plan.place(pipeline=True, microbatch=1).compile()
+    pipe = dep.pipeline(xs.shape[0])
+    y = jax.block_until_ready(pipe.run(params, xs))
+    assert y.shape[0] == xs.shape[0]
+    return float(plan.n_spans)
+
+
+def smoke_serve() -> float:
+    import numpy as np
+
+    from repro import occam
+
+    net, params, xs = _tiny_case()
+    dep = occam.plan(net, 2500, batch=1).place(pipeline=True,
+                                               microbatch=1).compile()
+    sess = dep.serve(params)
+    sess.submit(xs)
+    (_t, ys), = sess.results()
+    assert np.asarray(ys).shape[0] == xs.shape[0]
+    return float(xs.shape[0])
+
+
+def smoke_autoplan() -> float:
+    from repro import occam
+
+    net, params, xs = _tiny_case()
+    fr = occam.autoplan(net, occam.Fleet(chips=4, vmem_elems=2500),
+                        out_rows="auto")
+    assert len(fr.candidates) > 0
+    assert all(c.plan.out_rows >= 1 for c in fr)
+    return float(len(fr.candidates))
+
+
+SMOKES = [
+    ("span_engine", smoke_span_engine),
+    ("stap_pipeline", smoke_stap),
+    ("serve_session", smoke_serve),
+    ("autoplan", smoke_autoplan),
+]
+
+
+def main() -> None:
+    print("smoke,seconds,derived")
+    for name, fn in SMOKES:
+        t0 = time.perf_counter()
+        derived = fn()
+        print(f"{name},{time.perf_counter() - t0:.1f},{derived:.4g}")
+    print("bench-smoke OK")
+
+
+if __name__ == "__main__":
+    from benchmarks.occam_stap import _merged_flags
+
+    _flags = _merged_flags(os.environ.get("XLA_FLAGS", ""))
+    if _flags is not None:
+        env = dict(os.environ, XLA_FLAGS=_flags)
+        sys.exit(subprocess.run([sys.executable, "-m", "benchmarks.smoke"],
+                                cwd=_ROOT, env=env).returncode)
+    main()

@@ -184,13 +184,79 @@ def occam_span_engine(hw: int = 32, reps: int = 5, pallas: bool = True,
         "us_pallas_interpret": round(us_pallas, 1) if us_pallas else None,
         "speedup_compiled_vs_interpreted": round(derived, 1),
     }
+
+    # residual net: a partition-crossing edge plus an in-span edge — the
+    # spans route to the fused kernel (no scan substitution) and match
+    # the oracle; tracked so residual-kernel regressions show up here
+    rspecs = [(C, 3, 1, 1, 16), (C, 3, 1, 1, 16), (C, 3, 1, 1, 16),
+              (C, 3, 1, 1, 16), (C, 3, 1, 1, 16)]
+    rnet = chain("res_mini", rspecs, in_h=hw, in_w=hw, in_ch=3,
+                 residual_edges=((0, 2), (1, 4)))
+    rres = partition_cnn(rnet, 24 * 1024)
+    rparams = cnn.init_params(jax.random.PRNGKey(2), rnet)
+    rx = jax.random.normal(jax.random.PRNGKey(3), (hw, hw, 3))
+    rroutes = span_engine.plan_routes(rnet, rres)
+    us_res_comp = timed(lambda: cnn.occam_forward(
+        rparams, rx, rnet, rres.boundaries, mode="compiled"))
+    us_res_pallas = None
+    if pallas:
+        t0 = time.perf_counter()
+        jax.block_until_ready(span_engine.execute_partition(
+            rparams, rx, rnet, rres, interpret=True))
+        us_res_pallas = (time.perf_counter() - t0) * 1e6
+    res_row = {
+        "net": rnet.name, "layers": rnet.n_layers, "hw": hw,
+        "residual_edges": [list(e) for e in rnet.residual_edges],
+        "boundaries": list(rres.boundaries),
+        "spans_on_pallas_kernel": sum(
+            r.route == span_engine.ROUTE_PALLAS for r in rroutes),
+        "spans_total": len(rroutes),
+        "us_compiled": round(us_res_comp, 1),
+        "us_pallas_interpret":
+            round(us_res_pallas, 1) if us_res_pallas else None,
+    }
+
+    # out_rows tile sweep: t output row-planes per step (Eqn. 6
+    # amortization) on the forced-scan engine (identical schedule
+    # semantics to the kernel) and the interpret-mode kernel, whose grid
+    # shrinks by t. Warm steady-state times — the compile cost of the
+    # taller tiles is a one-off the serving path never re-pays
+    sweep = []
+    from repro.core import closure as _closure
+    cuts = [0] + list(res.boundaries) + [net.n_layers]
+    for t in (1, 2, 4):
+        sroutes = span_engine.plan_routes(net, res, backend="scan",
+                                          out_rows=t)
+        us_t = timed(lambda: span_engine.execute_partition(
+            params, x, net, res, routes=sroutes, out_rows=t))
+        # machine-schedule metrics Eqn. 6 amortizes by t: the kernel's
+        # grid steps per image and the VMEM weight volume re-touched
+        # across them (every resident filter is re-applied each step its
+        # span runs) — both drop as the tile grows
+        steps = weight_touch = 0
+        for sa, sb in zip(cuts, cuts[1:]):
+            tt = max(1, min(t, net.map_shape(sb)[0]))
+            n = _closure.span_schedule(net, sa, sb, out_rows=tt).n_steps
+            steps += n
+            weight_touch += n * net.span_weight_elems(sa, sb)
+        entry = {"out_rows": t, "us_scan": round(us_t, 1),
+                 "kernel_grid_steps": steps,
+                 "weight_touch_elems": weight_touch}
+        if pallas:
+            entry["us_pallas_interpret"] = round(timed(
+                lambda: span_engine.execute_partition(
+                    params, x, net, res, interpret=True, out_rows=t),
+                n=3, warm=2), 1)
+        sweep.append(entry)
+
+    doc = {"vgg_mini": row, "res_mini": res_row, "out_rows_sweep": sweep}
     path = out_json or os.path.join(os.path.dirname(__file__), "..",
                                     "results", "BENCH_span_engine.json")
     if os.path.dirname(path):
         os.makedirs(os.path.dirname(path), exist_ok=True)
     with open(path, "w") as f:
-        json.dump(row, f, indent=2)
-    return [row], derived
+        json.dump(doc, f, indent=2)
+    return [row, res_row], derived
 
 
 def stap_example():

@@ -64,12 +64,22 @@ print(f"staged execution == oracle; measured transfers "
       f"{int(report.measured_elems)} == DP prediction "
       f"{int(plan.predicted_transfers)} "
       f"(routes: {[r.route for r in plan.routes]})")
+# Eqn. 6's tile height is a planning knob: out_rows=2 makes the fused
+# kernel emit two output row-planes per grid step (half the grid steps,
+# half the resident-weight re-touches), same outputs
+plan_t2 = occam.plan(tiny, 3000, out_rows=2)
+y_t2 = plan_t2.place().compile(interpret=True).run(params, x)
+np.testing.assert_allclose(np.asarray(y_t2), np.asarray(y_ref),
+                           rtol=1e-5, atol=1e-5)
+print(f"out_rows={plan_t2.out_rows} plan: {plan_t2.n_spans} spans on "
+      f"2-row tiles, same outputs")
 # frontiers (and the plans inside them) are serializable: ship the JSON,
 # deploy on the serving host without re-running the search
 frontier2 = occam.frontier_from_json(frontier.to_json())
 assert frontier2.best("traffic").plan.boundaries == plan.boundaries
 plan2 = occam.plan_from_json(plan.to_json())
 assert plan2.boundaries == plan.boundaries
+assert occam.plan_from_json(plan_t2.to_json()).out_rows == 2
 
 # --- C4: STAP ----------------------------------------------------------------
 from repro.core.stap import plan_replication

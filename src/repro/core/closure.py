@@ -93,19 +93,24 @@ def max_tile_rows(net: NetSpec, i: int, j: int, capacity: int,
 class SpanSchedule:
     """A fully static row-streaming schedule for SPAN(a, b).
 
-    Grid step ``t`` consumes input row-plane ``t`` (while ``t < heights[0]``)
-    and performs ``steps[t]`` — per produced map ``L_{a+1} .. L_b`` the tuple
-    of row indices computed at that step, in dependency (map-ascending)
-    order. Production is *demand-driven*: a row of an interior map is
-    scheduled only in the step where a downstream row first needs it, so the
-    closure-sized rings (``ring_caps``, from :func:`span_row_counts`) are
-    provably sufficient — the builder replays the schedule and raises
+    Grid step ``t`` consumes input row-planes ``[t*in_rows, (t+1)*in_rows)``
+    (while any remain) and performs ``steps[t]`` — per produced map
+    ``L_{a+1} .. L_b`` the tuple of row indices computed at that step, in
+    dependency (map-ascending) order. Production is *demand-driven*: a row
+    of an interior map is scheduled only in the step where a downstream row
+    first needs it, so the closure-sized rings (``ring_caps``, from
+    :func:`span_row_counts` at the schedule's ``out_rows``) are provably
+    sufficient — the builder replays the schedule and raises
     ``AssertionError("ring violation …")`` if any read would touch an
     evicted row. That replay is the compiled-engine form of the RowRing
     retention assertion (proof-by-execution of the sufficient condition).
 
-    The final map is throttled to one row per step, so consumers can stream
-    the output with a one-row block per grid step.
+    The final map is throttled to ``out_rows`` rows per step, aligned to
+    ``out_rows``-row groups (no step straddles a group boundary), so
+    consumers can stream the output with an ``out_rows``-row block per grid
+    step — the paper's Eqn.-6 tile-height amortization. ``in_rows`` is the
+    matching input arrival width (``out_rows`` times the span's cumulative
+    stride, clamped to the input height).
 
     Hashable (all-tuple fields) so it can key ``jax.jit`` static arguments.
     """
@@ -116,6 +121,13 @@ class SpanSchedule:
     heights: tuple[int, ...]     # map heights a .. b
     slots: tuple[int, ...]       # max rows/step for maps a+1 .. b
     steps: tuple[tuple[tuple[int, ...], ...], ...]
+    out_rows: int = 1            # output rows per step (tile height t)
+    in_rows: int = 1             # input rows per arrival block
+    # per step: the in_rows-row input block arriving (-1 = no arrival).
+    # Arrival is demand-driven — a block lands only when the next output
+    # group (or a pending spill drain) needs it — so arrival can never
+    # evict ring rows the chain still reads.
+    arrivals: tuple[int, ...] = ()
 
     @property
     def n_steps(self) -> int:
@@ -137,14 +149,28 @@ class SpanSchedule:
         return table
 
     def out_row_table(self) -> list[int]:
-        """Per step: the last output row produced so far (clamped >= 0) —
-        the output BlockSpec index map for a one-row-per-step stream."""
+        """Per step: the output *block* index (``out_rows``-row groups) of
+        the last output row produced so far (clamped >= 0) — the output
+        BlockSpec index map for an ``out_rows``-rows-per-step stream. At
+        ``out_rows=1`` this is the classic one-row-per-step row index."""
         out, last = [], 0
         for ops in self.steps:
             if ops[-1]:
                 last = ops[-1][-1]
-            out.append(last)
+            out.append(last // self.out_rows)
         return out
+
+    def in_row_table(self) -> list[int]:
+        """Per step: the input *block* index (``in_rows``-row groups) to
+        load — the last block that has arrived so far (clamped >= 0), so
+        no-arrival steps revisit the previous block (no new fetch). A step
+        is a fresh arrival iff its entry exceeds the previous step's."""
+        tab, last = [], 0
+        for blk in self.arrivals:
+            if blk >= 0:
+                last = blk
+            tab.append(last)
+        return tab
 
     def scratch_elems(self) -> int:
         """Ring-buffer elements the schedule requires — by construction
@@ -162,12 +188,17 @@ _schedule_cache: dict = {}
 
 
 def span_schedule(net: NetSpec, i: int, j: int,
-                  spill: frozenset[int] | tuple[int, ...] = ()) -> SpanSchedule:
+                  spill: frozenset[int] | tuple[int, ...] = (),
+                  out_rows: int = 1) -> SpanSchedule:
     """Build + validate the demand-driven streaming schedule for SPAN(i, j).
 
     ``spill``: interior maps (sources of partition-crossing residual edges)
     that must be fully materialized; they are drained after the span output
     completes so early drainage can never evict rows the chain still needs.
+
+    ``out_rows``: output rows per step (tile height t, paper Eqn. 6). Ring
+    capacities come from ``span_row_counts(..., out_rows)`` and input
+    arrival widens to ``out_rows`` times the span's cumulative stride.
 
     Raises AssertionError("ring violation …") if the ring capacities from
     ``span_row_counts`` would not retain every row the schedule reads — the
@@ -177,23 +208,56 @@ def span_schedule(net: NetSpec, i: int, j: int,
     includes the *current* ring capacities, so a changed (or monkeypatched)
     ``span_row_counts`` always re-validates instead of hitting stale state.
     """
-    caps = span_row_counts(net, i, j)
-    key = (net, i, j, tuple(sorted(set(spill))), tuple(caps))
+    caps = span_row_counts(net, i, j, out_rows)
+    key = (net, i, j, tuple(sorted(set(spill))), out_rows, tuple(caps))
     cached = _schedule_cache.get(key)
     if cached is not None:
         return cached
-    sched = _build_span_schedule(net, i, j, spill, caps)
+    sched = _build_span_schedule(net, i, j, spill, caps, out_rows)
     _schedule_cache[key] = sched
     return sched
 
 
+def _pick_in_rows(net: NetSpec, i: int, j: int, out_rows: int) -> int:
+    """Widest input arrival block matching ``out_rows`` output rows: the
+    cumulative span stride maps t output rows to t*prod(strides) input
+    rows per step (clamped to the input height)."""
+    stride_prod = 1
+    for l in range(i, j):
+        stride_prod *= net.layers[l].stride
+    return min(out_rows * stride_prod, net.map_shape(i)[0])
+
+
 def _build_span_schedule(net: NetSpec, i: int, j: int, spill,
-                         caps: list[int]) -> SpanSchedule:
+                         caps: list[int], out_rows: int = 1) -> SpanSchedule:
+    """Build at the widest stride-matched arrival block, halving ``in_rows``
+    when replay finds the closure-sized rings cannot absorb that arrival
+    granularity (a block may land only whole, so a coarse block can evict
+    rows a lagging interior map still reads). ``in_rows=1`` is the paper's
+    one-row-per-step stream and always retains exactly the closure."""
+    in_rows = _pick_in_rows(net, i, j, out_rows)
+    while True:
+        try:
+            return _build_span_schedule_at(net, i, j, spill, caps, out_rows,
+                                           in_rows)
+        except AssertionError:
+            if in_rows <= 1:
+                raise
+            in_rows = max(in_rows // 2, 1)
+
+
+def _build_span_schedule_at(net: NetSpec, i: int, j: int, spill,
+                            caps: list[int], out_rows: int,
+                            in_rows: int) -> SpanSchedule:
     n_maps = j - i + 1
     h = [net.map_shape(i + off)[0] for off in range(n_maps)]
+    if out_rows > h[-1]:
+        raise ValueError(
+            f"out_rows={out_rows} exceeds span output height {h[-1]}")
     in_span_spill = sorted(m for m in set(spill) if i < m < j)
     produced = [0] * n_maps
     steps: list[tuple[tuple[int, ...], ...]] = []
+    arrivals: list[int] = []
 
     def computable(off: int, n_prev: int) -> int:
         """Rows of map i+off computable from n_prev rows of map i+off-1
@@ -224,17 +288,51 @@ def _build_span_schedule(net: NetSpec, i: int, j: int, spill,
             ops[off - 1].append(r)
         produced[off] = upto
 
+    def input_need(off: int, upto: int) -> int:
+        """Input rows of map i required to produce rows [0, upto) of map
+        i+off — ensure()'s demand recursion, without mutating state."""
+        upto = min(upto, h[off])
+        if upto <= 0:
+            return 0
+        if off == 0:
+            return upto
+        lay = net.layers[i + off - 1]
+        hi = min((upto - 1) * lay.stride - lay.padding + lay.k, h[off - 1])
+        need = input_need(off - 1, hi)
+        for (s, tt) in net.residual_edges:
+            if tt == i + off and s >= i:
+                h_s = net.map_shape(s)[0]
+                sh = max(h_s // h[off], 1)
+                need = max(need,
+                           input_need(s - i, min((upto - 1) * sh, h_s - 1) + 1))
+        return need
+
     limit = h[0] + sum(h) + 16
     while produced[-1] < h[-1] or any(
             produced[m - i] < h[m - i] for m in in_span_spill):
         t = len(steps)
         ops: list[list[int]] = [[] for _ in range(n_maps - 1)]
-        if t < h[0]:
-            produced[0] = t + 1
+        # group-aligned output throttle: finish the current out_rows-row
+        # group, never start the next in the same step (so one output
+        # block per step suffices downstream)
+        group_end = min((produced[-1] // out_rows + 1) * out_rows, h[-1])
+        if produced[-1] < h[-1]:
+            need0 = input_need(n_maps - 1, group_end)
+        else:  # chain done; only pending spill drains still demand input
+            need0 = max(input_need(m - i, produced[m - i] + 1)
+                        for m in in_span_spill
+                        if produced[m - i] < h[m - i])
+        # demand-driven arrival: at most one in_rows block per step, and
+        # only when the pending work actually needs more input resident
+        if produced[0] < min(need0, h[0]):
+            arrivals.append(produced[0] // in_rows)
+            produced[0] = min(produced[0] + in_rows, h[0])
+        else:
+            arrivals.append(-1)
         target = produced[0]
         for off in range(1, n_maps):
             target = computable(off, target)
-        ensure(n_maps - 1, min(target, produced[-1] + 1), ops)
+        ensure(n_maps - 1, min(target, group_end), ops)
         if produced[-1] >= h[-1]:
             # chain done: drain spilled maps one row/step (never earlier —
             # early drainage could evict rows the chain still needs)
@@ -244,24 +342,33 @@ def _build_span_schedule(net: NetSpec, i: int, j: int, spill,
         if t > limit:
             raise RuntimeError(f"span_schedule({i},{j}) failed to converge")
 
-    _validate_schedule(net, i, j, caps, h, steps)
+    _validate_schedule(net, i, j, caps, h, steps, in_rows, arrivals)
     slots = tuple(max((len(s[off]) for s in steps), default=0)
                   for off in range(n_maps - 1))
     wc = tuple(net.map_shape(i + off)[1] * net.map_shape(i + off)[2]
                for off in range(n_maps - 1))
     return SpanSchedule(i, j, tuple(caps), tuple(h), slots, tuple(steps),
-                        _wc=wc)
+                        out_rows=out_rows, in_rows=in_rows,
+                        arrivals=tuple(arrivals), _wc=wc)
 
 
 def _validate_schedule(net: NetSpec, i: int, j: int, caps: list[int],
-                       h: list[int], steps) -> None:
+                       h: list[int], steps, in_rows: int = 1,
+                       arrivals=None) -> None:
     """Replay the schedule in execution order; every ring read must hit a
     resident row (retention invariant) and production must be sequential."""
     n_maps = j - i + 1
     produced = [0] * n_maps
+    if arrivals is None:  # legacy one-row-per-step arrival
+        arrivals = [t if t < h[0] else -1 for t in range(len(steps))]
     for t, ops in enumerate(steps):
-        if t < h[0]:
-            produced[0] = t + 1
+        blk = arrivals[t]
+        if blk >= 0:
+            if blk * in_rows != produced[0]:
+                raise AssertionError(
+                    f"arrival out of order: block {blk} (expected input row "
+                    f"{produced[0]})")
+            produced[0] = min(produced[0] + in_rows, h[0])
         for off in range(1, n_maps):
             lay = net.layers[i + off - 1]
             for r in ops[off - 1]:

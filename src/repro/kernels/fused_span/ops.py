@@ -1,14 +1,17 @@
 """Public ops: Occam fused-span execution with validation + backend dispatch.
 
 ``span_forward`` is the general entry point: any conv/pool span of a
-NetSpec — per-layer k, stride >= 1, same-padding, batch > 1 — lowered to a
-single generated Pallas kernel (see kernel.py). ``fused_span`` keeps the
-original two-conv signature and now simply builds the equivalent 2-layer
-NetSpec and runs it through the same generator, so the legacy path
-exercises the general machinery.
+NetSpec — per-layer k, stride >= 1, same-padding, batch > 1, residual
+edges, multi-row output tiles — lowered to a single generated Pallas
+kernel (see kernel.py). ``fused_span`` keeps the original two-conv
+signature and now simply builds the equivalent 2-layer NetSpec and runs it
+through the same generator, so the legacy path exercises the general
+machinery.
 
-Spans carrying residual edges are rejected here; route them through
-``repro.runtime.span_engine``, which falls back to the jitted scan path.
+Residual edges crossing *into* the span need their DRAM-resident source
+maps passed via ``srcs``; interior sources of partition-crossing edges are
+materialized by listing them in ``spill``. The dispatcher in
+``repro.runtime.span_engine`` wires both automatically per DP partition.
 """
 from __future__ import annotations
 
@@ -21,25 +24,29 @@ from .ref import fused_span_ref
 
 
 def span_forward(xs: jax.Array, layer_params: list[dict], net: NetSpec,
-                 a: int, b: int, interpret: bool | None = None) -> jax.Array:
+                 a: int, b: int, interpret: bool | None = None,
+                 out_rows: int = 1,
+                 srcs: dict[int, jax.Array] | None = None,
+                 spill: tuple[int, ...] = ()):
     """Execute SPAN(a, b) of ``net`` as one fused Pallas kernel.
 
     xs: (B, H, W, C) batch (or (H, W, C), auto-promoted) of L_a planes.
     ``interpret`` defaults to True off-TPU (pure-Python execution of the
     kernel body for correctness validation on CPU).
+    ``out_rows``: output row-planes per grid step (tile height t, Eqn. 6).
+    ``srcs``: DRAM-resident sources of residual edges crossing into the
+    span ({map index -> (B, h, w, c) or (h, w, c) matching xs}).
+    ``spill``: interior maps to materialize for downstream spans.
+
+    Returns feature map L_b — or ``(L_b, {map -> array})`` when ``spill``
+    is non-empty.
     """
     if not (0 <= a < b <= net.n_layers):
         raise ValueError(f"bad span ({a}, {b})")
-    for (s, t) in net.residual_edges:
-        # an edge merely straddling the span (s <= a, t > b) is harmless;
-        # in-span targets or interior sources need the scan engine
-        if a < t <= b or a < s < b:
-            raise ValueError(
-                f"span ({a}, {b}) overlaps residual edge ({s}, {t}); "
-                "use runtime.span_engine (scan fallback)")
     squeeze = xs.ndim == 3
     if squeeze:
         xs = xs[None]
+        srcs = {s: v[None] for s, v in (srcs or {}).items()}
     if xs.shape[1:] != net.map_shape(a):
         raise ValueError(f"input {xs.shape[1:]} != map L_{a} "
                          f"{net.map_shape(a)}")
@@ -52,8 +59,13 @@ def span_forward(xs: jax.Array, layer_params: list[dict], net: NetSpec,
                 raise ValueError(f"layer {a + off} weight shape {w.shape}")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    ys = span_pallas_call(xs, layer_params, net, a, b, interpret=interpret)
-    return ys[0] if squeeze else ys
+    ys, spilled = span_pallas_call(xs, layer_params, net, a, b,
+                                   interpret=interpret, out_rows=out_rows,
+                                   srcs=srcs, spill=spill)
+    if squeeze:
+        ys = ys[0]
+        spilled = {m: v[0] for m, v in spilled.items()}
+    return (ys, spilled) if spill else ys
 
 
 def fused_span(x: jax.Array, w1: jax.Array, b1: jax.Array,

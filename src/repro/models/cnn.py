@@ -309,14 +309,21 @@ def _span_scan_jit(span_params, x: jax.Array, srcs, *, net: NetSpec, a: int,
     out0 = jnp.zeros(net.map_shape(b), dtype)
     spills0 = tuple(jnp.zeros(net.map_shape(m), dtype) for m in spill)
 
+    arr_tab = jnp.asarray(schedule.arrivals, jnp.int32)
+
     def body(t, carry):
         rings, out, spills = carry
         rings, spills = list(rings), list(spills)
-        # arrival: input row-plane t joins the closure ring
-        row_in = lax.dynamic_slice_in_dim(x, jnp.minimum(t, h[0] - 1), 1, 0)
-        arrived = lax.dynamic_update_slice_in_dim(rings[0], row_in,
-                                                  t % caps[0], 0)
-        rings[0] = jnp.where(t < h[0], arrived, rings[0])
+        # demand-driven arrival: the step's scheduled in_rows-row input
+        # block (if any) joins the closure ring
+        blk = arr_tab[t]
+        for ii in range(schedule.in_rows):
+            g = jnp.maximum(blk, 0) * schedule.in_rows + ii
+            row_in = lax.dynamic_slice_in_dim(x, jnp.minimum(g, h[0] - 1),
+                                              1, 0)
+            arrived = lax.dynamic_update_slice_in_dim(rings[0], row_in,
+                                                      g % caps[0], 0)
+            rings[0] = jnp.where((blk >= 0) & (g < h[0]), arrived, rings[0])
         si = 0
         for off in range(1, n_maps):
             m = a + off

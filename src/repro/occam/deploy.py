@@ -11,11 +11,12 @@ never a silent substitution).
   ``repro.runtime.span_engine.execute_partition``.
 * Pipeline deployments build (and cache, per stream batch size) a
   ``repro.runtime.stap_pipeline.StapPipeline`` over the placement's
-  :class:`~repro.core.stap.StapPlan`. Under ``shard_map`` the Pallas
-  kernel needs a real TPU, so kernel-routed spans execute their scan twin
-  (same schedule, same row math); forcing ``backend="pallas"`` on a
-  pipeline placement is therefore rejected, as is the Python
-  ``interpreted`` specification (it cannot trace under SPMD).
+  :class:`~repro.core.stap.StapPlan`. Stage bodies dispatch through the
+  registry's ``make_spmd_body`` builders: kernel-routed spans run the
+  fused Pallas kernel directly (interpret mode off TPU, the compiled
+  kernel on real TPUs) — no scan substitution. Only the Python
+  ``interpreted`` specification is rejected on pipeline placements (it
+  cannot trace under SPMD).
 
 Serving is a first-class surface, not a loop over ``run``:
 ``Deployment.serve()`` opens a :class:`Session` — a long-lived stream of
@@ -83,7 +84,8 @@ class Deployment:
         # any span the engine cannot take.
         self.routes = self.plan.routes if backend == registry.AUTO else \
             span_engine.plan_routes(self.plan.net, self.plan.partition,
-                                    backend=backend)
+                                    backend=backend,
+                                    out_rows=self.plan.out_rows)
         self.counter = TrafficCounter()
         self._images = 0
         # set by Candidate.deploy: where this deployment sits on a
@@ -117,7 +119,8 @@ class Deployment:
             pipe = StapPipeline(
                 self.plan.net, self.plan.partition, batch,
                 self.placement.microbatch, plan=self.placement.stap,
-                mesh=self.mesh, devices=self.devices, routes=self.routes)
+                mesh=self.mesh, devices=self.devices, routes=self.routes,
+                out_rows=self.plan.out_rows)
             self._pipes[batch] = pipe
         return pipe
 
@@ -135,7 +138,8 @@ class Deployment:
             ring = StapRing(
                 self.plan.net, self.plan.partition, microbatch,
                 plan=self.placement.stap, mesh=self.mesh,
-                devices=self.devices, routes=self.routes)
+                devices=self.devices, routes=self.routes,
+                out_rows=self.plan.out_rows)
             self._rings[microbatch] = ring
         return ring
 
@@ -171,7 +175,8 @@ class Deployment:
             counts["lowerings"] += 1
             return span_engine.execute_partition(
                 params, xs, plan.net, plan.partition, counter=None,
-                interpret=self.interpret, routes=self.routes)
+                interpret=self.interpret, routes=self.routes,
+                out_rows=plan.out_rows)
 
         cached = (jax.jit(fn), counts)
         self._steps[round_batch] = cached
@@ -245,7 +250,7 @@ class Deployment:
             y = span_engine.execute_partition(
                 params, xs, self.plan.net, self.plan.partition,
                 counter=self.counter, interpret=self.interpret,
-                routes=self.routes)
+                routes=self.routes, out_rows=self.plan.out_rows)
             self._images += xs.shape[0] if xs.ndim == 4 else 1
         else:
             if xs.ndim != 4:

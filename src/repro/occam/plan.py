@@ -26,8 +26,10 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
 # v1: partition + routes + prediction. v2 adds the "serving" block
 # (session defaults: round_batch, ring_depth). v3 adds the "fleet" block
 # (the declarative hardware model the plan was searched under —
-# ``occam.autoplan``). ``load_plan`` migrates v1/v2 payloads
-# transparently.
+# ``occam.autoplan``) and, later, the optional "out_rows" key (output
+# tile height, Eqn. 6 amortization; absent means 1 — older v3 readers
+# ignore it, older v3 documents load as t=1). ``load_plan`` migrates
+# v1/v2 payloads transparently.
 PLAN_FORMAT_VERSION = 3
 _READABLE_VERSIONS = (1, 2, 3)
 
@@ -79,6 +81,9 @@ class Plan:
     predicted: TrafficReport   # per-image, scheme="occam"
     serving: ServingDefaults = ServingDefaults()  # session defaults (v2)
     fleet: Fleet | None = None  # hardware model planned against (v3)
+    # output tile height t (rows per kernel step, Eqn. 6 amortization);
+    # spans whose output map is shorter clamp per-span at execution
+    out_rows: int = 1
 
     # -- introspection ------------------------------------------------------
 
@@ -146,6 +151,7 @@ class Plan:
                           for f in _PREDICTED_FIELDS},
             "serving": self.serving.to_dict(),
             "fleet": self.fleet.to_dict() if self.fleet else None,
+            "out_rows": self.out_rows,
         }
 
     def to_json(self, indent: int | None = 2) -> str:
@@ -158,7 +164,7 @@ class Plan:
 
 def plan(net: NetSpec, capacity_elems: int, *, batch: int = 1,
          round_batch: int | None = None,
-         fleet: Fleet | None = None) -> Plan:
+         fleet: Fleet | None = None, out_rows: int = 1) -> Plan:
     """Run the DP + engine routing for ``net`` under ``capacity_elems``.
 
     ``round_batch`` records a serving-round size with the plan (schema
@@ -166,13 +172,22 @@ def plan(net: NetSpec, capacity_elems: int, *, batch: int = 1,
     ``fleet`` records the hardware model the capacity came from (schema
     v3) — ``occam.autoplan`` derives the capacity from the fleet instead
     of taking it as an argument.
+    ``out_rows`` is the output tile height t (output row-planes per
+    kernel step — the paper's Table II TileDim, Eqn. 6 amortization of
+    ring shifts and weight re-touch). Each span clamps it to its own
+    output height at execution; the closure grows with t
+    (``closure.span_footprint_elems(..., out_rows=)``), and
+    ``occam.autoplan`` picks the largest t the fleet's capacity fits
+    instead of taking it as an argument.
     """
+    if out_rows < 1:
+        raise ValueError(f"out_rows must be >= 1, got {out_rows}")
     part = partition_cnn(net, capacity_elems, batch=batch)
-    routes = span_engine.plan_routes(net, part)
+    routes = span_engine.plan_routes(net, part, out_rows=out_rows)
     predicted = occam_traffic(net, capacity_elems, batch, part)
     serving = ServingDefaults(round_batch, part.n_spans)
     return Plan(net, capacity_elems, batch, part, routes, predicted,
-                serving, fleet)
+                serving, fleet, out_rows)
 
 
 def plan_from_dict(d: dict) -> Plan:
@@ -201,7 +216,8 @@ def plan_from_dict(d: dict) -> Plan:
     fleet = Fleet.from_dict(d["fleet"]) \
         if version >= 3 and d.get("fleet") else None
     return Plan(net, int(d["capacity_elems"]), int(d["batch"]), part,
-                routes, predicted, serving, fleet)
+                routes, predicted, serving, fleet,
+                int(d.get("out_rows", 1)))
 
 
 def plan_from_json(doc: str) -> Plan:

@@ -49,6 +49,8 @@ class RouteContext:
     """Partition-level facts an ``accepts`` check may need."""
 
     fits: bool = True  # False only for oversized single layers (lower bound)
+    out_rows: int = 1  # requested output tile height (rows per step)
+    dtype: str | None = None  # activation dtype name when known at planning
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,15 +64,15 @@ class EngineSpec:
     # placement stage)? Python-loop or real-hardware-only engines say no.
     spmd_capable: bool = False
     # Builder for the engine's SPMD pipeline stage body:
-    # ``make_spmd_body(net, a, b, spill, src_keys) -> body`` where
-    # ``body(span_params, x, srcs) -> (out, {map -> spilled})`` traces
-    # under shard_map (span_params: the span's own parameter slices;
-    # x: (mb, h, w, c) span input; srcs: upstream residual sources in
-    # ``src_keys`` order). The builder runs once at pipeline build time so
+    # ``make_spmd_body(net, a, b, spill, src_keys, *, out_rows=1) -> body``
+    # where ``body(span_params, x, srcs) -> (out, {map -> spilled})``
+    # traces under shard_map (span_params: the span's own parameter
+    # slices; x: (mb, h, w, c) span input; srcs: upstream residual
+    # sources in ``src_keys`` order; out_rows: output tile height the
+    # placement planned). The builder runs once at pipeline build time so
     # it may precompute static schedules. ``None`` means this engine has
     # no SPMD body of its own — ``spmd_fallback`` names the engine whose
-    # body executes its spans in a pipeline (e.g. the Pallas kernel needs
-    # a real TPU under shard_map, so its pipeline twin is the scan).
+    # body executes its spans in a pipeline (chains allowed).
     make_spmd_body: Callable | None = None
     spmd_fallback: str | None = None
 

@@ -278,15 +278,42 @@ def load_frontier(path: str) -> Frontier:
 # --------------------------------------------------------------------------
 
 def _make_plan(net: NetSpec, capacity: int, batch: int,
-               part: PartitionResult, fleet: Fleet) -> Plan:
+               part: PartitionResult, fleet: Fleet,
+               out_rows: int = 1) -> Plan:
     """A schema-v3 Plan from an already-computed partition (the sweep
     never calls ``occam.plan`` — that would re-run the DP)."""
     from repro.runtime import span_engine
 
-    routes = span_engine.plan_routes(net, part)
+    routes = span_engine.plan_routes(net, part, out_rows=out_rows)
     predicted = occam_traffic(net, capacity, batch, part)
     return Plan(net, capacity, batch, part, routes, predicted,
-                ServingDefaults(None, part.n_spans), fleet)
+                ServingDefaults(None, part.n_spans), fleet, out_rows)
+
+
+_MAX_AUTO_TILE = 8
+
+
+def _pick_out_rows(net: NetSpec, capacity: int, batch: int,
+                   part: PartitionResult) -> int:
+    """Score the tile-height knob for one partition: the largest
+    power-of-two t (capped at 8) whose grown closure still fits the
+    capacity on EVERY fitting span — ``span_footprint_elems(...,
+    out_rows=t)`` is the accounting, ``max_tile_rows`` its inverse.
+    Oversized lower-bound spans are oracle-routed whole-map executions;
+    tile height does not apply to them."""
+    from repro.core import closure
+
+    t = _MAX_AUTO_TILE
+    for sp in part.spans:
+        if not sp.fits or sp.end - sp.start < 1:
+            continue
+        rows = closure.max_tile_rows(net, sp.start, sp.end, capacity,
+                                     batch=batch)
+        t = min(t, max(rows, 1))
+    p = 1
+    while p * 2 <= t:
+        p *= 2
+    return p
 
 
 def _replica_vectors(stage_times: Sequence[float], fleet: Fleet,
@@ -354,7 +381,8 @@ def _score(net: NetSpec, plan: Plan, fleet: Fleet, kind: str,
 def autoplan(net: NetSpec, fleet: Fleet, *,
              objective: str = "throughput", batch: int = 1,
              arrival_rate: float | None = None,
-             harmonize: bool = True) -> Frontier:
+             harmonize: bool = True,
+             out_rows: int | str = 1) -> Frontier:
     """Search (capacity x placement) under a fleet -> :class:`Frontier`.
 
     ``objective``: what ``Frontier.best()`` optimizes by default —
@@ -366,12 +394,20 @@ def autoplan(net: NetSpec, fleet: Fleet, *,
     ``Session.scale`` re-picks against observed rates. ``harmonize``
     applies the round-width economy pass to every enumerated replica
     vector (see ``core.stap.plan_replication``).
+    ``out_rows`` sets the output tile height every candidate plan ships
+    with; ``"auto"`` scores the knob per partition — the largest
+    power-of-two t whose grown closure (``span_footprint_elems(...,
+    out_rows=t)``) still fits the partition's capacity on every span.
     """
     if objective not in OBJECTIVES:
         raise ValueError(f"unknown objective {objective!r} "
                          f"(one of {OBJECTIVES})")
     if batch < 1:
         raise ValueError("batch must be >= 1")
+    if out_rows != "auto" and (not isinstance(out_rows, int)
+                               or out_rows < 1):
+        raise ValueError(f"out_rows must be a positive int or 'auto', "
+                         f"got {out_rows!r}")
     from repro.runtime.stap_pipeline import (model_stage_times,
                                              plan_span_stages)
 
@@ -391,7 +427,9 @@ def autoplan(net: NetSpec, fleet: Fleet, *,
 
     candidates: list[Candidate] = []
     for capacity, part in by_boundaries.values():
-        plan = _make_plan(net, capacity, batch, part, fleet)
+        t = (_pick_out_rows(net, capacity, batch, part)
+             if out_rows == "auto" else int(out_rows))
+        plan = _make_plan(net, capacity, batch, part, fleet, t)
         stages = plan_span_stages(net, part, routes=plan.routes)
         times = model_stage_times(net, stages)
         s = len(stages)

@@ -6,13 +6,15 @@ in the deployment registry (``repro.occam.registry``); this module
 registers the four built-in ones at import:
 
 * ``pallas`` — the generated N-layer fused-span kernel
-  (``repro.kernels.fused_span``): residual-free conv/pool spans, any
-  per-layer k / stride / same-padding, batch in the leading grid dimension
-  so filters stay VMEM-resident across images (paper Eqn. 6).
-* ``scan`` — the jitted row-streaming fallback
-  (``repro.models.cnn._span_scan_jit``): spans touched by residual edges
-  (in-span adds, sources crossing in from DRAM, spills of
-  partition-crossing sources).
+  (``repro.kernels.fused_span``): conv/pool spans, any per-layer k /
+  stride / same-padding, residual edges (in-span adds, sources crossing
+  in from DRAM, spills of partition-crossing sources), multi-row output
+  tiles (``out_rows``), batch in the leading grid dimension so filters
+  stay VMEM-resident across images (paper Eqn. 6).
+* ``scan`` — the jitted row-streaming twin
+  (``repro.models.cnn._span_scan_jit``): same schedule and row math as
+  the kernel, as a plain ``lax.fori_loop`` (forced-backend / A-B
+  reference).
 * ``oracle`` — layer-by-layer execution for oversized single layers (the
   DP's lower-bound spans, which by definition exceed on-chip capacity) or
   spans whose schedule fails validation.
@@ -66,12 +68,18 @@ def _boundaries_of(partition: PartitionResult | Sequence[int],
 
 def plan_routes(net: NetSpec,
                 partition: PartitionResult | Sequence[int], *,
-                backend: str = registry.AUTO) -> tuple[SpanRoute, ...]:
+                backend: str = registry.AUTO, out_rows: int = 1,
+                dtype: str | None = None) -> tuple[SpanRoute, ...]:
     """Decide per-span engine. Pure function of the net + partition.
 
     ``backend``: ``"auto"`` (priority dispatch over the registry) or a
     registered engine name to force every span onto it (BackendError if
     any span is ineligible).
+    ``out_rows``: requested output tile height (rows per step), clamped
+    per span to its output height (a deep net's tail maps are short);
+    engines whose schedule cannot retain the closure at that height
+    reject.
+    ``dtype``: activation dtype name, when known at planning time.
     """
     boundaries = _boundaries_of(partition, net)
     cuts = [0] + boundaries + [net.n_layers]
@@ -79,7 +87,9 @@ def plan_routes(net: NetSpec,
         if isinstance(partition, PartitionResult) else {}
     routes = []
     for a, b in zip(cuts, cuts[1:]):
-        ctx = registry.RouteContext(fits=fits.get((a, b), True))
+        t = max(1, min(out_rows, net.map_shape(b)[0]))
+        ctx = registry.RouteContext(fits=fits.get((a, b), True),
+                                    out_rows=t, dtype=dtype)
         name, reason = registry.route_span(net, a, b, ctx, backend=backend)
         routes.append(SpanRoute(a, b, name, reason))
     return tuple(routes)
@@ -89,12 +99,13 @@ def execute_partition(params: list[dict], xs: jax.Array, net: NetSpec,
                       partition: PartitionResult | Sequence[int], *,
                       counter: cnn.TrafficCounter | None = None,
                       interpret: bool | None = None,
-                      routes: tuple[SpanRoute, ...] | None = None
-                      ) -> jax.Array:
+                      routes: tuple[SpanRoute, ...] | None = None,
+                      out_rows: int = 1) -> jax.Array:
     """Execute ``net`` on ``xs`` ((B, H, W, C) or (H, W, C)) span-by-span.
 
     ``counter`` accumulates off-chip element transfers (x batch), matching
     ``cnn.predicted_transfers(net, boundaries) * batch``.
+    ``out_rows``: output tile height per step (Eqn. 6 amortization).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -103,7 +114,8 @@ def execute_partition(params: list[dict], xs: jax.Array, net: NetSpec,
         xs = xs[None]
     batch = xs.shape[0]
     boundaries = _boundaries_of(partition, net)
-    routes = routes or plan_routes(net, partition)
+    routes = routes or plan_routes(net, partition, out_rows=out_rows,
+                                   dtype=str(xs.dtype))
     crossing = [(s, t) for (s, t) in net.residual_edges
                 if any(s < p < t for p in boundaries)]
     spill_sources = {s for (s, _t) in crossing}
@@ -113,8 +125,9 @@ def execute_partition(params: list[dict], xs: jax.Array, net: NetSpec,
         cnn.count_span_reads(counter, net, a, b, batch)
         spill = tuple(sorted(m for m in spill_sources if a < m < b))
         engine = registry.get_engine(route.route)
+        t = max(1, min(out_rows, net.map_shape(b)[0]))  # per-span clamp
         out, spilled = engine.run(params, net, a, b, stored, spill,
-                                  interpret=interpret)
+                                  interpret=interpret, out_rows=t)
         cnn.count_span_writes(counter, net, b, spilled, batch)
         stored[b] = out
         stored.update(spilled)
@@ -132,23 +145,52 @@ def _oversized(net: NetSpec, a: int, b: int,
     return not ctx.fits and b - a == 1
 
 
+# Activation dtypes the generated kernel's row math supports (conv_row
+# accumulates in float32; integer activations would silently change ReLU
+# and pooling semantics).
+_PALLAS_DTYPES = ("float32", "bfloat16", "float16")
+
+
+def _tile_shape_reason(net: NetSpec, a: int, b: int,
+                       out_rows: int) -> str | None:
+    """Named tile-shape disqualifier for SPAN(a, b) at ``out_rows``, or
+    None when the requested tile height is representable."""
+    if out_rows < 1:
+        return f"tile shape: out_rows={out_rows} (must be >= 1)"
+    out_h = net.map_shape(b)[0]
+    if out_rows > out_h:
+        return (f"tile shape: out_rows={out_rows} exceeds span output "
+                f"height {out_h}")
+    return None
+
+
 def _pallas_accepts(net: NetSpec, a: int, b: int,
                     ctx: registry.RouteContext) -> tuple[bool, str]:
+    """Kernel eligibility. Rejections name the specific disqualifier —
+    the BackendError a forced ``backend="pallas"`` raises carries it."""
     if _oversized(net, a, b, ctx):
         return False, "oversized single layer (lower bound)"
-    # Disqualifying edges: a target inside the span (needs in-span adds)
-    # or an interior source (needs ring reads / boundary spills). An
-    # edge merely *straddling* the span (s <= a, t > b) costs it
-    # nothing — the source is already in DRAM — so ResNet-style spans
-    # between skip endpoints still take the kernel.
+    if ctx.dtype is not None and ctx.dtype not in _PALLAS_DTYPES:
+        return False, (f"dtype {ctx.dtype!r} unsupported by the fused "
+                       f"kernel (one of {_PALLAS_DTYPES})")
+    bad_tile = _tile_shape_reason(net, a, b, ctx.out_rows)
+    if bad_tile:
+        return False, bad_tile
+    # Residual edges are first-class now: in-span targets add from the
+    # closure rings (or DRAM operands for sources crossing in), interior
+    # sources of partition-crossing edges stream out as spills. The
+    # schedule build proves every residual source is still ring-resident
+    # when its target row needs it — a proof failure names the edge.
     touched = [(s, t) for (s, t) in net.residual_edges
                if a < t <= b or a < s < b]
-    if touched:
-        return False, f"residual edges {touched}"
     try:
-        closure.span_schedule(net, a, b)
+        closure.span_schedule(net, a, b, out_rows=ctx.out_rows)
     except (AssertionError, RuntimeError) as e:
-        return False, f"schedule rejected: {e}"
+        kind = f"residual edges {touched}: " if touched else ""
+        return False, (f"schedule rejected at out_rows={ctx.out_rows}: "
+                       f"{kind}{e}")
+    if touched:
+        return True, f"fused span kernel (residual edges {touched})"
     return True, "fused span kernel"
 
 
@@ -156,12 +198,15 @@ def _scan_accepts(net: NetSpec, a: int, b: int,
                   ctx: registry.RouteContext) -> tuple[bool, str]:
     if _oversized(net, a, b, ctx):
         return False, "oversized single layer (lower bound)"
+    bad_tile = _tile_shape_reason(net, a, b, ctx.out_rows)
+    if bad_tile:
+        return False, bad_tile
     touched = [(s, t) for (s, t) in net.residual_edges
                if a < t <= b or a < s < b]
     try:
-        closure.span_schedule(net, a, b)
+        closure.span_schedule(net, a, b, out_rows=ctx.out_rows)
     except (AssertionError, RuntimeError) as e:
-        return False, f"schedule rejected: {e}"
+        return False, f"schedule rejected at out_rows={ctx.out_rows}: {e}"
     if touched:
         return True, f"residual edges {touched}"
     return True, "jitted row-streaming scan"
@@ -180,23 +225,33 @@ def _always_accepts(reason: str):
 # Built-in engines: span runners
 # --------------------------------------------------------------------------
 
+def _span_src_keys(net: NetSpec, a: int, b: int) -> tuple[int, ...]:
+    """DRAM-resident residual sources crossing into SPAN(a, b)."""
+    return tuple(sorted({s for (s, t) in net.residual_edges
+                         if s < a < t <= b}))
+
+
 def _run_pallas(params, net: NetSpec, a: int, b: int, stored, spill, *,
-                interpret: bool):
-    if spill:  # plan_routes never produces this; reject rather than
-        raise ValueError(  # silently running a different engine
-            f"span ({a}, {b}) routed to pallas but must spill "
-            f"{spill}; use the scan route")
+                interpret: bool, out_rows: int = 1):
+    """The fused kernel on one span: residual sources crossing in ride as
+    DRAM operands, partition-crossing interior sources spill as extra
+    kernel outputs, ``out_rows`` output row-planes per grid step."""
+    src_keys = _span_src_keys(net, a, b)
     out = span_ops.span_forward(stored[a], params[a:b], net, a, b,
-                                interpret=interpret)
+                                interpret=interpret, out_rows=out_rows,
+                                srcs={s: stored[s] for s in src_keys},
+                                spill=spill)
+    if spill:
+        return out  # already (ys, {map -> spilled})
     return out, {}
 
 
 def _run_scan(params, net: NetSpec, a: int, b: int, stored, spill, *,
-              interpret: bool):
+              interpret: bool, out_rows: int = 1):
     """Batched jitted row-streaming of one span (vmap over images)."""
-    src_keys = tuple(sorted({s for (s, t) in net.residual_edges
-                             if s < a < t <= b}))
-    schedule = closure.span_schedule(net, a, b, spill=spill)
+    src_keys = _span_src_keys(net, a, b)
+    schedule = closure.span_schedule(net, a, b, spill=spill,
+                                     out_rows=out_rows)
     fn = functools.partial(cnn._span_scan_jit, net=net, a=a, b=b,
                            schedule=schedule, spill=spill,
                            src_keys=src_keys)
@@ -207,7 +262,7 @@ def _run_scan(params, net: NetSpec, a: int, b: int, stored, spill, *,
 
 
 def _run_oracle(params, net: NetSpec, a: int, b: int, stored, spill, *,
-                interpret: bool):
+                interpret: bool, out_rows: int = 1):
     """Layer-by-layer batched execution of one span (+ residual adds)."""
     maps = {a: stored[a]}
     y = stored[a]
@@ -233,8 +288,12 @@ def _run_oracle(params, net: NetSpec, a: int, b: int, stored, spill, *,
 
 
 def _run_interpreted(params, net: NetSpec, a: int, b: int, stored, spill, *,
-                     interpret: bool):
-    """The Python RowRing loop (executable specification), per image."""
+                     interpret: bool, out_rows: int = 1):
+    """The Python RowRing loop (executable specification), per image.
+
+    ``out_rows`` is accepted for signature parity and ignored: the oracle
+    and the RowRing specification execute whole maps / single rows, so
+    tile height changes nothing about their results or their costs."""
     outs, spills = [], {m: [] for m in spill}
     for i in range(stored[a].shape[0]):
         sto_i = {k: v[i] for k, v in stored.items()}
@@ -249,11 +308,34 @@ def _run_interpreted(params, net: NetSpec, a: int, b: int, stored, spill, *,
 # SPMD pipeline stage bodies (shard_map-traceable span cores)
 # --------------------------------------------------------------------------
 
-def _scan_spmd_body(net: NetSpec, a: int, b: int, spill, src_keys):
+def _pallas_spmd_body(net: NetSpec, a: int, b: int, spill, src_keys, *,
+                      out_rows: int = 1):
+    """Stage-body builder for the pallas engine: the fused span kernel as
+    a shard_map-traceable pipeline stage core.
+
+    Interpret mode is decided once at build time exactly as
+    ``execute_partition`` decides it (pure-Python kernel evaluation off
+    TPU — it traces fine under shard_map; the compiled kernel on real
+    TPUs). The schedule is built (and ring-retention validated) here, at
+    pipeline build time, and baked into the jit cache key."""
+    interpret = jax.default_backend() != "tpu"
+
+    def body(span_params, x, srcs):
+        out, spilled = span_ops.span_pallas_call(
+            x, list(span_params), net, a, b, interpret=interpret,
+            out_rows=out_rows, srcs=dict(zip(src_keys, srcs)), spill=spill)
+        return out, spilled
+
+    return body
+
+
+def _scan_spmd_body(net: NetSpec, a: int, b: int, spill, src_keys, *,
+                    out_rows: int = 1):
     """Stage-body builder for the scan engine: the same row-streaming math
     as ``_run_scan``, with the static span schedule precomputed once at
     pipeline build time."""
-    schedule = closure.span_schedule(net, a, b, spill=spill)
+    schedule = closure.span_schedule(net, a, b, spill=spill,
+                                     out_rows=out_rows)
     fn = functools.partial(cnn._span_scan_jit, net=net, a=a, b=b,
                            schedule=schedule, spill=spill,
                            src_keys=src_keys)
@@ -266,7 +348,8 @@ def _scan_spmd_body(net: NetSpec, a: int, b: int, spill, src_keys):
     return body
 
 
-def _oracle_spmd_body(net: NetSpec, a: int, b: int, spill, src_keys):
+def _oracle_spmd_body(net: NetSpec, a: int, b: int, spill, src_keys, *,
+                      out_rows: int = 1):
     """Stage-body builder for the oracle engine (lower-bound spans)."""
     def body(span_params, x, srcs):
         stored = {a: x, **dict(zip(src_keys, srcs))}
@@ -279,16 +362,14 @@ def _oracle_spmd_body(net: NetSpec, a: int, b: int, spill, src_keys):
 # Auto-dispatch order: kernel > compiled scan > oracle. The interpreted
 # specification never wins auto (the oracle accepts everything first) but
 # is a valid forced backend. spmd_capable marks the engines whose bodies
-# trace under shard_map: the Pallas kernel needs a real TPU there and the
-# interpreted loop cannot trace at all, so pipeline placements take only
-# scan/oracle (and future engines registered spmd_capable=True). Pipeline
-# stage bodies dispatch through make_spmd_body: kernel-routed spans
-# declare the scan as their shard_map twin (same schedule, same row math)
-# via spmd_fallback, so a future real-TPU pallas stage body is one
-# ``register_engine(..., make_spmd_body=...)`` call, not a pipeline edit.
+# trace under shard_map: pallas/scan/oracle all register a make_spmd_body
+# (the pallas body runs the fused kernel — interpret-mode off TPU, the
+# compiled kernel on real TPUs — so kernel-routed spans drive pipeline
+# stages directly, no scan substitution); only the interpreted Python
+# loop cannot trace and stays off pipelines.
 registry.register_engine(
     ROUTE_PALLAS, priority=10, accepts=_pallas_accepts, run=_run_pallas,
-    spmd_fallback=ROUTE_SCAN,
+    spmd_capable=True, make_spmd_body=_pallas_spmd_body,
     description="generated N-layer fused-span Pallas kernel")
 registry.register_engine(
     ROUTE_SCAN, priority=20, accepts=_scan_accepts, run=_run_scan,

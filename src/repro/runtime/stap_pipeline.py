@@ -17,11 +17,12 @@ device mesh.
   traffic: the replica that served a slot sends straight to the replica
   that will serve it next. There is no intra-stage collective until a
   single final ``psum`` assembles the last stage's outputs.
-* Stage bodies are the PR-1 span engine: spans run the jitted row-streaming
-  scan (``repro.models.cnn._span_scan_jit`` — same closure-sized rings and
-  row math as the fused Pallas kernel, which needs a real TPU and therefore
-  does not run under ``shard_map`` on CI) and oversized single layers fall
-  back to the oracle, per ``repro.runtime.span_engine.plan_routes``.
+* Stage bodies dispatch through the engine registry
+  (``EngineSpec.make_spmd_body``): kernel-routed spans run the fused
+  Pallas span kernel directly under ``shard_map`` (interpret mode off
+  TPU, the compiled kernel on real TPUs), scan-routed spans the jitted
+  row-streaming twin, and oversized single layers the oracle, per
+  ``repro.runtime.span_engine.plan_routes``.
 
 Heterogeneous spans under one SPMD program: every boundary payload is
 flattened to a fixed-width slot vector and every span's weights to a
@@ -404,16 +405,30 @@ def _round_executor(step, stage_params, feed: jax.Array, mesh: Mesh,
             head = lax.dynamic_index_in_dim(queue, t % chunk, 0,
                                             keepdims=False)
             slot_in = jnp.where(i == 0, head, buf)
-            ys = []
+            # Double-buffered boundary slot: ``buf`` (the receive buffer,
+            # carried from last tick) is only read here; each slot's
+            # outgoing hop is issued immediately after its body produces
+            # ``yw`` — a distinct send value, never aliasing ``buf`` — so
+            # the collective-permute-start for slot w overlaps the bodies
+            # of slots w+1.. instead of serializing behind the whole
+            # tick's compute.
+            ys, hops = [], []
             for w in range(width):
                 pred = jnp.logical_and(
                     jnp.logical_and(active, owner[i, j, w]),
                     live[rgc * width + w])
-                ys.append(lax.cond(
+                yw = lax.cond(
                     pred,
                     lambda x: step(i, p_here, x),
                     lambda x: jnp.zeros_like(x),
-                    slot_in[w]))
+                    slot_in[w])
+                ys.append(yw)
+                if s_stages > 1:
+                    # boundary activations: one slot-level hop down the
+                    # pipe — the only other inter-stage traffic, exactly
+                    # the DP's minimized quantity
+                    hops.append(lax.ppermute(
+                        yw, (stage_axis, replica_axis), perms[w]))
             y = jnp.stack(ys)
             # output conveyor: the last stage row injects its finished
             # round (inactive ticks injected zeros above); everyone else
@@ -443,12 +458,9 @@ def _round_executor(step, stage_params, feed: jax.Array, mesh: Mesh,
                 incoming = lax.ppermute(head, stage_axis, conveyor)
                 queue = lax.dynamic_update_index_in_dim(
                     queue, incoming, t % chunk, 0)
-                # boundary activations: one slot-level hop down the pipe —
-                # the only other inter-stage traffic, exactly the DP's
-                # minimized quantity
-                buf = jnp.stack([
-                    lax.ppermute(y[w], (stage_axis, replica_axis), perms[w])
-                    for w in range(width)])
+                # next tick's receive buffer: the hops issued per slot
+                # above (the send side of the double buffer)
+                buf = jnp.stack(hops)
             return (buf, outq, transit, queue), None
 
         (_, outq, _, _), _ = lax.scan(tick, (buf0, outq0, transit0, queue0),
@@ -518,12 +530,14 @@ class _SpanProgram:
                  target_period: float | None = None,
                  mesh: Mesh | None = None,
                  devices: Sequence | None = None,
-                 routes: Sequence[span_engine.SpanRoute] | None = None):
+                 routes: Sequence[span_engine.SpanRoute] | None = None,
+                 out_rows: int = 1):
         self.net = net
         self.boundaries = span_engine._boundaries_of(partition, net)
         self.stages = plan_span_stages(net, partition, routes=routes)
         n_stages = len(self.stages)
         self.microbatch = microbatch
+        self.out_rows = out_rows
         self.stage_times = tuple(stage_times) if stage_times is not None \
             else model_stage_times(net, self.stages)
         if plan is None:
@@ -557,10 +571,9 @@ class _SpanProgram:
     def executed_engine(self, stage: StageSpec) -> str:
         """The engine whose SPMD body the stage actually runs under
         shard_map, resolved through the registry: the route itself when it
-        registered a ``make_spmd_body``, else its declared
-        ``spmd_fallback`` (the Pallas kernel needs a real TPU, so
-        kernel-routed spans execute their scan twin — same schedule and
-        row math)."""
+        registered a ``make_spmd_body`` (pallas/scan/oracle all do —
+        kernel-routed spans run the fused kernel, no scan substitution),
+        else its declared ``spmd_fallback``."""
         return registry.resolve_spmd_engine(stage.route.route).name
 
     # -- SPMD program -------------------------------------------------------
@@ -572,7 +585,11 @@ class _SpanProgram:
         payload (output map + spills + forwarded upstream sources)."""
         net, (a, b) = self.net, stage.span
         spec = registry.resolve_spmd_engine(stage.route.route)
-        core = spec.make_spmd_body(net, a, b, stage.spill, stage.src_keys)
+        # per-stage effective tile height: a deep net's tail spans have
+        # short output maps, so the planned out_rows clamps per span
+        t = max(1, min(self.out_rows, net.map_shape(b)[0]))
+        core = spec.make_spmd_body(net, a, b, stage.spill, stage.src_keys,
+                                   out_rows=t)
 
         def body(p_flat, slot):
             span_params = _unflatten_span_params(p_flat, net, a, b)
@@ -642,12 +659,13 @@ class StapPipeline(_SpanProgram):
                  target_period: float | None = None,
                  mesh: Mesh | None = None,
                  devices: Sequence | None = None,
-                 routes: Sequence[span_engine.SpanRoute] | None = None):
+                 routes: Sequence[span_engine.SpanRoute] | None = None,
+                 out_rows: int = 1):
         super().__init__(net, partition, microbatch, plan=plan,
                          stage_times=stage_times, max_chips=max_chips,
                          max_replicas=max_replicas,
                          target_period=target_period, mesh=mesh,
-                         devices=devices, routes=routes)
+                         devices=devices, routes=routes, out_rows=out_rows)
         self.batch = batch
         self.n_microbatches = -(-batch // microbatch)
         self.schedule = staggered_schedule(self.plan, self.n_microbatches)
@@ -800,9 +818,10 @@ class StapRing(_SpanProgram):
                  plan: StapPlan,
                  mesh: Mesh | None = None,
                  devices: Sequence | None = None,
-                 routes: Sequence[span_engine.SpanRoute] | None = None):
+                 routes: Sequence[span_engine.SpanRoute] | None = None,
+                 out_rows: int = 1):
         super().__init__(net, partition, microbatch, plan=plan, mesh=mesh,
-                         devices=devices, routes=routes)
+                         devices=devices, routes=routes, out_rows=out_rows)
         self.steady = steady_schedule(self.plan)
         self.trace_count = 0   # tick lowerings; regression: stays at 1
         self._tick = jax.jit(self._build_tick())
@@ -866,27 +885,30 @@ class StapRing(_SpanProgram):
             j = lax.axis_index(REPLICA_AXIS)
             p_here = jax.tree.map(lambda l: l[0], params_local)
             slot_in = jnp.where(i == 0, in_round, state)
-            ys = []
+            # Double-buffered boundary slot (as in ``_round_executor``):
+            # ``state`` is the receive buffer, read-only this tick; each
+            # slot's hop is issued right after its body so the transfer
+            # overlaps the remaining slots' compute.
+            ys, hops = [], []
             for w in range(width):
                 # masks[i] is the validity of the round at stage i (the
                 # session tracks what entered i ticks ago); a masked slot
                 # skips its span body entirely
                 pred = jnp.logical_and(owner[i, j, w], masks[i, w])
-                ys.append(lax.cond(
+                yw = lax.cond(
                     pred,
                     lambda x: step(i, p_here, x),
                     lambda x: jnp.zeros_like(x),
-                    slot_in[w]))
+                    slot_in[w])
+                ys.append(yw)
+                if s_stages > 1:
+                    # boundary payloads hop one stage down the pipe — the
+                    # ring state carried to the next tick
+                    hops.append(lax.ppermute(
+                        yw, (STAGE_AXIS, REPLICA_AXIS), perms[w]))
             y = jnp.stack(ys)
             out = jnp.where(i == s_stages - 1, y, jnp.zeros_like(y))
-            if s_stages > 1:
-                # boundary payloads hop one stage down the pipe — the
-                # ring state carried to the next tick
-                state = jnp.stack([
-                    lax.ppermute(y[w], (STAGE_AXIS, REPLICA_AXIS), perms[w])
-                    for w in range(width)])
-            else:
-                state = jnp.zeros_like(y)
+            state = jnp.stack(hops) if s_stages > 1 else jnp.zeros_like(y)
             return state, out
 
         mapped = _shard_map(per_device, mesh=mesh,

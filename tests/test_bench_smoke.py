@@ -1,0 +1,26 @@
+"""Slow-tier regression gate: ``make bench-smoke`` — each executable
+benchmark family's smallest config still builds, compiles and produces
+sane numbers. Runs the module in a subprocess exactly as the Makefile
+target does (it re-execs itself with the emulated-device XLA flags)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_bench_smoke_runs_every_family():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    res = subprocess.run([sys.executable, "-m", "benchmarks.smoke"],
+                         cwd=_ROOT, env=env, capture_output=True,
+                         text=True, timeout=900)
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "bench-smoke OK" in res.stdout
+    for family in ("span_engine", "stap_pipeline", "serve_session",
+                   "autoplan"):
+        assert family in res.stdout

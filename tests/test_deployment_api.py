@@ -93,6 +93,24 @@ def test_plan_json_roundtrip_residual_net():
     assert_close(y, ref)
 
 
+def test_plan_out_rows_roundtrip():
+    """The tile-height knob ships with the plan (optional v3 key): it
+    round-trips through JSON, defaults to 1 when absent (older
+    documents), and drives a correct multi-row execution."""
+    net, params, xs, ref = vgg_case()
+    plan = occam.plan(net, CAPACITY, batch=xs.shape[0], out_rows=2)
+    assert plan.out_rows == 2
+    loaded = occam.plan_from_json(plan.to_json())
+    assert loaded.out_rows == 2
+    d = plan.to_dict()
+    del d["out_rows"]
+    assert occam.plan_from_dict(d).out_rows == 1
+    y = loaded.place().compile(interpret=True).run(params, xs)
+    assert_close(y, ref)
+    with pytest.raises(ValueError, match="out_rows"):
+        occam.plan(net, CAPACITY, out_rows=0)
+
+
 def test_plan_version_gate():
     net, *_ = vgg_case()
     d = occam.plan(net, CAPACITY).to_dict()
@@ -248,11 +266,29 @@ def test_backend_oracle_and_interpreted_match_reference():
         assert_close(dep.run(params, xs), ref)
 
 
-def test_backend_pallas_rejects_residual_span():
-    net, *_ = residual_case()
+def test_backend_pallas_takes_residual_spans():
+    """Forcing backend="pallas" on a residual net is no longer rejected:
+    the fused kernel adds in-span edges from its rings and the route
+    reason records which edges it absorbed."""
+    net, params, xs, ref = residual_case()
     plan = occam.plan(net, 10**9)  # one span, residual edges inside
-    with pytest.raises(occam.BackendError, match="residual"):
-        plan.place().compile(backend="pallas")
+    dep = plan.place().compile(backend="pallas", interpret=True)
+    assert all(r.route == "pallas" for r in dep.routes)
+    assert any("residual edges" in r.reason for r in dep.routes)
+    assert_close(dep.run(params, xs), ref)
+
+
+def test_backend_pallas_names_its_disqualifiers():
+    """A forced pallas rejection names the specific disqualifier — the
+    dtype or the tile shape — not a generic refusal."""
+    from repro.occam import registry
+
+    net, *_ = vgg_case()
+    with pytest.raises(occam.BackendError, match="dtype 'int8'"):
+        span_engine.plan_routes(net, [3], backend="pallas", dtype="int8")
+    ctx = registry.RouteContext(out_rows=999)
+    with pytest.raises(occam.BackendError, match="tile shape"):
+        registry.route_span(net, 0, net.n_layers, ctx, backend="pallas")
 
 
 def test_unknown_backend_fails_loudly():
@@ -278,13 +314,14 @@ def test_multichip_args_always_select_the_pipeline():
 
 
 def test_pipeline_placement_rejects_nonspmd_backends():
+    """Only the Python-loop interpreter dead-ends on a pipeline placement
+    now — the pallas kernel registers a real SPMD stage body."""
     net, *_ = vgg_case()
     plan = occam.plan(net, CAPACITY)
     placement = plan.place(pipeline=True)
     with pytest.raises(occam.BackendError, match="pipeline"):
         placement.compile(backend="interpreted")
-    with pytest.raises(occam.BackendError, match="pipeline"):
-        placement.compile(backend="pallas")
+    assert occam.get_engine("pallas").spmd_capable
 
 
 def test_registry_priority_and_registration():
@@ -295,11 +332,11 @@ def test_registry_priority_and_registration():
     def accepts(net, a, b, ctx):
         return True, "test engine"
 
-    def run(params, net, a, b, stored, spill, *, interpret):
+    def run(params, net, a, b, stored, spill, *, interpret, out_rows=1):
         calls.append((a, b))
         oracle = occam.get_engine("oracle")
         return oracle.run(params, net, a, b, stored, spill,
-                          interpret=interpret)
+                          interpret=interpret, out_rows=out_rows)
 
     occam.register_engine("test_fast", priority=1, accepts=accepts, run=run)
     try:

@@ -180,6 +180,31 @@ def test_autoplan_objectives_and_arrival_rate():
     assert rated.best().throughput >= 0.9 * bt.throughput
 
 
+def test_autoplan_scores_the_tile_height():
+    """``out_rows="auto"`` picks, per partition, the largest power-of-two
+    tile height whose grown closure still fits the capacity on every
+    fitting span — never less than 1, never more than Eqn. 6 allows."""
+    from repro.core import closure
+
+    net = _vgg()
+    fleet = occam.Fleet(chips=4, vmem_elems=VMEM)
+    fr = occam.autoplan(net, fleet, out_rows="auto")
+    assert len(fr.candidates) > 0
+    for c in fr:
+        t = c.plan.out_rows
+        assert t >= 1 and (t & (t - 1)) == 0  # power of two
+        for sp in c.plan.partition.spans:
+            if sp.fits and sp.end - sp.start >= 1:
+                assert t <= max(
+                    closure.max_tile_rows(net, sp.start, sp.end,
+                                          c.plan.capacity_elems), 1)
+    # a fixed knob ships verbatim; bad knobs fail loudly
+    fixed = occam.autoplan(net, fleet, out_rows=2)
+    assert all(c.plan.out_rows == 2 for c in fixed)
+    with pytest.raises(ValueError, match="out_rows"):
+        occam.autoplan(net, fleet, out_rows=0)
+
+
 def test_frontier_json_roundtrip(tmp_path):
     net = _resnetish()
     fleet = occam.Fleet(chips=6, vmem_elems=VMEM, hbm_elems_per_s=1e9)

@@ -400,12 +400,12 @@ def test_steady_schedule_view_matches_closed_form():
 # --------------------------------------------------------------------------
 
 def test_spmd_body_resolution():
-    """Pipeline stage bodies resolve through the registry: engines with a
-    body builder run themselves; the Pallas kernel falls back to its scan
-    twin; the interpreted loop dead-ends loudly."""
+    """Pipeline stage bodies resolve through the registry: every engine
+    with a body builder runs itself — the Pallas kernel included, with no
+    scan fallback; only the interpreted loop dead-ends loudly."""
     assert occam.resolve_spmd_engine("scan").name == "scan"
     assert occam.resolve_spmd_engine("oracle").name == "oracle"
-    assert occam.resolve_spmd_engine("pallas").name == "scan"
+    assert occam.resolve_spmd_engine("pallas").name == "pallas"
     with pytest.raises(occam.BackendError, match="SPMD"):
         occam.resolve_spmd_engine("interpreted")
 
@@ -418,9 +418,10 @@ def test_registered_spmd_body_drives_pipeline_stage():
     built, executed = [], []
     oracle = occam.get_engine("oracle")
 
-    def make_body(net, a, b, spill, src_keys):
+    def make_body(net, a, b, spill, src_keys, *, out_rows=1):
         built.append((a, b))
-        inner = oracle.make_spmd_body(net, a, b, spill, src_keys)
+        inner = oracle.make_spmd_body(net, a, b, spill, src_keys,
+                                      out_rows=out_rows)
 
         def body(span_params, x, srcs):
             executed.append((a, b))   # trace-time: body really selected
@@ -446,6 +447,22 @@ def test_registered_spmd_body_drives_pipeline_stage():
         assert_close(y, _ref(params, net, xs))
     finally:
         occam.unregister_engine("test_spmd")
+
+
+@pytest.mark.pallas_interpret
+def test_pallas_stage_bodies_drive_the_pipeline():
+    """Kernel-routed spans run the fused Pallas kernel as their pipeline
+    stage body — the report's "engines" row says pallas, with no scan
+    substitution — and multi-row tiles ride through ``out_rows``."""
+    require_devices(2)
+    net = chain("t", [(C, 3, 1, 1, 4), (C, 3, 1, 1, 4)], in_h=8,
+                in_w=8, in_ch=3)
+    params = cnn.init_params(jax.random.PRNGKey(0), net)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+    pipe = stap_pipeline.StapPipeline(net, [1], 2, 1, out_rows=2)
+    assert pipe.report()["planned_routes"] == ["pallas", "pallas"]
+    assert pipe.report()["engines"] == ["pallas", "pallas"]
+    assert_close(pipe.run(params, xs), _ref(params, net, xs))
 
 
 # --------------------------------------------------------------------------

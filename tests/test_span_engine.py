@@ -89,13 +89,44 @@ def test_kernel_scratch_is_exactly_the_closure(name, specs, hw, ch):
         closure.span_footprint_elems(net, a, b) * itemsize
 
 
-def test_kernel_rejects_residual_spans():
-    net = chain("t", [(C, 3, 1, 1, 4), (C, 3, 1, 1, 4)], in_h=8, in_w=8,
-                in_ch=3, residual_edges=((0, 2),))
+RESIDUAL_CASES = [
+    # (name, specs, hw, in_ch, residual_edges)
+    ("res-k1", [(C, 1, 1, 0, 4), (C, 1, 1, 0, 4), (C, 1, 1, 0, 4)], 8, 3,
+     ((0, 2),)),
+    ("res-k3", [(C, 3, 1, 1, 4)] * 4, 10, 3, ((0, 2), (1, 4))),
+    ("res-k3-s2", [(C, 3, 2, 1, 4), (C, 3, 1, 1, 4), (C, 3, 1, 1, 4)],
+     12, 3, ((1, 3),)),
+]
+
+
+@pytest.mark.pallas_interpret
+@pytest.mark.parametrize("name,specs,hw,ch,edges", RESIDUAL_CASES)
+def test_residual_span_kernel_matches_scan_and_oracle(name, specs, hw, ch,
+                                                      edges):
+    """Residual spans are first-class kernel bodies: pallas == scan ==
+    oracle across k in {1,3}, stride in {1,2}, batch > 1. The add comes
+    from the in-span ring (no DRAM round-trip)."""
+    net = chain("r", specs, in_h=hw, in_w=hw, in_ch=ch,
+                residual_edges=edges)
     params = cnn.init_params(jax.random.PRNGKey(0), net)
-    xs = jnp.zeros((1, 8, 8, 3))
-    with pytest.raises(ValueError, match="residual"):
-        span_forward(xs, params, net, 0, 2, interpret=True)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (2, hw, hw, ch))
+    ref = jax.vmap(lambda im: cnn.reference_forward(params, im, net))(xs)
+    got = span_forward(xs, params, net, 0, net.n_layers, interpret=True)
+    assert_close(got, ref, err_msg=name)
+    scan = jnp.stack([cnn.occam_forward(params, xs[i], net, mode="compiled")
+                      for i in range(xs.shape[0])])
+    assert_close(scan, ref, err_msg=name)
+
+
+def test_kernel_names_missing_crossing_sources():
+    """A span whose residual source lives before its input needs that map
+    as a DRAM operand — omitting it fails loudly, naming the source."""
+    net = chain("t", [(C, 3, 1, 1, 4)] * 3, in_h=8, in_w=8,
+                in_ch=3, residual_edges=((0, 3),))
+    params = cnn.init_params(jax.random.PRNGKey(0), net)
+    xs = jnp.zeros((1, 8, 8, 4))
+    with pytest.raises(ValueError, match="residual sources \\[0\\]"):
+        span_forward(xs, params[1:3], net, 1, 3, interpret=True)
 
 
 def test_dispatch_from_partition_result():
@@ -118,16 +149,18 @@ def test_dispatch_from_partition_result():
         net, res.boundaries)
 
 
-def test_dispatch_residual_spans_to_scan():
-    """Residual-crossing spans fall back to the jitted scan; traffic still
-    matches the DP model (spill accounting included)."""
+@pytest.mark.pallas_interpret
+def test_dispatch_residual_spans_to_pallas():
+    """Residual-crossing spans route to the fused kernel — no silent scan
+    substitution — and traffic still matches the DP model (spill
+    accounting included)."""
     net = chain("r", [(C, 3, 1, 1, 4)] * 4, in_h=12, in_w=12, in_ch=3,
                 residual_edges=((1, 4),))
     params = cnn.init_params(jax.random.PRNGKey(0), net)
     xs = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 12, 3))
     ref = jax.vmap(lambda im: cnn.reference_forward(params, im, net))(xs)
     routes = span_engine.plan_routes(net, [2])
-    assert all(r.route == span_engine.ROUTE_SCAN for r in routes)
+    assert all(r.route == span_engine.ROUTE_PALLAS for r in routes)
     ctr = cnn.TrafficCounter()
     got = span_engine.execute_partition(params, xs, net, [2], counter=ctr,
                                         interpret=True)
@@ -135,11 +168,13 @@ def test_dispatch_residual_spans_to_scan():
     assert ctr.total == 2 * cnn.predicted_transfers(net, [2])
 
 
-def test_straddled_span_still_takes_the_kernel():
-    """An edge merely straddling a span (source at/before its input, target
-    past its output) costs the span nothing — it must stay on the pallas
-    route. Edge (1, 4) over boundaries [2, 3]: span (2, 3) is straddled,
-    span (0, 2) spills the source, span (3, 4) adds it."""
+@pytest.mark.pallas_interpret
+def test_straddled_and_split_edge_spans_take_the_kernel():
+    """Every role a partition can hand a span — straddled by an edge,
+    spilling an interior source, adding a crossing source from DRAM —
+    stays on the pallas route. Edge (1, 4) over boundaries [2, 3]:
+    span (2, 3) is straddled, span (0, 2) spills the source as an extra
+    kernel output, span (3, 4) adds it from a DRAM operand."""
     net = chain("r", [(C, 3, 1, 1, 4)] * 4, in_h=12, in_w=12, in_ch=3,
                 residual_edges=((1, 4),))
     params = cnn.init_params(jax.random.PRNGKey(0), net)
@@ -148,13 +183,47 @@ def test_straddled_span_still_takes_the_kernel():
     routes = {(r.start, r.end): r.route
               for r in span_engine.plan_routes(net, [2, 3])}
     assert routes[(2, 3)] == span_engine.ROUTE_PALLAS
-    assert routes[(0, 2)] == span_engine.ROUTE_SCAN  # interior source spill
-    assert routes[(3, 4)] == span_engine.ROUTE_SCAN  # in-span residual add
+    assert routes[(0, 2)] == span_engine.ROUTE_PALLAS  # source spill
+    assert routes[(3, 4)] == span_engine.ROUTE_PALLAS  # DRAM-operand add
     ctr = cnn.TrafficCounter()
     got = span_engine.execute_partition(params, xs, net, [2, 3], counter=ctr,
                                         interpret=True)
     assert_close(got, ref)
     assert ctr.total == 2 * cnn.predicted_transfers(net, [2, 3])
+
+
+@pytest.mark.pallas_interpret
+@pytest.mark.parametrize("t", [1, 2, 4])
+def test_multirow_tiles_match_oracle(t):
+    """out_rows > 1 tiles: the kernel emits t output row-planes per grid
+    step and still equals the oracle (strided net + residual edge)."""
+    net = chain("r", [(C, 3, 2, 1, 4), (C, 3, 1, 1, 4), (C, 3, 1, 1, 4)],
+                in_h=12, in_w=12, in_ch=3, residual_edges=((1, 3),))
+    params = cnn.init_params(jax.random.PRNGKey(0), net)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 12, 3))
+    ref = jax.vmap(lambda im: cnn.reference_forward(params, im, net))(xs)
+    got = span_forward(xs, params, net, 0, net.n_layers, interpret=True,
+                       out_rows=t)
+    assert_close(got, ref, err_msg=f"t={t}")
+    # the dispatcher threads the same knob end to end
+    res = partition_cnn(net, 10**6)
+    via_engine = span_engine.execute_partition(params, xs, net, res,
+                                               interpret=True, out_rows=t)
+    assert_close(via_engine, ref, err_msg=f"t={t} via engine")
+
+
+@pytest.mark.parametrize("t", [2, 4])
+def test_kernel_scratch_is_the_closure_at_multirow_tiles(t):
+    """The scratch==closure identity holds at every tile height: ring
+    elems == |DC(a, b; t)| and scratch + weights == the grown footprint
+    Eqn. 6 charges for t output rows per step."""
+    net = chain("t", [(C, 3, 1, 1, 4), (C, 3, 1, 1, 8), (C, 3, 1, 1, 4)],
+                in_h=12, in_w=12, in_ch=3)
+    a, b = 0, net.n_layers
+    scratch, weights = span_kernel_vmem_elems(net, a, b, out_rows=t)
+    assert scratch == closure.span_closure_elems(net, a, b, t)
+    assert scratch + weights == closure.span_footprint_elems(
+        net, a, b, out_rows=t)
 
 
 def test_engine_accepts_single_image():
