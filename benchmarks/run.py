@@ -3,9 +3,10 @@
 Prints ``name,us_per_call,derived`` CSV (derived = the headline number the
 paper reports for that artifact). Roofline rows appear when dry-run
 artifacts exist under results/dryrun. Executable benchmarks
-(``occam_stap``, ``occam_serve``) drive the staged deployment API
-(``repro.occam``: plan -> place -> compile -> run / serve) — the batch
-pipeline and the continuous serving session respectively.
+(``occam_stap``, ``occam_serve``, ``occam_async``) drive the staged
+deployment API (``repro.occam``: plan -> place -> compile -> run /
+serve) — the batch pipeline, the continuous serving session, and the
+async continuous-batching engine respectively.
 
     PYTHONPATH=src python -m benchmarks.run
 """
@@ -59,6 +60,15 @@ def _occam_serve():
     return occam_serve()
 
 
+def _occam_async():
+    # async continuous-batching engine (occam.serve.AsyncEngine):
+    # saturated throughput vs the steady-tick prediction + Poisson p99
+    # sweep; runs in a flagged subprocess, parses results/BENCH_async.json
+    from benchmarks.occam_async import occam_async
+
+    return occam_async()
+
+
 def _occam_autoplan():
     # fleet-aware planning frontier (occam.autoplan): frontier best ==
     # exhaustive capacity x placement enumeration, memoized DP sweep vs
@@ -74,6 +84,9 @@ BENCHES.append(
 BENCHES.append(
     ("occam_serve", _occam_serve,
      "serving session throughput measured/predicted (1.0 = exact)"))
+BENCHES.append(
+    ("occam_async", _occam_async,
+     "async engine throughput measured/predicted (1.0 = exact)"))
 BENCHES.append(
     ("occam_autoplan", _occam_autoplan,
      "memoized DP-sweep speedup vs naive (frontier == exhaustive best)"))

@@ -1,7 +1,7 @@
 """Smoke pass over every executable benchmark family at its smallest
 config: one tiny net through the span engine (residual case and out_rows
-sweep included), the STAP pipeline, the serving session, and the
-autoplan frontier. A regression gate, not a measurement — each family
+sweep included), the STAP pipeline, the serving session, the async
+continuous-batching engine, and the autoplan frontier. A regression gate, not a measurement — each family
 must still build, compile and produce sane numbers, in seconds.
 
 Writes nothing under results/ (the tracked BENCH_*.json artifacts come
@@ -88,10 +88,35 @@ def smoke_autoplan() -> float:
     return float(len(fr.candidates))
 
 
+def smoke_async() -> float:
+    import asyncio
+
+    import numpy as np
+
+    from repro import occam
+
+    net, params, xs = _tiny_case()
+    dep = occam.plan(net, 2500, batch=1).place(pipeline=True,
+                                               microbatch=1).compile()
+
+    async def drive() -> int:
+        async with occam.AsyncEngine(dep, params, max_wait_ms=20.0) as eng:
+            t1 = await eng.submit(xs, tenant="a")
+            t2 = await eng.submit(xs[:1], tenant="b")   # aged partial round
+            y1, y2 = await t1, await t2
+            assert np.asarray(y1).shape[0] == xs.shape[0]
+            assert np.asarray(y2).shape[0] == 1
+            assert eng.compile_count == 1
+            return eng.metrics.snapshot()["total_completions"]
+
+    return float(asyncio.run(drive()))
+
+
 SMOKES = [
     ("span_engine", smoke_span_engine),
     ("stap_pipeline", smoke_stap),
     ("serve_session", smoke_serve),
+    ("async_engine", smoke_async),
     ("autoplan", smoke_autoplan),
 ]
 

@@ -72,6 +72,9 @@ class TrafficReport:
     measured_reads: float | None = None   # counted over ``images`` images
     measured_writes: float | None = None
     images: int | None = None
+    # queue-side serving state (a repro.occam.deploy.ServingStats), set by
+    # Session.report(); plans/batch runs leave it None
+    serving: object | None = None
 
     @property
     def offchip_elems(self) -> float:

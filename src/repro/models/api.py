@@ -22,8 +22,9 @@ Two things live here:
 
   New code should use that API directly (see ``docs/deployment_api.md``);
   the shims exist so pre-PR-3 callers keep working bit-identically. For
-  request streams, prefer ``Deployment.serve`` over looping ``run`` —
-  the deprecated ``Deployment.stream`` generator retraces per batch size.
+  request streams, use ``Deployment.serve`` (or the async
+  ``occam.serve.AsyncEngine``) instead of looping ``run`` — the old
+  batch-shaped ``Deployment.stream`` generator has been removed.
 """
 from __future__ import annotations
 

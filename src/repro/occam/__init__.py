@@ -18,6 +18,12 @@ planner derive capacity and placement instead of hand-feeding them::
     session = dep.serve(params)                 # continuous serving
     session = session.scale(arrival_rate=rate)  # frontier-driven autoscale
 
+    engine = frontier.serve(params)             # async continuous batching:
+    ticket = await engine.submit(xs, tenant="alice")   # admission control,
+    y = await ticket                            # SLO flushes, live metrics,
+                                                # damped autoscaling
+                                                # (see occam.serve)
+
 ``plan``/``place`` remain the low-level surface when you already know the
 capacity and placement you want::
 
@@ -41,11 +47,10 @@ Execution backends live in :mod:`repro.occam.registry`; new engines
 (real-TPU kernels, continuous-stream bodies) are registrations, not
 rewrites. The legacy one-call entry points
 (``repro.models.api.span_executor`` / ``stap_executor``) are deprecated
-shims over this surface, as is the batch-shaped ``Deployment.stream``.
-See ``docs/deployment_api.md``.
+shims over this surface. See ``docs/deployment_api.md``.
 """
-from . import registry
-from .deploy import Deployment, Session, Ticket
+from . import registry, serve
+from .deploy import Deployment, ServingStats, Session, Ticket
 from .fleet import Fleet, load_fleet
 from .place import PIPELINE, SINGLE, Placement
 from .plan import (PLAN_FORMAT_VERSION, Plan, ServingDefaults, load_plan,
@@ -57,15 +62,18 @@ from .registry import (AUTO, BackendError, EngineSpec, RouteContext,
 from .search import (FRONTIER_FORMAT_VERSION, OBJECTIVES, Candidate,
                      Frontier, autoplan, frontier_from_dict,
                      frontier_from_json, load_frontier)
+from .serve import AdmissionError, AsyncEngine, AsyncTicket, Router
 
 __all__ = [
     "AUTO", "FRONTIER_FORMAT_VERSION", "OBJECTIVES", "PIPELINE",
     "PLAN_FORMAT_VERSION", "SINGLE",
+    "AdmissionError", "AsyncEngine", "AsyncTicket",
     "BackendError", "Candidate", "Deployment", "EngineSpec", "Fleet",
-    "Frontier", "Placement", "Plan", "RouteContext", "ServingDefaults",
-    "Session", "Ticket", "autoplan", "backend_names", "frontier_from_dict",
-    "frontier_from_json", "get_engine", "load_fleet", "load_frontier",
-    "load_plan", "plan", "plan_from_dict", "plan_from_json",
-    "register_engine", "registered_engines", "registry",
-    "resolve_spmd_engine", "unregister_engine",
+    "Frontier", "Placement", "Plan", "RouteContext", "Router",
+    "ServingDefaults", "ServingStats", "Session", "Ticket", "autoplan",
+    "backend_names", "frontier_from_dict", "frontier_from_json",
+    "get_engine", "load_fleet", "load_frontier", "load_plan", "plan",
+    "plan_from_dict", "plan_from_json", "register_engine",
+    "registered_engines", "registry", "resolve_spmd_engine", "serve",
+    "unregister_engine",
 ]

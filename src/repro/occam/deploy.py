@@ -26,8 +26,11 @@ covers the final partial round: masked lanes skip compute in the
 pipeline, are dropped from outputs, and are excluded from measured
 traffic), so mixed submit sizes never retrace. Pipeline sessions iterate
 a single-tick :class:`~repro.runtime.stap_pipeline.StapRing` whose
-per-chip buffers are O(round_batch) regardless of stream length; the
-batch-shaped ``stream`` generator is deprecated in its favor.
+per-chip buffers are O(round_batch) regardless of stream length.
+``Session.pump`` exposes single-tick advancement to external drivers:
+``occam.serve.AsyncEngine`` layers async continuous batching —
+admission control, wall-clock SLOs, damped autoscaling — on that hook
+without adding a single lowering.
 
 Every ``run`` accumulates off-chip transfers into one
 :class:`~repro.core.traffic.TrafficCounter`; ``report()`` returns the
@@ -39,8 +42,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import warnings
-from typing import TYPE_CHECKING, Iterable, Iterator, Sequence
+from typing import TYPE_CHECKING, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -264,22 +266,6 @@ class Deployment:
             counter.writes += self.counter.writes - w0
         return y
 
-    def stream(self, params: Sequence[dict],
-               batches: Iterable[jax.Array]) -> Iterator[jax.Array]:
-        """Deprecated: serve a stream of batches (generator over ``run``).
-
-        A stream of equal-sized batches retraces per batch size and banks
-        whole-stream buffers; :meth:`serve` packs ragged traffic into one
-        compiled round shape instead. This shim survives for pre-serving
-        callers and will be removed.
-        """
-        warnings.warn(
-            "Deployment.stream is deprecated; open a serving session: "
-            "session = deployment.serve(params); session.submit(xs); "
-            "session.results()", DeprecationWarning, stacklevel=2)
-        for xs in batches:
-            yield self.run(params, xs)
-
     # -- reporting ----------------------------------------------------------
 
     def report(self) -> TrafficReport:
@@ -317,6 +303,19 @@ class Deployment:
 # --------------------------------------------------------------------------
 # Continuous serving sessions
 # --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServingStats:
+    """Queue-side serving state of one :class:`Session` — the fields the
+    async engine's metrics sample. Attached to ``Session.report()`` as
+    ``report.serving`` and inlined into ``Session.describe()``."""
+
+    pending_lanes: int       # images queued, not yet packed into a round
+    in_flight_rounds: int    # rounds resident in the ring right now
+    rounds_served: int       # ticks that carried >= 1 valid lane
+    flush_count: int         # explicit / SLO-triggered drains
+    waited_ticks: int        # total ticks queued partials spent aging
+
 
 @dataclasses.dataclass(frozen=True)
 class Ticket:
@@ -409,6 +408,10 @@ class Session:
             [None] * (self.ring_depth - 1))
         self._banked_rounds = 0     # completed, not yet results()-collected
         self._closed = False
+        # queue-side counters (surfaced via describe()/report().serving)
+        self._flushes = 0           # explicit / SLO-triggered drains
+        self._rounds_served = 0     # ticks that carried >= 1 valid lane
+        self._waited_total = 0      # total ticks partials spent aging
 
     # -- the serving surface ------------------------------------------------
 
@@ -491,11 +494,43 @@ class Session:
         and run drain ticks until the ring holds no live rounds. The
         session stays open — steady-state serving resumes on the next
         ``submit``."""
+        self._flushes += 1
         while self._queued:     # full rounds a refused submit left behind,
             self._tick(*self._take_round())   # then the masked partial one
         while any(m is not None for m in self._in_flight):
             self._tick(None, 0)
         self._waited = 0
+
+    def pump(self, *, allow_partial: bool = False) -> bool:
+        """Advance the session by exactly ONE tick — the external-pumping
+        hook async drivers build on (``occam.serve.AsyncEngine``).
+
+        A queued full round ticks first. Otherwise, with
+        ``allow_partial=True``, a queued remainder ticks through as one
+        masked partial round — unlike :meth:`flush`, the ring is NOT
+        drained, so steady-state serving continues around the aged
+        request. Otherwise a round resident in the ring advances one
+        empty tick toward delivery. Returns whether a tick ran (False =
+        nothing to do: idle queue, empty ring).
+        """
+        if self._closed:
+            raise RuntimeError("session is closed")
+        if self._queued >= self.round_batch:
+            if self._banked_rounds >= self.max_pending:
+                raise RuntimeError(
+                    f"session holds {self._banked_rounds} completed "
+                    f"rounds (max_pending={self.max_pending}); drain "
+                    f"with results()")
+            self._tick(*self._take_round())
+            return True
+        if allow_partial and self._queued:
+            self._tick(*self._take_round())
+            self._waited = 0
+            return True
+        if self.in_flight_rounds:
+            self._tick(None, 0)
+            return True
+        return False
 
     def sync(self) -> "Session":
         """Block until every dispatched tick has finished (ticks dispatch
@@ -561,13 +596,29 @@ class Session:
             return self._ring.trace_count
         return self.deployment._serve_step(self.round_batch)[1]["lowerings"]
 
+    @property
+    def in_flight_rounds(self) -> int:
+        """Rounds resident in the ring (dispatched, not yet delivered)."""
+        return sum(1 for m in self._in_flight if m is not None)
+
+    def serving_stats(self) -> ServingStats:
+        """The queue-side state the async engine's metrics sample."""
+        return ServingStats(
+            pending_lanes=self._queued,
+            in_flight_rounds=self.in_flight_rounds,
+            rounds_served=self._rounds_served,
+            flush_count=self._flushes,
+            waited_ticks=self._waited_total)
+
     def report(self) -> TrafficReport:
         """The plan's per-image prediction with this session's measured
-        transfers attached. Masked (padding) lanes are excluded from both
+        transfers attached (masked padding lanes excluded from both
         ``measured_*`` and ``images``, so ``matches_prediction`` holds
-        under any mix of submit sizes."""
-        return self.deployment.plan.predicted.with_measured(
+        under any mix of submit sizes) and the queue-side serving state
+        as ``report.serving``."""
+        rep = self.deployment.plan.predicted.with_measured(
             self.counter, self._images)
+        return dataclasses.replace(rep, serving=self.serving_stats())
 
     def describe(self) -> dict:
         """Machine-readable session state (benchmarks, logs)."""
@@ -582,6 +633,11 @@ class Session:
             "images_entered": self._images,
             "tickets_open": len(self._tickets),
             "queued_images": self._queued,
+            "pending_lanes": self._queued,
+            "in_flight_rounds": self.in_flight_rounds,
+            "rounds_served": self._rounds_served,
+            "flush_count": self._flushes,
+            "waited_ticks": self._waited_total,
         }
         if self._ring is not None:
             d["ring"] = self._ring.report()
@@ -600,6 +656,7 @@ class Session:
         if self.max_wait_ticks is None:
             return
         self._waited += 1
+        self._waited_total += 1
         if self._waited >= self.max_wait_ticks:
             self.flush()
 
@@ -628,6 +685,7 @@ class Session:
         if n_valid:
             self.counter.add_scaled(self._per_image, n_valid)
             self._images += n_valid
+            self._rounds_served += 1
         if self._ring is None:
             self._deliver(segs, self._run_single(xs))
             return

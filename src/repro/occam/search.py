@@ -229,6 +229,29 @@ class Frontier:
         """``best(objective).deploy(...)`` in one call."""
         return self.best(objective).deploy(backend, **kw)
 
+    def serve(self, params, *, objective: str | None = None,
+              backend: str = "auto", mesh=None, devices=None,
+              interpret: bool | None = None, autoscale: bool = True,
+              **engine_kw):
+        """Frontier -> async serving in one call: deploy the best
+        candidate and wrap it in an ``occam.serve.AsyncEngine``.
+
+        ``autoscale=True`` (default) arms the engine's damped
+        autoscaler against THIS frontier, so observed arrival rate
+        drives ``Deployment.reconcile`` re-picks at serve time.
+        ``engine_kw`` passes through to the engine (``max_pending``,
+        ``max_wait_ms``, ``round_batch``, metrics windows, ...); await
+        ``engine.submit(images, tenant=...)`` tickets from there.
+        """
+        from .serve import AsyncEngine
+
+        dep = self.deploy(objective, backend, mesh=mesh, devices=devices,
+                          interpret=interpret)
+        engine = AsyncEngine(dep, params, **engine_kw)
+        if autoscale:
+            engine.autoscale(self)
+        return engine
+
     # -- serialization ------------------------------------------------------
 
     def to_dict(self) -> dict:

@@ -55,8 +55,8 @@ the engine registry — ``EngineSpec.make_spmd_body``):
 
 Runs on CPU CI via ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
 (see ``tests/conftest.py``). Deployment entry: the staged API
-(``repro.occam``: plan -> place -> compile -> run / serve); streaming
-demo: ``examples/stap_serve.py``.
+(``repro.occam``: plan -> place -> compile -> run / serve); async
+serving demo: ``examples/async_serve.py``.
 """
 from __future__ import annotations
 

@@ -373,21 +373,30 @@ def test_report_unifies_measured_and_predicted():
         net, occam.plan(net, CAPACITY).boundaries)
 
 
-def test_pipeline_report_and_stream():
+def test_pipeline_report_and_serving_surface():
     require_devices(3)
     net, params, xs, ref = vgg_case()
     dep = occam.plan(net, CAPACITY, batch=2) \
         .place(pipeline=True, microbatch=2).compile()
-    with pytest.warns(DeprecationWarning, match="serve"):
-        outs = list(dep.stream(params, [xs, xs]))
-    assert_close(outs[0], ref)
-    assert_close(outs[1], ref)
+    # the batch-shaped stream() shim is gone: serve()/run are the surface
+    assert not hasattr(dep, "stream")
+    assert_close(dep.run(params, xs), ref)
+    assert_close(dep.run(params, xs), ref)
     rep = dep.report()
     assert rep.images == 2 * xs.shape[0]
     assert rep.matches_prediction
     desc = dep.describe()
     assert desc["kind"] == "pipeline"
     assert desc["replicas"] == [1] * occam.plan(net, CAPACITY).n_spans
+    # the same stream of batches through the serving session: one
+    # compiled round shape, same results, same exact accounting
+    sess = dep.serve(params)
+    t1, t2 = sess.submit(xs), sess.submit(xs)
+    res = dict((t.uid, y) for t, y in sess.results())
+    assert_close(res[t1.uid], ref)
+    assert_close(res[t2.uid], ref)
+    assert sess.compile_count == 1
+    assert sess.report().matches_prediction
 
 
 # --------------------------------------------------------------------------
