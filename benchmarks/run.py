@@ -87,9 +87,23 @@ BENCHES.append(
 BENCHES.append(
     ("occam_async", _occam_async,
      "async engine throughput measured/predicted (1.0 = exact)"))
+def _occam_calibrate():
+    # measured-cost planning (occam.calibrate + Frontier.rescore): fit a
+    # CostModel from isolated stage/hop timings, re-score the frontier,
+    # compare analytic vs calibrated prediction error against measured
+    # steady serving; runs in a flagged subprocess, writes
+    # results/BENCH_calibrate.json
+    from benchmarks.occam_calibrate import occam_calibrate
+
+    return occam_calibrate()
+
+
 BENCHES.append(
     ("occam_autoplan", _occam_autoplan,
      "memoized DP-sweep speedup vs naive (frontier == exhaustive best)"))
+BENCHES.append(
+    ("occam_calibrate", _occam_calibrate,
+     "calibrated-over-analytic prediction-error improvement (>1 = helped)"))
 
 
 def main() -> None:

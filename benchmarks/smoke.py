@@ -1,7 +1,8 @@
 """Smoke pass over every executable benchmark family at its smallest
 config: one tiny net through the span engine (residual case and out_rows
 sweep included), the STAP pipeline, the serving session, the async
-continuous-batching engine, and the autoplan frontier. A regression gate, not a measurement — each family
+continuous-batching engine, the autoplan frontier, and the calibrated
+re-scoring pass. A regression gate, not a measurement — each family
 must still build, compile and produce sane numbers, in seconds.
 
 Writes nothing under results/ (the tracked BENCH_*.json artifacts come
@@ -112,12 +113,27 @@ def smoke_async() -> float:
     return float(asyncio.run(drive()))
 
 
+def smoke_calibrate() -> float:
+    from repro import occam
+
+    net, params, xs = _tiny_case()
+    fr = occam.autoplan(net, occam.Fleet(chips=4, vmem_elems=2500))
+    dep = fr.best().deploy()
+    cm = occam.calibrate(dep, params, rounds=1)
+    assert cm.macs_per_s > 0 and cm.samples >= 1
+    rescored = fr.rescore(cm)
+    assert len(rescored) >= 1
+    assert rescored.best().plan.calibration is cm
+    return float(cm.compute_overhead_factor)
+
+
 SMOKES = [
     ("span_engine", smoke_span_engine),
     ("stap_pipeline", smoke_stap),
     ("serve_session", smoke_serve),
     ("async_engine", smoke_async),
     ("autoplan", smoke_autoplan),
+    ("calibrate", smoke_calibrate),
 ]
 
 

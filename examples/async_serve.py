@@ -48,8 +48,13 @@ async def main() -> None:
     #    compile it (cached), start the engine, arm damped autoscaling.
     #    max_wait_ms is the packing SLO: a partial round older than this
     #    flushes masked instead of waiting for more traffic.
+    # admission budget scales with the planned round: the winning
+    # candidate's round width x its microbatch is one compiled round
+    best = frontier.best("throughput")
+    round_batch = best.round_width * best.plan.batch
+    max_pending = 2 * round_batch + 4
     eng = frontier.serve(params, objective="throughput",
-                         max_wait_ms=25.0, max_pending=16)
+                         max_wait_ms=25.0, max_pending=max_pending)
     async with eng:
         cand = eng.deployment.candidate
         print(f"engine: round_batch={eng.round_batch} on {cand.chips} "
@@ -77,8 +82,8 @@ async def main() -> None:
         # 4. admission control: a tenant holding max_pending images gets
         #    backpressured instead of growing the queue without bound
         try:
-            await eng.submit(jax.random.normal(key, (17,) + net.map_shape(0)),
-                             tenant="dave")
+            await eng.submit(jax.random.normal(
+                key, (max_pending + 1,) + net.map_shape(0)), tenant="dave")
         except occam.AdmissionError as e:
             print(f"admission: rejected oversubmit ({e})")
 

@@ -48,7 +48,8 @@ print(f"modeled speedup {r['speedup_occam']:.2f}x, energy saving "
 # chips appear (planning only; validate each with the event simulator)
 m = MachineModel()
 print("\nfleet sweep (best-throughput candidate per fleet; a pipeline "
-      "with S stages and r replicas occupies an S x max(r) mesh):")
+      "occupies sum(replicas) chips — paper §III-E sum-of-replicas "
+      "accounting):")
 for chips in (plan.n_spans, 2 * plan.n_spans, 4 * plan.n_spans):
     fr = occam.autoplan(net, occam.Fleet(chips=chips, vmem_elems=CAP,
                                          macs_per_s=m.macs_per_sec))

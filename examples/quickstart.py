@@ -81,6 +81,25 @@ plan2 = occam.plan_from_json(plan.to_json())
 assert plan2.boundaries == plan.boundaries
 assert occam.plan_from_json(plan_t2.to_json()).out_rows == 2
 
+# --- measured-cost planning: calibrate -> rescore -> redeploy ---------------
+# analytic rates miss dispatch/padding constants; measure the live
+# deployment, fit a CostModel, re-rank the frontier under it — the DP
+# never re-runs, and cached deployments carry over (no recompile)
+cm = occam.calibrate(dep, params, rounds=2)
+print(f"calibrated: {cm.macs_per_s:.3g} MAC/s fitted "
+      f"(x{cm.compute_overhead_factor:.0f} off the analytic roofline), "
+      f"per-stage overhead {cm.stage_overhead_s * 1e6:.0f}us")
+recal = frontier.rescore(cm)
+dep2 = recal.best("traffic").deploy()
+assert dep2 is dep                                    # cache survived
+assert recal.best("traffic").plan.calibration is cm   # ships in plan v4
+# sum-of-replicas placement (paper §III-E): STAP stages are
+# asynchronous, so a 4-3-2 pipeline occupies 9 chips — not the 12-chip
+# (stage x max_replicas) rectangle (plan.place(..., packing="sum"))
+asg = occam.pack_replicas((4, 3, 2))
+print(f"4-3-2 packed placement: {asg.n_chips} chips "
+      f"(rect mesh {asg.rect_chips}; saves {asg.chips_saved})")
+
 # --- C4: STAP ----------------------------------------------------------------
 from repro.core.stap import plan_replication
 splan = plan_replication([15, 35, 40, 10], target_period=20)

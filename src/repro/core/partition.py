@@ -9,8 +9,23 @@ optimal machinery drives (a) the paper's CNNs (closure footprints) and
 (b) transformer pipeline-stage assignment (HBM footprints) — see
 ``partition_transformer`` at the bottom.
 
-Complexity: O(n^3) spans x split points, O(n^2) table (paper §III-D
-"Complexity"). Runs in milliseconds for ResNet-152.
+Cost models (``cost=``):
+
+* ``"dram"`` (default) — off-chip DRAM elements moved. Span-local: every
+  span pays its boundary io, one *read* per residual edge entering it
+  from an earlier span, and one *write* per distinct interior source
+  whose edge escapes the span. A source that is already DRAM-resident
+  (the network input, or a map that IS a span boundary) pays only the
+  re-read, never a second write — this mirrors the machine counters
+  (``models.cnn.count_span_reads`` / ``count_span_writes``) exactly.
+* ``"hops"`` — inter-stage link elements for pipeline placements: one
+  hop per crossed boundary, each carrying the boundary map plus every
+  distinct residual source live across that cut (=
+  ``runtime.stap_pipeline.payload_spec(net, cut).elems``).
+
+Both costs are additive over spans, so the optimum is a prefix DP:
+``OPT(j) = min_a OPT(a) + C(a, j)`` over allowed spans — O(n^2) states,
+milliseconds for ResNet-152.
 """
 from __future__ import annotations
 
@@ -58,78 +73,124 @@ class Span:
 class PartitionResult:
     boundaries: list[int]  # interior partition points p_1 < ... < p_{k-1}
     spans: list[Span]
-    transfers: float  # OP[0, n].X — optimal off-chip elements moved
-    table_X: dict[tuple[int, int], float]
-    table_p: dict[tuple[int, int], int | None]
+    transfers: float  # OPT(n) — optimal cost (dram elements, or hop elems)
+    table_X: dict[tuple[int, int], float]   # prefix optima {(0, j): OPT(j)}
+    table_p: dict[tuple[int, int], int | None]  # parent cuts {(0, j): a}
 
     @property
     def n_spans(self) -> int:
         return len(self.spans)
 
 
-def optimal_partition(problem: PartitionProblem) -> PartitionResult:
-    """Bottom-up DP over span lengths (paper Fig. 4 walkthrough).
+COST_MODES = ("dram", "hops")
 
-    Base case   : SPAN(i, j) fits  -> X = |L_i| + |L_j|, p = null.
-    Recurrence  : X = min_p X(i,p) + X(p,j) [+ 2|L_s| per residual edge
-                  (s, t) with i <= s < p < t <= j].
 
-    Residual accounting: an edge is charged at the *outermost* split that
-    separates source from sink and never again (sub-spans can no longer see
-    both endpoints), i.e. a spilled residual is written once and read once
-    ("the values must be written out to and read back from memory") no
-    matter how many boundaries it crosses. This keeps the objective a
-    well-defined function of the final PBS, preserving optimal substructure.
-    Oversized single layers (span of length 1 that does not fit) get the
-    base-case lower bound, as the paper does for VGG's biggest layers.
+def hop_payload(problem: PartitionProblem, p: int) -> float:
+    """Elements carried by the pipeline hop at cut ``p``: the boundary
+    map plus every *distinct* residual source live across the cut (each
+    forwarded once per hop, however many sinks consume it) — the model
+    twin of ``runtime.stap_pipeline.payload_spec(net, p).elems``."""
+    srcs = {s for (s, t) in problem.residual_edges() if s < p < t}
+    return problem.boundary_cost(p) + sum(problem.residual_cost(s)
+                                          for s in srcs)
+
+
+def span_local_cost(problem: PartitionProblem, a: int, b: int,
+                    cost: str = "dram") -> float:
+    """The cost a single span (a, b) contributes under ``cost`` —
+    depends only on (a, b) and the global edge set, never on the other
+    cuts, which is what makes the prefix DP exact.
+
+    ``"dram"``: io at both ends, one *read* per edge entering from an
+    earlier span (``s < a < t <= b`` — the machine re-reads per
+    consuming edge), one *write* per distinct interior source whose
+    edge escapes past ``b``. Sources at ``a``/``0``/any cut are already
+    DRAM-resident (written as boundary io), so they pay no spill write.
+
+    ``"hops"``: the payload of the hop at ``b`` (no hop after the last
+    stage) — summing over spans gives one hop per crossed boundary.
+    """
+    n = problem.n_layers
+    edges = problem.residual_edges()
+    if cost == "hops":
+        return hop_payload(problem, b) if b < n else 0.0
+    if cost != "dram":
+        raise ValueError(f"cost must be one of {COST_MODES}, got {cost!r}")
+    total = problem.boundary_cost(a) + problem.boundary_cost(b)
+    for (s, t) in edges:
+        if s < a < t <= b:  # per-edge re-read of a spilled source
+            total += problem.residual_cost(s)
+    escaping = {s for (s, t) in edges if a < s < b and t > b}
+    return total + sum(problem.residual_cost(s) for s in escaping)
+
+
+def partition_cost(problem: PartitionProblem, cuts: Sequence[int],
+                   cost: str = "dram") -> float:
+    """Total cost of an explicit cut set (INF when a multi-layer span
+    exceeds capacity). The model-side twin of the runtime counters; the
+    DP minimizes exactly this."""
+    pts = [0] + sorted(cuts) + [problem.n_layers]
+    total = 0.0
+    for a, b in zip(pts, pts[1:]):
+        if not problem.span_fits(a, b) and b - a > 1:
+            return INF
+        total += span_local_cost(problem, a, b, cost)
+    return total
+
+
+def optimal_partition(problem: PartitionProblem,
+                      cost: str = "dram") -> PartitionResult:
+    """Prefix DP over span end points (paper Fig. 4, reformulated).
+
+    Allowed spans: SPAN(a, j) fits, or has length 1 (the paper's
+    lower-bound mode for single layers that exceed capacity — VGG's
+    biggest layers). Recurrence::
+
+        OPT(0) = 0
+        OPT(j) = min over allowed (a, j) of OPT(a) + C(a, j)
+
+    with ``C = span_local_cost`` (see there for the dram/hops cost
+    semantics). Residual accounting is span-local — a spilled source is
+    written once where it is produced and re-read once per consuming
+    edge, and a source that is already DRAM-resident (the input, or a
+    map sitting ON a partition boundary) pays only the read — so the
+    objective is a well-defined function of the final PBS and the
+    prefix decomposition is exact.
     """
     n = problem.n_layers
     if n == 0:
         raise ValueError("empty network")
-    edges = list(problem.residual_edges())
-    X: dict[tuple[int, int], float] = {}
-    P: dict[tuple[int, int], int | None] = {}
+    if cost not in COST_MODES:
+        raise ValueError(f"cost must be one of {COST_MODES}, got {cost!r}")
     fits: dict[tuple[int, int], bool] = {}
-
-    for length in range(1, n + 1):
-        for i in range(0, n - length + 1):
-            j = i + length
-            f = problem.span_fits(i, j)
-            fits[(i, j)] = f
-            if f or length == 1:
-                # length==1 & !fits: paper's lower-bound estimate for
-                # single layers that exceed capacity.
-                X[(i, j)] = problem.boundary_cost(i) + problem.boundary_cost(j)
-                P[(i, j)] = None
+    best: list[float] = [INF] * (n + 1)
+    parent: list[int | None] = [None] * (n + 1)
+    best[0] = 0.0
+    for j in range(1, n + 1):
+        for a in range(0, j):
+            f = problem.span_fits(a, j)
+            fits[(a, j)] = f
+            if not (f or j - a == 1):
                 continue
-            best_x, best_p = INF, None
-            for p in range(i + 1, j):
-                penalty = 0.0
-                for (s, t) in edges:
-                    if i <= s < p < t <= j:
-                        penalty += 2.0 * problem.residual_cost(s)
-                cand = X[(i, p)] + X[(p, j)] + penalty
-                if cand < best_x:
-                    best_x, best_p = cand, p
-            X[(i, j)] = best_x
-            P[(i, j)] = best_p
+            cand = best[a] + span_local_cost(problem, a, j, cost)
+            if cand < best[j]:
+                best[j], parent[j] = cand, a
 
-    # Reconstruct the partition boundary set from the memoized split points.
     boundaries: list[int] = []
-
-    def rec(i: int, j: int) -> None:
-        p = P[(i, j)]
-        if p is None:
-            return
-        rec(i, p)
-        boundaries.append(p)
-        rec(p, j)
-
-    rec(0, n)
+    j = n
+    while True:
+        a = parent[j]
+        if a is None or a == 0:
+            break
+        boundaries.append(a)
+        j = a
+    boundaries.reverse()
     cuts = [0] + boundaries + [n]
     spans = [Span(cuts[k], cuts[k + 1], fits[(cuts[k], cuts[k + 1])])
              for k in range(len(cuts) - 1)]
-    return PartitionResult(boundaries, spans, X[(0, n)], X, P)
+    table_x = {(0, j): best[j] for j in range(1, n + 1)}
+    table_p = {(0, j): parent[j] for j in range(1, n + 1)}
+    return PartitionResult(boundaries, spans, best[n], table_x, table_p)
 
 
 # --------------------------------------------------------------------------
@@ -171,8 +232,23 @@ class CNNPartitionProblem:
         return float(self.batch * self.net.map_elems(s))
 
 
-def partition_cnn(net: NetSpec, capacity_elems: int, batch: int = 1) -> PartitionResult:
-    return optimal_partition(CNNPartitionProblem(net, capacity_elems, batch))
+def partition_cnn(net: NetSpec, capacity_elems: int, batch: int = 1,
+                  cost: str = "dram") -> PartitionResult:
+    return optimal_partition(CNNPartitionProblem(net, capacity_elems, batch),
+                             cost)
+
+
+def partition_transfers(net: NetSpec, boundaries: Sequence[int],
+                        batch: int = 1, cost: str = "dram") -> float:
+    """Canonical cost of an explicit CNN boundary set (capacity-free:
+    feasibility is the caller's concern). This is THE model-side
+    transfer formula — ``models.cnn.predicted_transfers`` and
+    ``core.traffic.occam_traffic`` delegate here, so planning, serving
+    accounting and serialized plans can never drift apart."""
+    problem = CNNPartitionProblem(net, 0, batch)
+    pts = [0] + sorted(boundaries) + [net.n_layers]
+    return sum(span_local_cost(problem, a, b, cost)
+               for a, b in zip(pts, pts[1:]))
 
 
 def partition_report(net: NetSpec, capacity_elems: int, batch: int = 1) -> list[dict]:
@@ -304,9 +380,10 @@ class PartitionSweep:
         self.batch = batch
         self._problem = CNNPartitionProblem(net, 0, batch)  # formula owner
         self._fp: dict[tuple[int, int], float] = {}
-        self._results: dict[int, PartitionResult] = {}
-        self._by_fits: dict[frozenset, PartitionResult] = {}
+        self._results: dict[tuple[int, str], PartitionResult] = {}
+        self._by_fits: dict[tuple[frozenset, str], PartitionResult] = {}
         self.dp_runs = 0           # DPs actually executed (memo diagnostics)
+        self.dp_runs_by_cost: dict[str, int] = {}
 
     def footprint(self, i: int, j: int) -> float:
         """``CNNPartitionProblem.footprint`` (the one definition of the
@@ -330,24 +407,27 @@ class PartitionSweep:
                        if self.footprint(i, j) <= vmem_elems})
         return caps or [int(vmem_elems)]
 
-    def partition_at(self, capacity_elems: int) -> PartitionResult:
+    def partition_at(self, capacity_elems: int,
+                     cost: str = "dram") -> PartitionResult:
         """The optimal partition at one capacity (memoized twice: by
-        capacity and by fits-set signature, so capacities between the
-        same thresholds never re-run the DP)."""
-        res = self._results.get(capacity_elems)
+        (capacity, cost) and by fits-set signature, so capacities
+        between the same thresholds never re-run the DP)."""
+        res = self._results.get((capacity_elems, cost))
         if res is not None:
             return res
         n = self.net.n_layers
         fits = frozenset((i, j) for i in range(n)
                          for j in range(i + 1, n + 1)
                          if self.footprint(i, j) <= capacity_elems)
-        res = self._by_fits.get(fits)
+        res = self._by_fits.get((fits, cost))
         if res is None:
             res = optimal_partition(_TabulatedCNNProblem(self,
-                                                         capacity_elems))
+                                                         capacity_elems),
+                                    cost)
             self.dp_runs += 1
-            self._by_fits[fits] = res
-        self._results[capacity_elems] = res
+            self.dp_runs_by_cost[cost] = self.dp_runs_by_cost.get(cost, 0) + 1
+            self._by_fits[(fits, cost)] = res
+        self._results[(capacity_elems, cost)] = res
         return res
 
     def _refit(self, res: PartitionResult,
@@ -365,12 +445,13 @@ class PartitionSweep:
         return PartitionResult(list(res.boundaries), spans, res.transfers,
                                res.table_X, res.table_p)
 
-    def sweep(self, vmem_elems: int) -> list[SweptPartition]:
+    def sweep(self, vmem_elems: int,
+              cost: str = "dram") -> list[SweptPartition]:
         """Optimal partitions at every candidate capacity <= vmem."""
         caps = self.candidate_capacities(vmem_elems)
         out: list[PartitionResult | None] = [None] * len(caps)
-        out[0] = self.partition_at(caps[0])
-        out[-1] = self.partition_at(caps[-1])
+        out[0] = self.partition_at(caps[0], cost)
+        out[-1] = self.partition_at(caps[-1], cost)
 
         def refine(lo: int, hi: int) -> None:
             if hi - lo < 2:
@@ -382,10 +463,10 @@ class PartitionSweep:
                 # optimal on the whole interval. Fill without the DP.
                 for k in range(lo + 1, hi):
                     out[k] = self._refit(a, caps[k])
-                    self._results.setdefault(caps[k], out[k])
+                    self._results.setdefault((caps[k], cost), out[k])
                 return
             mid = (lo + hi) // 2
-            out[mid] = self.partition_at(caps[mid])
+            out[mid] = self.partition_at(caps[mid], cost)
             refine(lo, mid)
             refine(mid, hi)
 
@@ -397,28 +478,16 @@ class PartitionSweep:
 # Reference implementations for testing optimality
 # --------------------------------------------------------------------------
 
-def brute_force_partition(problem: PartitionProblem) -> tuple[float, list[int]]:
+def brute_force_partition(problem: PartitionProblem,
+                          cost: str = "dram") -> tuple[float, list[int]]:
     """Exponential enumeration of all PBSs (Layer Fusion's search) — used in
-    tests to prove the DP optimal on small nets. O(2^(n-1))."""
+    tests to prove the DP optimal on small nets. O(2^(n-1)). Scores each
+    cut set with the same :func:`partition_cost` the DP minimizes."""
     n = problem.n_layers
-    edges = list(problem.residual_edges())
     best = (INF, [])
-
-    def cost_of(cuts: list[int]) -> float:
-        pts = [0] + cuts + [n]
-        total = 0.0
-        for a, b in zip(pts, pts[1:]):
-            if not problem.span_fits(a, b) and b - a > 1:
-                return INF
-            total += problem.boundary_cost(a) + problem.boundary_cost(b)
-        for (s, t) in edges:
-            if any(s < p < t for p in cuts):  # charged once per cut edge
-                total += 2.0 * problem.residual_cost(s)
-        return total
-
     for mask in range(1 << (n - 1)):
         cuts = [p for p in range(1, n) if mask >> (p - 1) & 1]
-        c = cost_of(cuts)
+        c = partition_cost(problem, cuts, cost)
         if c < best[0]:
             best = (c, cuts)
     return best

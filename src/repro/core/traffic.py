@@ -26,7 +26,7 @@ from typing import Sequence
 
 from .closure import max_square_tile, max_tile_rows, recompute_factor_square
 from .graph import NetSpec
-from .partition import PartitionResult, partition_cnn
+from .partition import PartitionResult, partition_cnn, partition_transfers
 
 
 @dataclasses.dataclass
@@ -75,6 +75,10 @@ class TrafficReport:
     # queue-side serving state (a repro.occam.deploy.ServingStats), set by
     # Session.report(); plans/batch runs leave it None
     serving: object | None = None
+    # wall-clock tick window (a dict: tick_mean_s / tick_count /
+    # tick_busy_fraction), set by Deployment.report() / Session.report()
+    # when the serving runtime has timed ticks; None otherwise
+    timing: object | None = None
 
     @property
     def offchip_elems(self) -> float:
@@ -130,9 +134,13 @@ def occam_traffic(net: NetSpec, capacity_elems: int, batch: int = 1,
     """DP-optimal spans; off-chip only at span boundaries; filters amortized
     to ~0 (asymptotic chip residence). Boundary maps also cross chips."""
     part = partition or partition_cnn(net, capacity_elems, batch)
-    feat = part.transfers / batch  # DP cost already scales with batch
+    # Score the boundary set with the canonical per-image formula rather
+    # than trusting ``part.transfers`` — a partition may have been chosen
+    # under another cost mode (e.g. "hops" for pipeline link traffic),
+    # but its DRAM prediction is a function of the boundaries alone.
     # Oversized single layers (lower-bound mode) spill their own io anyway —
     # already counted by the DP base case.
+    feat = partition_transfers(net, part.boundaries, batch=1)
     return TrafficReport("occam", feat, 0.0, float(net.total_macs()), feat / 2)
 
 
@@ -143,7 +151,7 @@ def layer_fusion_traffic(net: NetSpec, capacity_elems: int, batch: int = 1,
     Misses ~= Occam's (recompute instead of refetch, §V-B1); compute is
     bloated by the per-span halo recompute factor."""
     part = partition or partition_cnn(net, capacity_elems, batch)
-    feat = part.transfers / batch
+    feat = partition_transfers(net, part.boundaries, batch=1)
     macs = 0.0
     for sp in part.spans:
         t = max_square_tile(net, sp.start, sp.end, capacity_elems, batch)

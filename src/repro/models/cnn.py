@@ -466,12 +466,11 @@ def _stream_span(params: list[dict], net: NetSpec, a: int, b: int,
 
 def predicted_transfers(net: NetSpec, boundaries: list[int]) -> int:
     """The DP cost model's transfer count for a given PBS (for machine-vs-
-    model equality tests)."""
-    cuts = [0] + list(boundaries) + [net.n_layers]
-    total = net.map_elems(0) + net.map_elems(net.n_layers)
-    for p in cuts[1:-1]:
-        total += 2 * net.map_elems(p)
-    for (s, t) in net.residual_edges:
-        if any(s < p < t for p in cuts[1:-1]):
-            total += 2 * net.map_elems(s)
-    return total
+    model equality tests). Delegates to the canonical span-local formula
+    so it can never drift from what ``optimal_partition`` minimizes —
+    including the DRAM-residency rule: a residual source that is already
+    off-chip (the input, or a map on a partition boundary) is re-read
+    per consuming edge but never written twice."""
+    from repro.core.partition import partition_transfers
+
+    return int(partition_transfers(net, list(boundaries), batch=1))

@@ -63,17 +63,26 @@ from .search import (FRONTIER_FORMAT_VERSION, OBJECTIVES, Candidate,
                      Frontier, autoplan, frontier_from_dict,
                      frontier_from_json, load_frontier)
 from .serve import AdmissionError, AsyncEngine, AsyncTicket, Router
+# measured-cost planning (calibration): the submodule stays importable
+# as repro.occam.calibrate; the package-level name ``occam.calibrate``
+# is the entry-point FUNCTION (deployment -> CostModel)
+from .calibrate import (ChipAssignment, CostModel, StageProfile,
+                        TickTimers, pack_replicas, rescore_frontier)
+from .calibrate.cost_model import calibrate
 
 __all__ = [
     "AUTO", "FRONTIER_FORMAT_VERSION", "OBJECTIVES", "PIPELINE",
     "PLAN_FORMAT_VERSION", "SINGLE",
     "AdmissionError", "AsyncEngine", "AsyncTicket",
-    "BackendError", "Candidate", "Deployment", "EngineSpec", "Fleet",
+    "BackendError", "Candidate", "ChipAssignment", "CostModel",
+    "Deployment", "EngineSpec", "Fleet",
     "Frontier", "Placement", "Plan", "RouteContext", "Router",
-    "ServingDefaults", "ServingStats", "Session", "Ticket", "autoplan",
-    "backend_names", "frontier_from_dict", "frontier_from_json",
-    "get_engine", "load_fleet", "load_frontier", "load_plan", "plan",
+    "ServingDefaults", "ServingStats", "Session", "StageProfile",
+    "TickTimers", "Ticket", "autoplan",
+    "backend_names", "calibrate", "frontier_from_dict",
+    "frontier_from_json", "get_engine", "load_fleet", "load_frontier",
+    "load_plan", "pack_replicas", "plan",
     "plan_from_dict", "plan_from_json", "register_engine",
-    "registered_engines", "registry", "resolve_spmd_engine", "serve",
-    "unregister_engine",
+    "registered_engines", "registry", "rescore_frontier",
+    "resolve_spmd_engine", "serve", "unregister_engine",
 ]

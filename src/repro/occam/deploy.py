@@ -141,7 +141,8 @@ class Deployment:
                 self.plan.net, self.plan.partition, microbatch,
                 plan=self.placement.stap, mesh=self.mesh,
                 devices=self.devices, routes=self.routes,
-                out_rows=self.plan.out_rows)
+                out_rows=self.plan.out_rows,
+                packing=self.placement.packing)
             self._rings[microbatch] = ring
         return ring
 
@@ -266,12 +267,81 @@ class Deployment:
             counter.writes += self.counter.writes - w0
         return y
 
+    # -- observability ------------------------------------------------------
+
+    def profile(self, params: Sequence[dict], *,
+                iters: int = 3) -> "object":
+        """Measure this deployment's stages in isolation -> a
+        JSON-shippable ``occam.calibrate.StageProfile``.
+
+        Each span stage's body is jitted standalone and timed
+        synchronized over ``iters`` runs at the placement's microbatch;
+        pipeline deployments additionally time one boundary hop over the
+        serving ring's own mesh and routing. Live tick-window stats join
+        from the busiest serving ring built so far (zeros when nothing
+        has served yet). ``occam.calibrate(deployment, params)`` fits a
+        ``CostModel`` from the result.
+        """
+        from repro.runtime.stap_pipeline import (model_stage_times,
+                                                 plan_span_stages)
+
+        from .calibrate.timers import (StageProfile, measure_hop_seconds,
+                                       measure_stage_seconds)
+
+        plan = self.plan
+        stages = plan_span_stages(plan.net, plan.partition,
+                                  routes=self.routes)
+        stage_macs = model_stage_times(plan.net, stages)
+        payload_elems = tuple(int(st.out_spec.elems)
+                              for st in stages[:-1])
+        microbatch = self.placement.microbatch
+        stage_seconds = measure_stage_seconds(
+            plan.net, plan.partition, params, microbatch=microbatch,
+            iters=iters, out_rows=plan.out_rows, routes=self.routes)
+        hop = 0.0
+        if self.kind == PIPELINE and len(stages) > 1:
+            hop = measure_hop_seconds(self.ring(microbatch))
+        round_batch, _mb = self.placement.serve_geometry(None)
+        tick_mean = tick_busy = 0.0
+        tick_count = 0
+        rings = [r for r in self._rings.values() if r.timers.count]
+        if rings:
+            busiest = max(rings, key=lambda r: r.timers.count)
+            tick_mean = busiest.timers.mean_s()
+            tick_count = busiest.timers.count
+            tick_busy = busiest.timers.busy_fraction()
+        return StageProfile(
+            spans=tuple(tuple(st.span) for st in stages),
+            replicas=tuple(self.placement.replicas),
+            stage_macs=tuple(float(m) for m in stage_macs),
+            stage_seconds=stage_seconds,
+            payload_elems=payload_elems,
+            hop_seconds=hop,
+            microbatch=microbatch,
+            round_batch=round_batch,
+            tick_mean_s=tick_mean,
+            tick_count=tick_count,
+            tick_busy_fraction=tick_busy)
+
+    def _timing(self) -> dict | None:
+        """Live tick-window stats from the busiest serving ring (None
+        when no ring has timed a tick)."""
+        rings = [r for r in self._rings.values() if r.timers.count]
+        if not rings:
+            return None
+        t = max(rings, key=lambda r: r.timers.count).timers
+        return {"tick_mean_s": t.mean_s(), "tick_count": t.count,
+                "tick_busy_fraction": t.busy_fraction()}
+
     # -- reporting ----------------------------------------------------------
 
     def report(self) -> TrafficReport:
         """Predicted and measured traffic in one object (per-image
-        prediction + everything counted since compile)."""
-        return self.plan.predicted.with_measured(self.counter, self._images)
+        prediction + everything counted since compile), with the live
+        tick-timing window attached as ``report.timing`` once serving
+        has run."""
+        rep = self.plan.predicted.with_measured(self.counter, self._images)
+        return dataclasses.replace(rep, timing=self._timing())
 
     def describe(self) -> dict:
         """Machine-readable deployment configuration (benchmarks, logs)."""
@@ -382,9 +452,14 @@ class Session:
             placement.serve_geometry(round_batch)
         self.ring_depth = placement.ring_depth
         self.max_pending = max_pending
+        from .calibrate.timers import TickTimers
+
         if deployment.kind == PIPELINE:
             self._ring = deployment.ring(self.microbatch)
             self.ring_depth = self._ring.ring_depth
+            # pipeline sessions share the ring's tick timer (every
+            # session at one geometry drives the same compiled tick)
+            self.timers = self._ring.timers
             self._state = self._ring.init_state()
             self._empty_round = jnp.zeros(
                 (self._ring.round_width, self.microbatch,
@@ -394,6 +469,7 @@ class Session:
         else:
             self._ring = None
             self._state = None
+            self.timers = TickTimers()
         # per-image transfer profile for masked-lane accounting: sessions
         # count per_image x valid lanes, never per_span x round size
         self._per_image = deployment._per_image_profile()
@@ -614,11 +690,18 @@ class Session:
         """The plan's per-image prediction with this session's measured
         transfers attached (masked padding lanes excluded from both
         ``measured_*`` and ``images``, so ``matches_prediction`` holds
-        under any mix of submit sizes) and the queue-side serving state
-        as ``report.serving``."""
+        under any mix of submit sizes), the queue-side serving state as
+        ``report.serving``, and the tick-timing window as
+        ``report.timing``."""
         rep = self.deployment.plan.predicted.with_measured(
             self.counter, self._images)
-        return dataclasses.replace(rep, serving=self.serving_stats())
+        timing = None
+        if self.timers.count:
+            timing = {"tick_mean_s": self.timers.mean_s(),
+                      "tick_count": self.timers.count,
+                      "tick_busy_fraction": self.timers.busy_fraction()}
+        return dataclasses.replace(rep, serving=self.serving_stats(),
+                                   timing=timing)
 
     def describe(self) -> dict:
         """Machine-readable session state (benchmarks, logs)."""
@@ -713,7 +796,8 @@ class Session:
         pad = self.round_batch - xs.shape[0]
         if pad:
             xs = jnp.pad(xs, ((0, pad),) + ((0, 0),) * 3)
-        return step(self.params, xs)
+        with self.timers.time():
+            return step(self.params, xs)
 
     def _deliver(self, segs, lanes: jax.Array) -> None:
         off = 0

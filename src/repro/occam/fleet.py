@@ -60,9 +60,17 @@ class Fleet:
         if self.macs_per_s <= 0:
             raise ValueError("macs_per_s must be positive")
 
-    def max_replicas(self, n_stages: int) -> int:
-        """Widest replica axis an ``n_stages``-stage mesh can hold here
-        (0 when the fleet cannot host the pipeline at all)."""
+    def max_replicas(self, n_stages: int, packing: str = "rect") -> int:
+        """Widest replica axis an ``n_stages``-stage pipeline can hold
+        here (0 when the fleet cannot host the pipeline at all).
+
+        ``packing="rect"`` is the rectangular ``n_stages x r`` mesh
+        bound; ``packing="sum"`` is the §III-E sum-of-replicas packing
+        (``occam.calibrate.placement``), where the widest single stage
+        can take every chip the other stages leave over."""
+        if packing == "sum":
+            return max(0, self.chips - n_stages + 1) \
+                if n_stages >= 1 else 0
         return self.chips // n_stages
 
     # -- serialization ------------------------------------------------------

@@ -33,10 +33,26 @@ class Placement:
     stage_times: tuple[float, ...] | None = None
     mesh: object | None = None             # jax Mesh the caller supplied
     devices: tuple | None = None
+    # device layout of the serving ring: "rect" = (stage, replica) mesh
+    # padded to max(replicas); "sum" = flat sum(replicas)-chip packing
+    # (paper §III-E accounting — see occam.calibrate.placement)
+    packing: str = "rect"
 
     @property
     def chips(self) -> int:
+        """Chips the plan accounts for: sum of replicas (§III-E)."""
         return 1 if self.kind == SINGLE else self.stap.chips
+
+    @property
+    def devices_needed(self) -> int:
+        """Physical devices the serving ring occupies under this
+        packing: ``sum(replicas)`` packed, ``stages x max(replicas)``
+        rectangular."""
+        if self.kind == SINGLE:
+            return 1
+        if self.packing == "sum":
+            return self.stap.chips
+        return len(self.stap.replicas) * max(self.stap.replicas)
 
     @property
     def replicas(self) -> tuple[int, ...]:
@@ -118,8 +134,11 @@ def place_plan(plan: Plan, *, chips: int | None = None,
                microbatch: int | None = None,
                mesh=None, devices=None,
                pipeline: bool | None = None,
-               harmonize: bool = False) -> Placement:
+               harmonize: bool = False,
+               packing: str = "rect") -> Placement:
     """Implementation of :meth:`Plan.place` (see its docstring)."""
+    if packing not in ("rect", "sum"):
+        raise ValueError(f"packing must be 'rect' or 'sum', got {packing!r}")
     microbatch = microbatch if microbatch is not None else plan.batch
     # Any multi-chip knob selects the pipeline: a knob that would
     # otherwise be silently dropped (measured stage_times, a replica cap,
@@ -132,6 +151,9 @@ def place_plan(plan: Plan, *, chips: int | None = None,
                          "arguments (chips/replicas/target_period/mesh/"
                          "stage_times/max_replicas/devices)")
     if not want_pipeline:
+        if packing == "sum":
+            raise ValueError("packing='sum' applies to pipeline "
+                             "placements only")
         return Placement(plan, SINGLE, microbatch)
 
     # Stage latencies: measured if the caller has them, else the MAC model.
@@ -167,4 +189,5 @@ def place_plan(plan: Plan, *, chips: int | None = None,
                                  harmonize=harmonize)
     return Placement(plan, PIPELINE, microbatch, stap=stap,
                      stage_times=times, mesh=mesh,
-                     devices=tuple(devices) if devices is not None else None)
+                     devices=tuple(devices) if devices is not None else None,
+                     packing=packing)

@@ -28,10 +28,13 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
 # (the declarative hardware model the plan was searched under —
 # ``occam.autoplan``) and, later, the optional "out_rows" key (output
 # tile height, Eqn. 6 amortization; absent means 1 — older v3 readers
-# ignore it, older v3 documents load as t=1). ``load_plan`` migrates
-# v1/v2 payloads transparently.
-PLAN_FORMAT_VERSION = 3
-_READABLE_VERSIONS = (1, 2, 3)
+# ignore it, older v3 documents load as t=1). v4 adds the optional
+# "calibration" block (a measured ``occam.calibrate.CostModel`` — the
+# rates ``Frontier.rescore`` re-ranks under; absent means uncalibrated,
+# and v1-v3 documents load with ``calibration=None``). ``load_plan``
+# migrates earlier payloads transparently.
+PLAN_FORMAT_VERSION = 4
+_READABLE_VERSIONS = (1, 2, 3, 4)
 
 _PREDICTED_FIELDS = ("scheme", "feature_elems", "filter_elems",
                      "compute_macs", "boundary_elems")
@@ -84,6 +87,9 @@ class Plan:
     # output tile height t (rows per kernel step, Eqn. 6 amortization);
     # spans whose output map is shorter clamp per-span at execution
     out_rows: int = 1
+    # measured cost rates the plan was last calibrated with (v4):
+    # an ``occam.calibrate.CostModel``, or None = uncalibrated
+    calibration: object | None = None
 
     # -- introspection ------------------------------------------------------
 
@@ -102,6 +108,11 @@ class Plan:
 
         return predicted_transfers(self.net, self.boundaries)
 
+    def with_calibration(self, cost_model) -> "Plan":
+        """This plan carrying a measured ``occam.calibrate.CostModel``
+        (persisted in the schema-v4 ``calibration`` block)."""
+        return dataclasses.replace(self, calibration=cost_model)
+
     # -- stage 2 ------------------------------------------------------------
 
     def place(self, *, chips: int | None = None,
@@ -112,7 +123,8 @@ class Plan:
               microbatch: int | None = None,
               mesh=None, devices=None,
               pipeline: bool | None = None,
-              harmonize: bool = False) -> "Placement":
+              harmonize: bool = False,
+              packing: str = "rect") -> "Placement":
         """Commit the plan to chips -> :class:`~repro.occam.Placement`.
 
         With no arguments: the degenerate single-device placement (every
@@ -123,6 +135,9 @@ class Plan:
         per span, bottleneck stages replicated per ``plan_replication``).
         ``harmonize=True`` applies the round-width economy pass to the
         planned replica vector (see ``core.stap.plan_replication``).
+        ``packing="sum"`` packs stage replicas onto ``sum(replicas)``
+        chips instead of the rectangular ``stages x max(replicas)`` mesh
+        (paper §III-E accounting; pipeline placements only).
         """
         from .place import place_plan
 
@@ -131,7 +146,7 @@ class Plan:
                           target_period=target_period,
                           max_replicas=max_replicas, microbatch=microbatch,
                           mesh=mesh, devices=devices, pipeline=pipeline,
-                          harmonize=harmonize)
+                          harmonize=harmonize, packing=packing)
 
     # -- serialization ------------------------------------------------------
 
@@ -152,6 +167,8 @@ class Plan:
             "serving": self.serving.to_dict(),
             "fleet": self.fleet.to_dict() if self.fleet else None,
             "out_rows": self.out_rows,
+            "calibration": (self.calibration.to_dict()
+                            if self.calibration is not None else None),
         }
 
     def to_json(self, indent: int | None = 2) -> str:
@@ -215,9 +232,16 @@ def plan_from_dict(d: dict) -> Plan:
     # capacity stands alone, exactly as hand-fed plans always did
     fleet = Fleet.from_dict(d["fleet"]) \
         if version >= 3 and d.get("fleet") else None
+    # transparent v1-v3 migration: no calibration block existed — the
+    # plan loads uncalibrated, exactly as every plan started out
+    calibration = None
+    if version >= 4 and d.get("calibration"):
+        from .calibrate.cost_model import CostModel
+
+        calibration = CostModel.from_dict(d["calibration"])
     return Plan(net, int(d["capacity_elems"]), int(d["batch"]), part,
                 routes, predicted, serving, fleet,
-                int(d.get("out_rows", 1)))
+                int(d.get("out_rows", 1)), calibration)
 
 
 def plan_from_json(doc: str) -> Plan:

@@ -57,11 +57,20 @@ FRONTIER_FORMAT_VERSION = 1
 OBJECTIVES = ("throughput", "latency", "traffic")
 
 # sort keys per objective: minimize the named metric, break ties toward
-# fewer chips and less traffic (the cheaper deployment wins a draw)
+# fewer chips and less traffic (the cheaper deployment wins a draw),
+# then toward a deterministic structural tail so exact score ties never
+# depend on enumeration order (stable picks across runs and re-scores)
+def _det(c: "Candidate") -> tuple:
+    return (c.kind, c.replicas, tuple(c.plan.boundaries))
+
+
 _OBJECTIVE_KEYS = {
-    "throughput": lambda c: (c.period, c.chips, c.traffic, c.fill_latency),
-    "latency": lambda c: (c.fill_latency, c.chips, c.traffic, c.period),
-    "traffic": lambda c: (c.traffic, c.period, c.chips, c.fill_latency),
+    "throughput": lambda c: (c.period, c.chips, c.traffic, c.fill_latency)
+    + _det(c),
+    "latency": lambda c: (c.fill_latency, c.chips, c.traffic, c.period)
+    + _det(c),
+    "traffic": lambda c: (c.traffic, c.period, c.chips, c.fill_latency)
+    + _det(c),
 }
 
 
@@ -103,12 +112,20 @@ class Candidate:
 
     def placement(self, *, mesh=None, devices=None) -> "Placement":
         """Re-enter the staged path: the :class:`~repro.occam.Placement`
-        this candidate scored."""
+        this candidate scored.
+
+        Unbalanced replica vectors were scored at ``sum(replicas)``
+        chips (§III-E), so they place with ``packing="sum"``; balanced
+        vectors keep the rectangular mesh (same chip count either way).
+        """
         if self.kind == SINGLE:
             return self.plan.place()
+        packing = "sum" if sum(self.replicas) < \
+            len(self.replicas) * max(self.replicas) else "rect"
         return self.plan.place(replicas=self.replicas,
                                stage_times=self.stage_times,
-                               mesh=mesh, devices=devices)
+                               mesh=mesh, devices=devices,
+                               packing=packing)
 
     def deploy(self, backend: str = "auto", *, mesh=None, devices=None,
                interpret: bool | None = None) -> "Deployment":
@@ -128,6 +145,11 @@ class Candidate:
         if key is not None:
             dep = self._deployments.get(key)
             if dep is not None:
+                # the cache survives re-scoring (rescored candidates
+                # share it); point the deployment back at the candidate
+                # and frontier actually asking for it
+                dep.candidate = self
+                dep.frontier = self._frontier
                 return dep
         dep = self.placement(mesh=mesh, devices=devices).compile(
             backend=backend, interpret=interpret)
@@ -220,14 +242,26 @@ class Frontier:
                    if c.throughput >= arrival_rate]
         if meeting:
             return min(meeting,
-                       key=lambda c: (c.chips, c.traffic, c.period))
+                       key=lambda c: (c.chips, c.traffic, c.period)
+                       + _det(c))
         return min(self.candidates,
-                   key=lambda c: (c.period, c.chips, c.traffic))
+                   key=lambda c: (c.period, c.chips, c.traffic)
+                   + _det(c))
 
     def deploy(self, objective: str | None = None, backend: str = "auto",
                **kw) -> "Deployment":
         """``best(objective).deploy(...)`` in one call."""
         return self.best(objective).deploy(backend, **kw)
+
+    def rescore(self, cost_model) -> "Frontier":
+        """A new frontier re-ranked under a measured
+        ``occam.calibrate.CostModel``: every candidate's period and fill
+        latency recomputed with calibrated rates, Pareto re-filtered —
+        the DP never re-runs, and deployment caches carry over (a
+        re-scored winner re-deploys without recompiling)."""
+        from .calibrate.rescore import rescore_frontier
+
+        return rescore_frontier(self, cost_model)
 
     def serve(self, params, *, objective: str | None = None,
               backend: str = "auto", mesh=None, devices=None,
@@ -345,14 +379,16 @@ def _replica_vectors(stage_times: Sequence[float], fleet: Fleet,
     profile: water-fill under each chip budget, replica axis capped at
     what an S x r mesh physically fits."""
     s = len(stage_times)
-    r_cap_max = fleet.max_replicas(s)
+    # sum-of-replicas packing (§III-E) hosts any vector with
+    # sum(r) <= chips, so the replica axis can grow past chips // s
+    r_cap_max = fleet.max_replicas(s, packing="sum")
     vectors: set[tuple[int, ...]] = set()
     for r_cap in range(1, r_cap_max + 1):
-        for budget in range(s, s * r_cap + 1):
+        for budget in range(s, min(s * r_cap, fleet.chips) + 1):
             rep = plan_replication(stage_times, max_chips=budget,
                                    max_replicas=r_cap,
                                    harmonize=harmonize).replicas
-            if s * max(rep) <= fleet.chips:
+            if sum(rep) <= fleet.chips:
                 vectors.add(rep)
     return sorted(vectors)
 
@@ -385,7 +421,9 @@ def _score(net: NetSpec, plan: Plan, fleet: Fleet, kind: str,
         # ring depth = n_stages ticks to first result, each tick
         # W * batch * bottleneck long (SteadySchedule.steady_tick_time)
         fill = len(replicas) * width * batch * bottleneck
-        chips = len(replicas) * max(replicas)
+        # sum-of-replicas accounting (§III-E): stages run asynchronously,
+        # so a 4-3-2 plan occupies 9 chips, not a 3x4 rectangle
+        chips = sum(replicas)
         # pipeline: boundary payloads move stage-to-stage over links
         # (ppermute is the runtime's ONLY inter-stage traffic; no chip
         # replays the whole net through its own HBM), so the busiest
@@ -448,20 +486,34 @@ def autoplan(net: NetSpec, fleet: Fleet, *,
         by_boundaries[tuple(pt.result.boundaries)] = \
             (pt.capacity_elems, pt.result)
 
+    # pipeline candidates pay boundary traffic as link hops, not DRAM
+    # round-trips, so the hop-count DP (cost="hops") can prefer cuts the
+    # DRAM objective rejects — sweep it too (footprint memo is shared;
+    # only genuinely new fits-sets run the DP) and score any partitions
+    # the DRAM sweep did not already find as pipeline-only candidates
+    hop_only: dict[tuple, tuple[int, PartitionResult]] = {}
+    if fleet.chips > 1:
+        for pt in sweep.sweep(fleet.vmem_elems, cost="hops"):
+            key = tuple(pt.result.boundaries)
+            if key not in by_boundaries:
+                hop_only[key] = (pt.capacity_elems, pt.result)
+
     candidates: list[Candidate] = []
-    for capacity, part in by_boundaries.values():
-        t = (_pick_out_rows(net, capacity, batch, part)
-             if out_rows == "auto" else int(out_rows))
-        plan = _make_plan(net, capacity, batch, part, fleet, t)
-        stages = plan_span_stages(net, part, routes=plan.routes)
-        times = model_stage_times(net, stages)
-        s = len(stages)
-        candidates.append(_score(net, plan, fleet, SINGLE,
-                                 (1,) * s, times))
-        if fleet.max_replicas(s) >= 1:
-            for reps in _replica_vectors(times, fleet, harmonize):
-                candidates.append(_score(net, plan, fleet, PIPELINE,
-                                         reps, times))
+    for source in (by_boundaries, hop_only):
+        for capacity, part in source.values():
+            t = (_pick_out_rows(net, capacity, batch, part)
+                 if out_rows == "auto" else int(out_rows))
+            plan = _make_plan(net, capacity, batch, part, fleet, t)
+            stages = plan_span_stages(net, part, routes=plan.routes)
+            times = model_stage_times(net, stages)
+            s = len(stages)
+            if source is by_boundaries:
+                candidates.append(_score(net, plan, fleet, SINGLE,
+                                         (1,) * s, times))
+            if fleet.max_replicas(s, packing="sum") >= 1:
+                for reps in _replica_vectors(times, fleet, harmonize):
+                    candidates.append(_score(net, plan, fleet, PIPELINE,
+                                             reps, times))
 
     # exact-score duplicates are interchangeable (e.g. extra replicas
     # inside the same mesh footprint that don't move the bottleneck) —
@@ -480,8 +532,10 @@ def autoplan(net: NetSpec, fleet: Fleet, *,
                     arrival_rate=arrival_rate,
                     stats={
                         "capacities_swept": len(swept),
-                        "dp_runs": sweep.dp_runs,
-                        "partitions": len(by_boundaries),
+                        "dp_runs": sweep.dp_runs_by_cost.get("dram", 0),
+                        "dp_runs_hops": sweep.dp_runs_by_cost.get("hops",
+                                                                  0),
+                        "partitions": len(by_boundaries) + len(hop_only),
                         "placements_scored": len(candidates),
                         "pareto_size": len(pareto),
                     })

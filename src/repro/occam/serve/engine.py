@@ -38,6 +38,7 @@ old ring completely, so in-flight tickets always resolve.
 from __future__ import annotations
 
 import asyncio
+import dataclasses
 import time
 from typing import TYPE_CHECKING, Sequence
 
@@ -225,6 +226,34 @@ class AsyncEngine:
         await self._task
         self._task = None
         self._session.close()
+
+    def serving_stats(self) -> dict:
+        """The session's queue-side counters plus a live per-stage
+        ``utilization`` view.
+
+        ``utilization[i]`` is the fraction of wall clock stage ``i``'s
+        chips spent computing over the tick timer's rolling window: the
+        ring's tick duty cycle scaled by the stage's share of the
+        bottleneck (a stage whose per-replica time is half the
+        bottleneck's idles half of every tick — exactly what
+        sum-of-replicas planning trades against). Single-chip
+        deployments report the one chip's duty cycle."""
+        stats = dataclasses.asdict(self._session.serving_stats())
+        stats["utilization"] = self._utilization()
+        return stats
+
+    def _utilization(self) -> tuple[float, ...]:
+        session = self._session
+        duty = session.timers.busy_fraction()
+        if session._ring is None:
+            return (duty,)
+        plan = self._dep.placement.stap
+        per_replica = [t / r for t, r in zip(plan.stage_times,
+                                             plan.replicas)]
+        bottleneck = max(per_replica)
+        if bottleneck <= 0:
+            return tuple(0.0 for _ in per_replica)
+        return tuple(duty * t / bottleneck for t in per_replica)
 
     def describe(self) -> dict:
         """Machine-readable engine state: config, queue, metrics,

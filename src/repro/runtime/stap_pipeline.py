@@ -81,6 +81,8 @@ from repro.runtime import span_engine
 
 STAGE_AXIS = "stage"
 REPLICA_AXIS = "replica"
+CHIP_AXIS = "chip"
+PACKINGS = ("rect", "sum")
 
 
 # --------------------------------------------------------------------------
@@ -209,6 +211,19 @@ def stap_mesh(n_stages: int, max_replicas: int,
             f"import to emulate them on CPU)")
     arr = np.array(devs[:need]).reshape(n_stages, max_replicas)
     return Mesh(arr, (STAGE_AXIS, REPLICA_AXIS))
+
+
+def packed_mesh(n_chips: int, devices: Sequence | None = None) -> Mesh:
+    """A flat 1-D chip mesh over the first ``n_chips`` devices — the
+    sum-of-replicas layout (§III-E): a 4-3-2 plan occupies 9 chips, not
+    a rectangular 3x4 = 12."""
+    devs = list(devices if devices is not None else jax.devices())
+    if len(devs) < n_chips:
+        raise ValueError(
+            f"packed STAP mesh needs {n_chips} devices, have {len(devs)} "
+            f"(set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n_chips} before jax import to emulate them on CPU)")
+    return Mesh(np.array(devs[:n_chips]), (CHIP_AXIS,))
 
 
 # --------------------------------------------------------------------------
@@ -512,6 +527,46 @@ def replicated_forward(stage_fn, stage_params, microbatches: jax.Array,
 # The span pipeline: heterogeneous Occam spans as switch-selected bodies
 # --------------------------------------------------------------------------
 
+def make_stage_body(net: NetSpec, stage: StageSpec, payload_width: int,
+                    out_rows: int = 1):
+    """One stage's shard_map-traceable body: unflatten the span's
+    parameter slice, unpack the boundary payload, run the span core the
+    registry resolved for the route, and pack the outgoing payload
+    (output map + spills + forwarded upstream sources).
+
+    Module-level because it is also a standalone jit target: the
+    calibration timers (``repro.occam.calibrate.timers``) run each
+    stage's body in isolation to measure per-stage wall-clock without a
+    device mesh."""
+    a, b = stage.span
+    spec = registry.resolve_spmd_engine(stage.route.route)
+    # per-stage effective tile height: a deep net's tail spans have
+    # short output maps, so the planned out_rows clamps per span
+    t = max(1, min(out_rows, net.map_shape(b)[0]))
+    core = spec.make_spmd_body(net, a, b, stage.spill, stage.src_keys,
+                               out_rows=t)
+
+    def body(p_flat, slot):
+        span_params = _unflatten_span_params(p_flat, net, a, b)
+        parts = _unpack(slot, stage.in_spec, net)
+        x = parts[a]
+        srcs = tuple(parts[s] for s in stage.src_keys)
+        out, spilled = core(span_params, x, srcs)
+        out_parts = {}
+        for s in stage.out_spec.keys:
+            if s == b:
+                out_parts[s] = out
+            elif s in spilled:
+                out_parts[s] = spilled[s]
+            elif s == a:
+                out_parts[s] = x       # edge source == this span's input
+            else:
+                out_parts[s] = parts[s]  # upstream source: forward it
+        return _pack(out_parts, stage.out_spec, payload_width)
+
+    return body
+
+
 class _SpanProgram:
     """Shared static planning for the STAP executors: spans -> stages
     whose SPMD bodies dispatch through the engine registry
@@ -531,16 +586,26 @@ class _SpanProgram:
                  mesh: Mesh | None = None,
                  devices: Sequence | None = None,
                  routes: Sequence[span_engine.SpanRoute] | None = None,
-                 out_rows: int = 1):
+                 out_rows: int = 1,
+                 packing: str = "rect"):
+        if packing not in PACKINGS:
+            raise ValueError(f"packing must be one of {PACKINGS}, "
+                             f"got {packing!r}")
         self.net = net
         self.boundaries = span_engine._boundaries_of(partition, net)
         self.stages = plan_span_stages(net, partition, routes=routes)
         n_stages = len(self.stages)
         self.microbatch = microbatch
         self.out_rows = out_rows
+        self.packing = packing
         self.stage_times = tuple(stage_times) if stage_times is not None \
             else model_stage_times(net, self.stages)
         if plan is None:
+            if packing == "sum":
+                # sum packing exists to realize an *already chosen*
+                # unbalanced replica vector on sum(replicas) chips; the
+                # default planners reason in rectangular budgets
+                raise ValueError("packing='sum' requires an explicit plan")
             plan = default_stap_plan(self.stage_times,
                                      target_period=target_period,
                                      max_chips=max_chips,
@@ -550,8 +615,24 @@ class _SpanProgram:
             raise ValueError(f"plan has {len(plan.replicas)} stages, "
                              f"partition has {n_stages}")
         self.plan = plan
-        self.mesh = mesh if mesh is not None else stap_mesh(
-            n_stages, max(plan.replicas), devices)
+        if packing == "sum":
+            # lazy import: repro.occam's package init pulls this module in
+            # via the deployment layer before occam.calibrate exists
+            from repro.occam.calibrate.placement import pack_replicas
+            self.assignment = pack_replicas(plan.replicas)
+            if mesh is None:
+                mesh = packed_mesh(self.assignment.n_chips, devices)
+            elif mesh.shape.get(CHIP_AXIS) != self.assignment.n_chips:
+                raise ValueError(
+                    f"packed mesh is {CHIP_AXIS}="
+                    f"{mesh.shape.get(CHIP_AXIS)} but the plan needs "
+                    f"sum(replicas) = {self.assignment.n_chips} chips; "
+                    f"build it with packed_mesh({self.assignment.n_chips})")
+            self.mesh = mesh
+        else:
+            self.assignment = None
+            self.mesh = mesh if mesh is not None else stap_mesh(
+                n_stages, max(plan.replicas), devices)
         self.payload_width = max(max(st.in_spec.elems, st.out_spec.elems)
                                  for st in self.stages)
         self.param_width = max(
@@ -579,37 +660,8 @@ class _SpanProgram:
     # -- SPMD program -------------------------------------------------------
 
     def _make_body(self, stage: StageSpec):
-        """One stage's shard_map-traceable body: unflatten the span's
-        parameter slice, unpack the boundary payload, run the span core
-        the registry resolved for the route, and pack the outgoing
-        payload (output map + spills + forwarded upstream sources)."""
-        net, (a, b) = self.net, stage.span
-        spec = registry.resolve_spmd_engine(stage.route.route)
-        # per-stage effective tile height: a deep net's tail spans have
-        # short output maps, so the planned out_rows clamps per span
-        t = max(1, min(self.out_rows, net.map_shape(b)[0]))
-        core = spec.make_spmd_body(net, a, b, stage.spill, stage.src_keys,
-                                   out_rows=t)
-
-        def body(p_flat, slot):
-            span_params = _unflatten_span_params(p_flat, net, a, b)
-            parts = _unpack(slot, stage.in_spec, net)
-            x = parts[a]
-            srcs = tuple(parts[s] for s in stage.src_keys)
-            out, spilled = core(span_params, x, srcs)
-            out_parts = {}
-            for s in stage.out_spec.keys:
-                if s == b:
-                    out_parts[s] = out
-                elif s in spilled:
-                    out_parts[s] = spilled[s]
-                elif s == a:
-                    out_parts[s] = x       # edge source == this span's input
-                else:
-                    out_parts[s] = parts[s]  # upstream source: forward it
-            return _pack(out_parts, stage.out_spec, self.payload_width)
-
-        return body
+        return make_stage_body(self.net, stage, self.payload_width,
+                               out_rows=self.out_rows)
 
     def _step(self):
         """step(stage_idx, p_flat, slot) -> slot' switching between the
@@ -620,6 +672,15 @@ class _SpanProgram:
             return lax.switch(i_stage, bodies, p_flat, slot)
 
         return step
+
+    def _param_rows(self) -> tuple[StageSpec, ...]:
+        """One parameter row per mesh position: the stages themselves on
+        the rectangular (stage, replica) mesh (replicas share a stage row
+        via the replica axis), or per-chip stage copies on the packed
+        chip axis (chip c holds exactly its assigned stage's span)."""
+        if self.packing == "sum":
+            return tuple(self.stages[i] for i in self.assignment.stage_ids())
+        return self.stages
 
     def _stack_params(self, params: Sequence[dict]) -> jax.Array:
         # serving calls reuse the same weights; key the flatten/pad work on
@@ -634,7 +695,7 @@ class _SpanProgram:
         stacked = jnp.stack([
             _flatten_span_params(params, self.net, *st.span,
                                  width=self.param_width)
-            for st in self.stages])
+            for st in self._param_rows()])
         self._pstack_cache = (leaves, stacked)
         return stacked
 
@@ -819,12 +880,21 @@ class StapRing(_SpanProgram):
                  mesh: Mesh | None = None,
                  devices: Sequence | None = None,
                  routes: Sequence[span_engine.SpanRoute] | None = None,
-                 out_rows: int = 1):
+                 out_rows: int = 1,
+                 packing: str = "rect"):
         super().__init__(net, partition, microbatch, plan=plan, mesh=mesh,
-                         devices=devices, routes=routes, out_rows=out_rows)
+                         devices=devices, routes=routes, out_rows=out_rows,
+                         packing=packing)
         self.steady = steady_schedule(self.plan)
         self.trace_count = 0   # tick lowerings; regression: stays at 1
-        self._tick = jax.jit(self._build_tick())
+        tick = self._build_tick_packed() if self.packing == "sum" \
+            else self._build_tick()
+        self._tick = jax.jit(tick)
+        # windowed tick dispatch timer (occam.calibrate observability);
+        # under steady load dispatch wall time converges to the device
+        # tick time via XLA's dispatch backpressure
+        from repro.occam.calibrate.timers import TickTimers
+        self.timers = TickTimers()
 
     # -- geometry -----------------------------------------------------------
 
@@ -851,7 +921,10 @@ class StapRing(_SpanProgram):
             "engines": [self.executed_engine(st) for st in self.stages],
             "replicas": list(self.plan.replicas),
             "chips": self.plan.chips,
-            "mesh_shape": [self.steady.n_stages, self.steady.max_replicas],
+            "packing": self.packing,
+            "mesh_shape": ([self.assignment.n_chips]
+                           if self.packing == "sum" else
+                           [self.steady.n_stages, self.steady.max_replicas]),
             "round_width": self.round_width,
             "round_batch": self.round_batch,
             "ring_depth": self.ring_depth,
@@ -859,14 +932,23 @@ class StapRing(_SpanProgram):
             "payload_width_padded": self.payload_width,
             "link_elems_per_image": self.link_elems_per_image,
             "tick_lowerings": self.trace_count,
+            "tick_count": self.timers.count,
+            "tick_mean_s": self.timers.mean_s(),
+            "tick_busy_fraction": self.timers.busy_fraction(),
         }
 
     # -- SPMD tick ----------------------------------------------------------
 
     def init_state(self) -> jax.Array:
         """A zeroed ring: each stage's pending-round payload slots,
-        sharded over the (stage, replica) mesh. Shape is fixed by the
-        geometry — O(round_batch) per chip, stream-independent."""
+        sharded over the (stage, replica) mesh — or over the flat chip
+        axis under sum packing. Shape is fixed by the geometry —
+        O(round_batch) per chip, stream-independent."""
+        if self.packing == "sum":
+            state = jnp.zeros((self.assignment.n_chips * self.round_width,
+                               self.microbatch, self.payload_width))
+            return jax.device_put(state, jax.sharding.NamedSharding(
+                self.mesh, P(CHIP_AXIS)))
         s, r = self.steady.n_stages, self.steady.max_replicas
         state = jnp.zeros((s * r * self.round_width, self.microbatch,
                            self.payload_width))
@@ -938,6 +1020,67 @@ class StapRing(_SpanProgram):
 
         return fn
 
+    def _build_tick_packed(self):
+        """The sum-of-replicas tick: same ring semantics as
+        :meth:`_build_tick`, lowered over a flat ``sum(replicas)``-chip
+        mesh instead of the rectangular (stage, replica) grid. Each chip
+        knows its stage from the static :class:`ChipAssignment` tables;
+        slot ownership and the per-slot boundary hops route over flat
+        chip ids, so an unbalanced 4-3-2 plan really occupies 9 devices
+        (paper §III-E) with no padded idle replicas."""
+        step = self._step()
+        steady, mesh, asg = self.steady, self.mesh, self.assignment
+        s_stages, width = steady.n_stages, steady.round_width
+        stage_ids = jnp.asarray(np.array(asg.stage_ids()))       # (C,)
+        owner = jnp.asarray(np.array(asg.owner_table(steady)))   # (C, W)
+        perms = [asg.slot_perm(steady, w) for w in range(width)]
+
+        def per_device(params_local, state, in_round, masks):
+            c = lax.axis_index(CHIP_AXIS)
+            i = stage_ids[c]
+            p_here = jax.tree.map(lambda l: l[0], params_local)
+            slot_in = jnp.where(i == 0, in_round, state)
+            # Double-buffered boundary slot (as in the rect tick): the
+            # carried ``state`` is read-only this tick; each slot's hop
+            # is issued right after its body.
+            ys, hops = [], []
+            for w in range(width):
+                pred = jnp.logical_and(owner[c, w], masks[i, w])
+                yw = lax.cond(
+                    pred,
+                    lambda x: step(i, p_here, x),
+                    lambda x: jnp.zeros_like(x),
+                    slot_in[w])
+                ys.append(yw)
+                if s_stages > 1:
+                    hops.append(lax.ppermute(yw, CHIP_AXIS, perms[w]))
+            y = jnp.stack(ys)
+            out = jnp.where(i == s_stages - 1, y, jnp.zeros_like(y))
+            state = jnp.stack(hops) if s_stages > 1 else jnp.zeros_like(y)
+            return state, out
+
+        mapped = _shard_map(per_device, mesh=mesh,
+                            in_specs=(P(CHIP_AXIS), P(CHIP_AXIS), P(), P()),
+                            out_specs=(P(CHIP_AXIS), P(CHIP_AXIS)),
+                            check_vma=False)
+        mb = self.microbatch
+        h, w, c = self.net.map_shape(self.net.n_layers)
+        last0 = asg.offsets[s_stages - 1]       # first last-stage chip
+        r_last = asg.replicas[s_stages - 1]
+
+        def fn(params_stacked, state, in_round, masks):
+            self.trace_count += 1
+            state, out = mapped(params_stacked, state, in_round, masks)
+            # collect the exiting round: last-stage chips only, replica
+            # partials summed (each served only its owned slots)
+            out = out[last0 * width:]
+            out = out.reshape((r_last, width * mb, self.payload_width)) \
+                .sum(axis=0)
+            lanes = out[:, :h * w * c].reshape(-1, h, w, c)
+            return state, lanes
+
+        return fn
+
     def tick(self, params: Sequence[dict], state: jax.Array,
              in_round: jax.Array, masks) -> tuple[jax.Array, jax.Array]:
         """Advance the ring one tick.
@@ -951,9 +1094,10 @@ class StapRing(_SpanProgram):
         the tick's dispatch — one round, never an all-reduce of a
         stream-sized buffer).
         """
-        return self._tick(self._stack_params(params), state,
-                          jnp.asarray(in_round),
-                          jnp.asarray(masks, dtype=bool))
+        with self.timers.time():
+            return self._tick(self._stack_params(params), state,
+                              jnp.asarray(in_round),
+                              jnp.asarray(masks, dtype=bool))
 
     # -- data movement ------------------------------------------------------
 

@@ -22,5 +22,38 @@ def test_bench_smoke_runs_every_family():
     assert res.returncode == 0, res.stderr[-2000:]
     assert "bench-smoke OK" in res.stdout
     for family in ("span_engine", "stap_pipeline", "serve_session",
-                   "autoplan"):
+                   "autoplan", "calibrate"):
         assert family in res.stdout
+
+
+def test_bench_calibrate_doc_schema():
+    """Fast tier: the BENCH_calibrate document schema gate — a synthetic
+    well-formed doc validates, broken ones are rejected, and a tracked
+    results/BENCH_calibrate.json (when present) still conforms."""
+    import json
+
+    sys.path.insert(0, _ROOT)
+    from benchmarks.occam_calibrate import REQUIRED_KEYS, validate_doc
+
+    doc = {k: 1 for k in REQUIRED_KEYS}
+    doc.update(net="vgg_mini", fleet={"chips": 6, "vmem_elems": 6000},
+               boundaries=[3, 6], replicas=[2, 2, 1], packing="sum",
+               winner_changed=False,
+               calibration={"version": 1, "macs_per_s": 1e9,
+                            "stage_overhead_s": 0.0,
+                            "link_s_per_elem": 0.0, "samples": 3,
+                            "residual": 0.0})
+    validate_doc(doc)
+    with pytest.raises(ValueError, match="missing keys"):
+        validate_doc({k: v for k, v in doc.items() if k != "calibration"})
+    with pytest.raises(ValueError, match="positive"):
+        validate_doc(dict(doc, error_improvement=0))
+    bad_cal = dict(doc["calibration"])
+    del bad_cal["macs_per_s"]
+    with pytest.raises(ValueError, match="calibration block"):
+        validate_doc(dict(doc, calibration=bad_cal))
+
+    tracked = os.path.join(_ROOT, "results", "BENCH_calibrate.json")
+    if os.path.exists(tracked):
+        with open(tracked) as f:
+            validate_doc(json.load(f))
