@@ -98,12 +98,25 @@ def _occam_calibrate():
     return occam_calibrate()
 
 
+def _occam_quant():
+    # quantized-span planning + execution (occam.quant): byte-denominated
+    # DP moves the cut and shrinks boundary traffic; byte-exact
+    # model==machine on the emulated mesh; bounded int8 accuracy cost;
+    # runs in a flagged subprocess, writes results/BENCH_quant.json
+    from benchmarks.occam_quant import occam_quant
+
+    return occam_quant()
+
+
 BENCHES.append(
     ("occam_autoplan", _occam_autoplan,
      "memoized DP-sweep speedup vs naive (frontier == exhaustive best)"))
 BENCHES.append(
     ("occam_calibrate", _occam_calibrate,
      "calibrated-over-analytic prediction-error improvement (>1 = helped)"))
+BENCHES.append(
+    ("occam_quant", _occam_quant,
+     "int8-over-fp32 off-chip byte reduction (>1 = quantization pays)"))
 
 
 def main() -> None:

@@ -127,6 +127,23 @@ def smoke_calibrate() -> float:
     return float(cm.compute_overhead_factor)
 
 
+def smoke_quant() -> float:
+    import jax.numpy as jnp
+
+    from repro import occam
+
+    net, params, xs = _tiny_case()
+    plans = {pol: occam.plan(net, 2500, batch=xs.shape[0], dtype_policy=pol)
+             for pol in ("fp32", "int8")}
+    assert plans["int8"].predicted.offchip_bytes < \
+        plans["fp32"].predicted.offchip_bytes
+    dep = plans["int8"].place().compile(interpret=True)
+    y = dep.run(params, xs)
+    ref = plans["fp32"].place().compile(interpret=True).run(params, xs)
+    assert dep.report().matches_prediction_bytes
+    return float(jnp.max(jnp.abs(y - ref)))
+
+
 SMOKES = [
     ("span_engine", smoke_span_engine),
     ("stap_pipeline", smoke_stap),
@@ -134,6 +151,7 @@ SMOKES = [
     ("async_engine", smoke_async),
     ("autoplan", smoke_autoplan),
     ("calibrate", smoke_calibrate),
+    ("quant", smoke_quant),
 ]
 
 

@@ -100,6 +100,25 @@ asg = occam.pack_replicas((4, 3, 2))
 print(f"4-3-2 packed placement: {asg.n_chips} chips "
       f"(rect mesh {asg.rect_chips}; saves {asg.chips_saved})")
 
+# --- quantized spans: dtype as a planning axis -------------------------------
+# an int8 boundary policy shrinks the DP's byte-denominated closures 4x:
+# larger spans fit, the cut moves, and off-chip traffic drops in bytes —
+# at a bounded accuracy cost the frontier's quant_cost axis trades
+plan_q = occam.plan(tiny, 3000, dtype_policy="int8")
+plan_f = occam.plan(tiny, 3000)
+assert plan_q.predicted.offchip_bytes < plan_f.predicted.offchip_bytes
+dep_q = plan_q.place().compile(interpret=True)
+y_q = dep_q.run(params, x)
+rep_q = dep_q.report()
+assert rep_q.matches_prediction_bytes      # byte-exact model == machine
+err_q = float(np.max(np.abs(np.asarray(y_q) - np.asarray(y_ref))))
+print(f"int8-boundary plan: {plan_q.n_spans} spans "
+      f"({plan_f.n_spans} at fp32), "
+      f"{plan_q.predicted.offchip_bytes / 1e3:.1f}KB/image off-chip vs "
+      f"{plan_f.predicted.offchip_bytes / 1e3:.1f}KB at fp32, "
+      f"max |err| {err_q:.3f} vs the fp32 reference")
+assert occam.plan_from_json(plan_q.to_json()).quant == plan_q.quant
+
 # --- C4: STAP ----------------------------------------------------------------
 from repro.core.stap import plan_replication
 splan = plan_replication([15, 35, 40, 10], target_period=20)

@@ -64,6 +64,19 @@ def span_footprint_elems(net: NetSpec, i: int, j: int, out_rows: int = 1) -> int
     return span_closure_elems(net, i, j, out_rows) + net.span_weight_elems(i, j)
 
 
+def span_footprint_bytes(net: NetSpec, i: int, j: int, out_rows: int = 1, *,
+                         act_bytes: float = 4.0,
+                         weight_bytes: float = 4.0) -> float:
+    """Byte twin of :func:`span_footprint_elems`: the closure at the
+    activation width plus resident filters at the weight width. The
+    default widths are fp32, making the twin exactly ``4 x`` the elem
+    count; a dtype policy (``repro.occam.quant``) supplies narrower
+    widths — including a batched activation width, since closures scale
+    with batch while filters stay shared (Eqn. 6)."""
+    return (span_closure_elems(net, i, j, out_rows) * float(act_bytes)
+            + net.span_weight_elems(i, j) * float(weight_bytes))
+
+
 def max_tile_rows(net: NetSpec, i: int, j: int, capacity: int,
                   batch: int = 1) -> int:
     """Largest t (output row-planes per step) whose footprint fits capacity.

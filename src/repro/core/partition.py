@@ -197,30 +197,60 @@ def optimal_partition(problem: PartitionProblem,
 # CNN problem (the paper)
 # --------------------------------------------------------------------------
 
+_FP32_BYTES = 4.0  # the repo's elem-denominated reference width
+
+
 @dataclasses.dataclass
 class CNNPartitionProblem:
-    """Paper §III-D: footprint = |DC(i,j)| + sum W, boundary = b * |L_i|."""
+    """Paper §III-D: footprint = |DC(i,j)| + sum W, boundary = b * |L_i|.
+
+    ``policy`` (optional, duck-typed — any object exposing
+    ``activation_bytes`` / ``weight_bytes`` / ``boundary_bytes``, i.e. a
+    ``repro.occam.quant.DtypePolicy``) makes both sides of the DP
+    byte-denominated while keeping the units fp32-equivalent elements
+    (bytes / 4), so ``capacity_elems`` and every serialized plan keep
+    meaning what they always did:
+
+    * footprints shrink by the activation/weight widths — an int8
+      closure packs 4x the rows into the same VMEM, so the fits set
+      grows and the chosen cuts genuinely move;
+    * boundary and residual charges scale by the boundary width — the
+      DP minimizes *bytes moved*, matching what a quantized boundary
+      actually ships.
+
+    ``policy=None`` is exactly the historical fp32 arithmetic (integral
+    footprints, elem charges).
+    """
 
     net: NetSpec
     capacity_elems: int
     batch: int = 1
+    policy: object = None
 
     @property
     def n_layers(self) -> int:
         return self.net.n_layers
 
     def boundary_cost(self, i: int) -> float:
-        return float(self.batch * self.net.map_elems(i))
+        elems = float(self.batch * self.net.map_elems(i))
+        if self.policy is None:
+            return elems
+        return elems * self.policy.boundary_bytes / _FP32_BYTES
 
     def footprint(self, i: int, j: int) -> float:
         """fp(i, j): batch-scaled closure + chip-resident filters — the
         one definition of the DP's feasibility quantity (shared with
         :class:`PartitionSweep`'s memo). Feature-map closures scale with
-        batch; filters are shared (Eqn. 6)."""
+        batch; filters are shared (Eqn. 6). Under a policy this is the
+        byte footprint in fp32-equivalent elems."""
         from .closure import span_closure_elems
 
-        return float(self.batch * span_closure_elems(self.net, i, j)
-                     + self.net.span_weight_elems(i, j))
+        closure = float(self.batch * span_closure_elems(self.net, i, j))
+        weights = float(self.net.span_weight_elems(i, j))
+        if self.policy is None:
+            return closure + weights
+        return (closure * self.policy.activation_bytes
+                + weights * self.policy.weight_bytes) / _FP32_BYTES
 
     def span_fits(self, i: int, j: int) -> bool:
         return self.footprint(i, j) <= self.capacity_elems
@@ -229,13 +259,16 @@ class CNNPartitionProblem:
         return self.net.residual_edges
 
     def residual_cost(self, s: int) -> float:
-        return float(self.batch * self.net.map_elems(s))
+        elems = float(self.batch * self.net.map_elems(s))
+        if self.policy is None:
+            return elems
+        return elems * self.policy.boundary_bytes / _FP32_BYTES
 
 
 def partition_cnn(net: NetSpec, capacity_elems: int, batch: int = 1,
-                  cost: str = "dram") -> PartitionResult:
-    return optimal_partition(CNNPartitionProblem(net, capacity_elems, batch),
-                             cost)
+                  cost: str = "dram", policy: object = None) -> PartitionResult:
+    return optimal_partition(
+        CNNPartitionProblem(net, capacity_elems, batch, policy), cost)
 
 
 def partition_transfers(net: NetSpec, boundaries: Sequence[int],
@@ -338,7 +371,7 @@ class _TabulatedCNNProblem(CNNPartitionProblem):
     instead of re-walking dependence closures per capacity."""
 
     def __init__(self, sweep: "PartitionSweep", capacity_elems: int):
-        super().__init__(sweep.net, capacity_elems, sweep.batch)
+        super().__init__(sweep.net, capacity_elems, sweep.batch, sweep.policy)
         self._sweep = sweep
 
     def span_fits(self, i: int, j: int) -> bool:
@@ -375,10 +408,11 @@ class PartitionSweep:
       fills without running the DP.
     """
 
-    def __init__(self, net: NetSpec, batch: int = 1):
+    def __init__(self, net: NetSpec, batch: int = 1, policy: object = None):
         self.net = net
         self.batch = batch
-        self._problem = CNNPartitionProblem(net, 0, batch)  # formula owner
+        self.policy = policy
+        self._problem = CNNPartitionProblem(net, 0, batch, policy)  # formula owner
         self._fp: dict[tuple[int, int], float] = {}
         self._results: dict[tuple[int, str], PartitionResult] = {}
         self._by_fits: dict[tuple[frozenset, str], PartitionResult] = {}
@@ -402,7 +436,10 @@ class PartitionSweep:
         thresholds). When no span fits at all, ``[vmem_elems]`` (the DP
         still partitions, in per-layer lower-bound mode)."""
         n = self.net.n_layers
-        caps = sorted({int(self.footprint(i, j))
+        # ceil, not trunc: a policy-scaled footprint can be fractional,
+        # and the threshold must be the smallest *integer* capacity the
+        # span fits at (identical to int() for the fp32 integral case)
+        caps = sorted({math.ceil(self.footprint(i, j))
                        for i in range(n) for j in range(i + 1, n + 1)
                        if self.footprint(i, j) <= vmem_elems})
         return caps or [int(vmem_elems)]

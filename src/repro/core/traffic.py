@@ -38,10 +38,27 @@ class TrafficCounter:
 
     reads: int = 0
     writes: int = 0
+    # byte twins: what the same transfers weigh on the wire. Engines
+    # maintain them through add_reads/add_writes with the plan's dtype
+    # width; fp32 paths keep bytes == 4 x elems exactly.
+    read_bytes: float = 0.0
+    write_bytes: float = 0.0
 
     @property
     def total(self) -> int:
         return self.reads + self.writes
+
+    @property
+    def total_bytes(self) -> float:
+        return self.read_bytes + self.write_bytes
+
+    def add_reads(self, elems: int, bytes_per_elem: float = 4.0) -> None:
+        self.reads += elems
+        self.read_bytes += elems * bytes_per_elem
+
+    def add_writes(self, elems: int, bytes_per_elem: float = 4.0) -> None:
+        self.writes += elems
+        self.write_bytes += elems * bytes_per_elem
 
     def add_scaled(self, per_image: "TrafficCounter", images: int) -> None:
         """Masked-lane accounting: accumulate ``images`` valid images'
@@ -51,6 +68,8 @@ class TrafficCounter:
         ``per_image x valid lanes`` instead of ``per_span x round size``."""
         self.reads += per_image.reads * images
         self.writes += per_image.writes * images
+        self.read_bytes += per_image.read_bytes * images
+        self.write_bytes += per_image.write_bytes * images
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,10 +98,36 @@ class TrafficReport:
     # tick_busy_fraction), set by Deployment.report() / Session.report()
     # when the serving runtime has timed ticks; None otherwise
     timing: object | None = None
+    # byte-denominated twins (dtype-aware accounting): per-elem widths of
+    # the two off-chip data classes. fp32 (the historical implicit dtype)
+    # is 4.0/4.0, making every *_bytes property exactly 4 x its elem
+    # twin; a plan with a quant policy stamps the policy's widths here.
+    boundary_bytes_per_elem: float = 4.0
+    filter_bytes_per_elem: float = 4.0
+    measured_read_bytes: float | None = None
+    measured_write_bytes: float | None = None
 
     @property
     def offchip_elems(self) -> float:
         return self.feature_elems + self.filter_elems
+
+    # --- byte twins ----------------------------------------------------
+    @property
+    def feature_bytes(self) -> float:
+        """Feature maps cross DRAM in the *boundary* dtype."""
+        return self.feature_elems * self.boundary_bytes_per_elem
+
+    @property
+    def filter_bytes(self) -> float:
+        return self.filter_elems * self.filter_bytes_per_elem
+
+    @property
+    def offchip_bytes(self) -> float:
+        return self.feature_bytes + self.filter_bytes
+
+    @property
+    def boundary_bytes(self) -> float:
+        return self.boundary_elems * self.boundary_bytes_per_elem
 
     @property
     def measured_elems(self) -> float | None:
@@ -91,25 +136,61 @@ class TrafficReport:
         return self.measured_reads + self.measured_writes
 
     @property
+    def measured_bytes(self) -> float | None:
+        if self.measured_read_bytes is None:
+            return None
+        return self.measured_read_bytes + self.measured_write_bytes
+
+    @property
     def measured_per_image(self) -> float | None:
         if self.measured_elems is None or not self.images:
             return None
         return self.measured_elems / self.images
 
     @property
+    def measured_bytes_per_image(self) -> float | None:
+        if self.measured_bytes is None or not self.images:
+            return None
+        return self.measured_bytes / self.images
+
+    @property
+    def matches_prediction_bytes(self) -> bool | None:
+        """model == machine in *bytes*: the dtype-weighted measurement
+        equals the dtype-weighted prediction. ``None`` until a byte
+        measurement is attached."""
+        per_image = self.measured_bytes_per_image
+        if per_image is None:
+            return None
+        return math.isclose(per_image, self.offchip_bytes, rel_tol=1e-9)
+
+    @property
     def matches_prediction(self) -> bool | None:
         """model == machine: measured per-image off-chip traffic equals the
-        prediction. ``None`` until a measurement is attached."""
+        prediction — in elements, and (when a byte measurement is
+        attached) in bytes too, so mixed-dtype runs cannot pass on elem
+        counts while shipping the wrong widths. ``None`` until a
+        measurement is attached."""
         per_image = self.measured_per_image
         if per_image is None:
             return None
-        return math.isclose(per_image, self.offchip_elems, rel_tol=1e-9)
+        ok = math.isclose(per_image, self.offchip_elems, rel_tol=1e-9)
+        in_bytes = self.matches_prediction_bytes
+        if in_bytes is not None:
+            ok = ok and in_bytes
+        return ok
 
     def with_measured(self, counter: TrafficCounter,
                       images: int) -> "TrafficReport":
-        """Attach a run's counted transfers (over ``images`` images)."""
+        """Attach a run's counted transfers (over ``images`` images).
+        Counters that only tracked elements (no byte twins) are taken as
+        fp32: bytes = 4 x elems."""
+        rb, wb = counter.read_bytes, counter.write_bytes
+        if rb == 0.0 and wb == 0.0 and counter.total:
+            rb, wb = counter.reads * 4.0, counter.writes * 4.0
         return dataclasses.replace(self, measured_reads=counter.reads,
                                    measured_writes=counter.writes,
+                                   measured_read_bytes=rb,
+                                   measured_write_bytes=wb,
                                    images=images)
 
 
@@ -130,10 +211,14 @@ def base_traffic(net: NetSpec, batch: int = 1) -> TrafficReport:
 
 
 def occam_traffic(net: NetSpec, capacity_elems: int, batch: int = 1,
-                  partition: PartitionResult | None = None) -> TrafficReport:
+                  partition: PartitionResult | None = None,
+                  policy: object = None) -> TrafficReport:
     """DP-optimal spans; off-chip only at span boundaries; filters amortized
-    to ~0 (asymptotic chip residence). Boundary maps also cross chips."""
-    part = partition or partition_cnn(net, capacity_elems, batch)
+    to ~0 (asymptotic chip residence). Boundary maps also cross chips.
+    ``policy`` (a ``repro.occam.quant.DtypePolicy``) stamps the report's
+    per-elem byte widths and steers the DP's byte-denominated fits."""
+    part = partition or partition_cnn(net, capacity_elems, batch,
+                                      policy=policy)
     # Score the boundary set with the canonical per-image formula rather
     # than trusting ``part.transfers`` — a partition may have been chosen
     # under another cost mode (e.g. "hops" for pipeline link traffic),
@@ -141,7 +226,12 @@ def occam_traffic(net: NetSpec, capacity_elems: int, batch: int = 1,
     # Oversized single layers (lower-bound mode) spill their own io anyway —
     # already counted by the DP base case.
     feat = partition_transfers(net, part.boundaries, batch=1)
-    return TrafficReport("occam", feat, 0.0, float(net.total_macs()), feat / 2)
+    widths = {}
+    if policy is not None:
+        widths = {"boundary_bytes_per_elem": policy.boundary_bytes,
+                  "filter_bytes_per_elem": policy.weight_bytes}
+    return TrafficReport("occam", feat, 0.0, float(net.total_macs()),
+                         feat / 2, **widths)
 
 
 def layer_fusion_traffic(net: NetSpec, capacity_elems: int, batch: int = 1,

@@ -200,27 +200,31 @@ TrafficCounter = traffic.TrafficCounter
 
 
 def count_span_reads(counter: TrafficCounter | None, net: NetSpec, a: int,
-                     b: int, batch: int = 1) -> None:
+                     b: int, batch: int = 1,
+                     bytes_per_elem: float = 4.0) -> None:
     """Off-chip reads to start SPAN(a, b): the span input streamed in once,
     plus residual sources read from DRAM by edges crossing INTO the span.
-    Shared by every engine so model==machine holds regardless of dispatch."""
+    Shared by every engine so model==machine holds regardless of dispatch.
+    ``bytes_per_elem`` is the boundary dtype's width (fp32 default) — the
+    counter's byte twins weigh what actually crossed DRAM."""
     if counter is None:
         return
-    counter.reads += batch * net.map_elems(a)
+    counter.add_reads(batch * net.map_elems(a), bytes_per_elem)
     for (s, t) in net.residual_edges:
         if s < a < t <= b:
-            counter.reads += batch * net.map_elems(s)
+            counter.add_reads(batch * net.map_elems(s), bytes_per_elem)
 
 
 def count_span_writes(counter: TrafficCounter | None, net: NetSpec, b: int,
-                      spilled, batch: int = 1) -> None:
+                      spilled, batch: int = 1,
+                      bytes_per_elem: float = 4.0) -> None:
     """Off-chip writes to finish a span: its output map plus any spilled
     interior residual sources."""
     if counter is None:
         return
-    counter.writes += batch * net.map_elems(b)
+    counter.add_writes(batch * net.map_elems(b), bytes_per_elem)
     for m in spilled:
-        counter.writes += batch * net.map_elems(m)
+        counter.add_writes(batch * net.map_elems(m), bytes_per_elem)
 
 
 def occam_forward(params: list[dict], x: jax.Array, net: NetSpec,

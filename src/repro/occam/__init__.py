@@ -49,9 +49,10 @@ rewrites. The legacy one-call entry points
 (``repro.models.api.span_executor`` / ``stap_executor``) are deprecated
 shims over this surface. See ``docs/deployment_api.md``.
 """
-from . import registry, serve
+from . import quant, registry, serve
 from .deploy import Deployment, ServingStats, Session, Ticket
 from .fleet import Fleet, load_fleet
+from .quant import POLICIES, DtypePolicy, resolve_policies, resolve_policy
 from .place import PIPELINE, SINGLE, Placement
 from .plan import (PLAN_FORMAT_VERSION, Plan, ServingDefaults, load_plan,
                    plan, plan_from_dict, plan_from_json)
@@ -72,17 +73,18 @@ from .calibrate.cost_model import calibrate
 
 __all__ = [
     "AUTO", "FRONTIER_FORMAT_VERSION", "OBJECTIVES", "PIPELINE",
-    "PLAN_FORMAT_VERSION", "SINGLE",
+    "PLAN_FORMAT_VERSION", "POLICIES", "SINGLE",
     "AdmissionError", "AsyncEngine", "AsyncTicket",
     "BackendError", "Candidate", "ChipAssignment", "CostModel",
-    "Deployment", "EngineSpec", "Fleet",
+    "Deployment", "DtypePolicy", "EngineSpec", "Fleet",
     "Frontier", "Placement", "Plan", "RouteContext", "Router",
     "ServingDefaults", "ServingStats", "Session", "StageProfile",
     "TickTimers", "Ticket", "autoplan",
     "backend_names", "calibrate", "frontier_from_dict",
     "frontier_from_json", "get_engine", "load_fleet", "load_frontier",
     "load_plan", "pack_replicas", "plan",
-    "plan_from_dict", "plan_from_json", "register_engine",
+    "plan_from_dict", "plan_from_json", "quant", "register_engine",
     "registered_engines", "registry", "rescore_frontier",
+    "resolve_policies", "resolve_policy",
     "resolve_spmd_engine", "serve", "unregister_engine",
 ]

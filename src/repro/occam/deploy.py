@@ -83,11 +83,16 @@ class Deployment:
         self.devices = devices
         self.interpret = interpret
         # Forced backends re-route at compile time; BackendError surfaces
-        # any span the engine cannot take.
+        # any span the engine cannot take. The plan's dtype policy rides
+        # along so the forced engine's declared width envelope is honored
+        # (spans compute in policy.compute — int8 boundaries dequantize
+        # at span entry).
+        quant = placement.plan.quant
         self.routes = self.plan.routes if backend == registry.AUTO else \
             span_engine.plan_routes(self.plan.net, self.plan.partition,
                                     backend=backend,
-                                    out_rows=self.plan.out_rows)
+                                    out_rows=self.plan.out_rows,
+                                    dtype=quant.compute if quant else None)
         self.counter = TrafficCounter()
         self._images = 0
         # set by Candidate.deploy: where this deployment sits on a
@@ -122,7 +127,7 @@ class Deployment:
                 self.plan.net, self.plan.partition, batch,
                 self.placement.microbatch, plan=self.placement.stap,
                 mesh=self.mesh, devices=self.devices, routes=self.routes,
-                out_rows=self.plan.out_rows)
+                out_rows=self.plan.out_rows, policy=self.plan.quant)
             self._pipes[batch] = pipe
         return pipe
 
@@ -142,7 +147,7 @@ class Deployment:
                 plan=self.placement.stap, mesh=self.mesh,
                 devices=self.devices, routes=self.routes,
                 out_rows=self.plan.out_rows,
-                packing=self.placement.packing)
+                packing=self.placement.packing, policy=self.plan.quant)
             self._rings[microbatch] = ring
         return ring
 
@@ -153,12 +158,16 @@ class Deployment:
         if self._per_image_cache is None:
             from repro.runtime.stap_pipeline import plan_span_stages
 
+            quant = self.plan.quant
+            bpe = quant.boundary_bytes if quant is not None else 4.0
             per = TrafficCounter()
             for st in plan_span_stages(self.plan.net, self.plan.partition,
                                        routes=self.routes):
                 a, b = st.span
-                cnn.count_span_reads(per, self.plan.net, a, b, 1)
-                cnn.count_span_writes(per, self.plan.net, b, st.spill, 1)
+                cnn.count_span_reads(per, self.plan.net, a, b, 1,
+                                     bytes_per_elem=bpe)
+                cnn.count_span_writes(per, self.plan.net, b, st.spill, 1,
+                                      bytes_per_elem=bpe)
             self._per_image_cache = per
         return self._per_image_cache
 
@@ -179,7 +188,7 @@ class Deployment:
             return span_engine.execute_partition(
                 params, xs, plan.net, plan.partition, counter=None,
                 interpret=self.interpret, routes=self.routes,
-                out_rows=plan.out_rows)
+                out_rows=plan.out_rows, policy=plan.quant)
 
         cached = (jax.jit(fn), counts)
         self._steps[round_batch] = cached
@@ -249,11 +258,13 @@ class Deployment:
         """Execute one batch. ``counter``, if given, also receives this
         call's transfers (the deployment always accumulates its own)."""
         r0, w0 = self.counter.reads, self.counter.writes
+        rb0, wb0 = self.counter.read_bytes, self.counter.write_bytes
         if self.kind == SINGLE:
             y = span_engine.execute_partition(
                 params, xs, self.plan.net, self.plan.partition,
                 counter=self.counter, interpret=self.interpret,
-                routes=self.routes, out_rows=self.plan.out_rows)
+                routes=self.routes, out_rows=self.plan.out_rows,
+                policy=self.plan.quant)
             self._images += xs.shape[0] if xs.ndim == 4 else 1
         else:
             if xs.ndim != 4:
@@ -265,6 +276,8 @@ class Deployment:
         if counter is not None:
             counter.reads += self.counter.reads - r0
             counter.writes += self.counter.writes - w0
+            counter.read_bytes += self.counter.read_bytes - rb0
+            counter.write_bytes += self.counter.write_bytes - wb0
         return y
 
     # -- observability ------------------------------------------------------
@@ -355,6 +368,9 @@ class Deployment:
             "predicted_transfers_per_image": self.plan.predicted_transfers,
             "images_run": self._images,
             "measured_transfers": self.counter.total,
+            "measured_bytes": self.counter.total_bytes,
+            "quant": (self.plan.quant.to_dict()
+                      if self.plan.quant is not None else None),
         }
         if self.kind == PIPELINE:
             d["replicas"] = list(self.placement.replicas)
@@ -461,9 +477,11 @@ class Session:
             # session at one geometry drives the same compiled tick)
             self.timers = self._ring.timers
             self._state = self._ring.init_state()
+            # the all-masked drain round, in the ring's payload dtype
+            # (quantized rings carry e.g. int8 slots)
             self._empty_round = jnp.zeros(
                 (self._ring.round_width, self.microbatch,
-                 self._ring.payload_width))
+                 self._ring.payload_width), self._ring._payload_dtype)
             self._masks = [np.zeros(self._ring.round_width, dtype=bool)
                            for _ in range(self.ring_depth)]
         else:

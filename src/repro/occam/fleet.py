@@ -40,6 +40,12 @@ class Fleet:
     roofline-bounded by boundary-payload and off-chip traffic.
     ``macs_per_s``: per-chip compute rate used to put the MAC-count stage
     model in seconds (default: the paper's scaled slice).
+    ``dtype_policy``: the dtype axis ``autoplan`` sweeps — ``None`` (the
+    implicit fp32 policy), a preset name (``"int8"``), an
+    ``occam.quant.DtypePolicy`` (or its dict form), or a sequence of
+    those: each policy runs its own byte-denominated capacity sweep and
+    the Pareto frontier trades the candidates' traffic bytes against
+    accuracy headroom (``quant_cost``).
     """
 
     chips: int
@@ -47,6 +53,7 @@ class Fleet:
     link_elems_per_s: float | None = None
     hbm_elems_per_s: float | None = None
     macs_per_s: float = DEFAULT_MACS_PER_S
+    dtype_policy: object = None
 
     def __post_init__(self) -> None:
         if self.chips < 1:
@@ -59,6 +66,11 @@ class Fleet:
                 raise ValueError(f"{field} must be positive when given")
         if self.macs_per_s <= 0:
             raise ValueError("macs_per_s must be positive")
+        # fail fast on an unresolvable policy spec (quant.policy is as
+        # dependency-free as this module — no jax behind the import)
+        from .quant import resolve_policies
+
+        resolve_policies(self.dtype_policy)
 
     def max_replicas(self, n_stages: int, packing: str = "rect") -> int:
         """Widest replica axis an ``n_stages``-stage pipeline can hold
@@ -76,13 +88,18 @@ class Fleet:
     # -- serialization ------------------------------------------------------
 
     def to_dict(self) -> dict:
-        return {
+        d = {
             "chips": self.chips,
             "vmem_elems": self.vmem_elems,
             "link_elems_per_s": self.link_elems_per_s,
             "hbm_elems_per_s": self.hbm_elems_per_s,
             "macs_per_s": self.macs_per_s,
         }
+        # written only when set, so pre-quant readers of fleet documents
+        # (and the plan schema's embedded fleet blocks) see no new key
+        if self.dtype_policy is not None:
+            d["dtype_policy"] = _policy_spec_to_json(self.dtype_policy)
+        return d
 
     def to_json(self, indent: int | None = 2) -> str:
         return json.dumps(self.to_dict(), indent=indent)
@@ -101,11 +118,24 @@ class Fleet:
             hbm_elems_per_s=(None if d.get("hbm_elems_per_s") is None
                              else float(d["hbm_elems_per_s"])),
             macs_per_s=float(d.get("macs_per_s", DEFAULT_MACS_PER_S)),
+            dtype_policy=d.get("dtype_policy"),
         )
 
     @classmethod
     def from_json(cls, doc: str) -> "Fleet":
         return cls.from_dict(json.loads(doc))
+
+
+def _policy_spec_to_json(spec):
+    """A JSON-serializable form of a ``dtype_policy`` spec: preset names
+    stay names, policies become their dict form, sequences map through.
+    ``Fleet.from_dict`` round-trips the JSON form directly —
+    ``occam.quant.resolve_policies`` accepts every shape produced here."""
+    if spec is None or isinstance(spec, (str, dict)):
+        return spec
+    if hasattr(spec, "to_dict"):
+        return spec.to_dict()
+    return [_policy_spec_to_json(item) for item in spec]
 
 
 def load_fleet(path: str) -> Fleet:

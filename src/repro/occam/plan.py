@@ -31,10 +31,16 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
 # ignore it, older v3 documents load as t=1). v4 adds the optional
 # "calibration" block (a measured ``occam.calibrate.CostModel`` — the
 # rates ``Frontier.rescore`` re-ranks under; absent means uncalibrated,
-# and v1-v3 documents load with ``calibration=None``). ``load_plan``
-# migrates earlier payloads transparently.
-PLAN_FORMAT_VERSION = 4
-_READABLE_VERSIONS = (1, 2, 3, 4)
+# and v1-v3 documents load with ``calibration=None``). v5 adds the
+# optional "quant" block (the ``occam.quant.DtypePolicy`` the plan was
+# searched and must execute under; absent means the implicit fp32
+# policy, and v1-v4 documents load with ``quant=None``. A *non-null*
+# quant key on a v4-or-earlier-stamped document is rejected: a
+# quantized plan mislabeled with an old version would silently execute
+# at the wrong widths). ``load_plan`` migrates earlier payloads
+# transparently.
+PLAN_FORMAT_VERSION = 5
+_READABLE_VERSIONS = (1, 2, 3, 4, 5)
 
 _PREDICTED_FIELDS = ("scheme", "feature_elems", "filter_elems",
                      "compute_macs", "boundary_elems")
@@ -90,6 +96,9 @@ class Plan:
     # measured cost rates the plan was last calibrated with (v4):
     # an ``occam.calibrate.CostModel``, or None = uncalibrated
     calibration: object | None = None
+    # dtype policy the plan was searched under (v5): an
+    # ``occam.quant.DtypePolicy``, or None = the implicit fp32 policy
+    quant: object | None = None
 
     # -- introspection ------------------------------------------------------
 
@@ -169,6 +178,8 @@ class Plan:
             "out_rows": self.out_rows,
             "calibration": (self.calibration.to_dict()
                             if self.calibration is not None else None),
+            "quant": (self.quant.to_dict()
+                      if self.quant is not None else None),
         }
 
     def to_json(self, indent: int | None = 2) -> str:
@@ -181,7 +192,8 @@ class Plan:
 
 def plan(net: NetSpec, capacity_elems: int, *, batch: int = 1,
          round_batch: int | None = None,
-         fleet: Fleet | None = None, out_rows: int = 1) -> Plan:
+         fleet: Fleet | None = None, out_rows: int = 1,
+         dtype_policy=None) -> Plan:
     """Run the DP + engine routing for ``net`` under ``capacity_elems``.
 
     ``round_batch`` records a serving-round size with the plan (schema
@@ -196,15 +208,26 @@ def plan(net: NetSpec, capacity_elems: int, *, batch: int = 1,
     (``closure.span_footprint_elems(..., out_rows=)``), and
     ``occam.autoplan`` picks the largest t the fleet's capacity fits
     instead of taking it as an argument.
+    ``dtype_policy`` makes dtype a planning axis (schema v5): a
+    ``occam.quant.DtypePolicy`` (or preset name like ``"int8"``) under
+    which the DP charges boundary *bytes* and footprints shrink by the
+    narrower widths — a quantized boundary can genuinely move the cut.
+    ``None`` is the implicit fp32 policy.
     """
     if out_rows < 1:
         raise ValueError(f"out_rows must be >= 1, got {out_rows}")
-    part = partition_cnn(net, capacity_elems, batch=batch)
-    routes = span_engine.plan_routes(net, part, out_rows=out_rows)
-    predicted = occam_traffic(net, capacity_elems, batch, part)
+    from .quant import resolve_policy
+
+    policy = resolve_policy(dtype_policy)
+    part = partition_cnn(net, capacity_elems, batch=batch, policy=policy)
+    routes = span_engine.plan_routes(
+        net, part, out_rows=out_rows,
+        dtype=policy.compute if policy is not None else None)
+    predicted = occam_traffic(net, capacity_elems, batch, part,
+                              policy=policy)
     serving = ServingDefaults(round_batch, part.n_spans)
     return Plan(net, capacity_elems, batch, part, routes, predicted,
-                serving, fleet, out_rows)
+                serving, fleet, out_rows, quant=policy)
 
 
 def plan_from_dict(d: dict) -> Plan:
@@ -239,9 +262,29 @@ def plan_from_dict(d: dict) -> Plan:
         from .calibrate.cost_model import CostModel
 
         calibration = CostModel.from_dict(d["calibration"])
+    # v5 migration: no quant block existed before v5 — earlier plans are
+    # implicitly fp32. A non-null quant key on an old-stamped document is
+    # a mislabeled artifact, not a migration case: reject it.
+    quant = None
+    if version >= 5 and d.get("quant"):
+        from .quant import DtypePolicy
+
+        quant = DtypePolicy.from_dict(d["quant"])
+    elif version < 5 and d.get("quant") is not None:
+        raise ValueError(
+            f"plan document stamped version {version} carries a 'quant' "
+            f"block; dtype policies require schema version 5")
+    if quant is not None:
+        # predicted serializes elem counts only (_PREDICTED_FIELDS); the
+        # byte widths are a pure function of the policy — re-stamp them
+        # so byte-denominated checks survive the round trip.
+        predicted = dataclasses.replace(
+            predicted,
+            boundary_bytes_per_elem=quant.boundary_bytes,
+            filter_bytes_per_elem=quant.weight_bytes)
     return Plan(net, int(d["capacity_elems"]), int(d["batch"]), part,
                 routes, predicted, serving, fleet,
-                int(d.get("out_rows", 1)), calibration)
+                int(d.get("out_rows", 1)), calibration, quant)
 
 
 def plan_from_json(doc: str) -> Plan:

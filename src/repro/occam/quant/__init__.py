@@ -1,0 +1,51 @@
+"""``occam.quant`` — dtype as a first-class planning axis.
+
+Three small modules make quantization an end-to-end planning decision
+instead of an execution afterthought:
+
+- :mod:`~repro.occam.quant.policy` — :class:`DtypePolicy` (weights /
+  activations / boundary dtypes + per-tensor int8 scale), the named
+  presets (``fp32`` / ``bf16`` / ``int8``), and the plan's schema-v5
+  ``quant`` block serialization. Dependency-free.
+- :mod:`~repro.occam.quant.footprint` — byte-denominated span
+  footprints and the fp32-equivalent-elems conversion the DP charges
+  with.
+- :mod:`~repro.occam.quant.casting` — the jax-side quantize /
+  dequantize / fake-quant twins the engines call at span boundaries.
+
+``Fleet(dtype_policy=...)`` sweeps policies through ``autoplan`` into
+the Pareto frontier; a chosen plan carries its policy, and every
+execution surface (single-device executor, ``StapPipeline`` /
+``StapRing``, serving sessions) casts at exactly the declared
+boundaries. ``casting`` imports jax lazily via its module; planning
+paths never touch it.
+"""
+from .footprint import (  # noqa: F401
+    effective_footprint_elems,
+    report_widths,
+    span_footprint_bytes,
+)
+from .policy import (  # noqa: F401
+    DTYPE_BYTES,
+    FP32_BYTES,
+    POLICIES,
+    QUANT_FORMAT_VERSION,
+    DtypePolicy,
+    dtype_bytes,
+    resolve_policies,
+    resolve_policy,
+)
+
+__all__ = [
+    "DTYPE_BYTES",
+    "FP32_BYTES",
+    "POLICIES",
+    "QUANT_FORMAT_VERSION",
+    "DtypePolicy",
+    "dtype_bytes",
+    "effective_footprint_elems",
+    "report_widths",
+    "resolve_policies",
+    "resolve_policy",
+    "span_footprint_bytes",
+]

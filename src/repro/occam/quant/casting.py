@@ -1,0 +1,75 @@
+"""Runtime casting twins of :class:`~repro.occam.quant.policy.DtypePolicy`.
+
+The planner talks in dtype *names* and byte widths; the engines need
+actual casts. Three operations cover every hook site:
+
+- :func:`quantize` — fp32 compute values -> the boundary/storage dtype
+  (the form a map takes in DRAM, in a ring slot, or on the wire);
+- :func:`dequantize` — storage dtype -> the span core's compute dtype;
+- :func:`fake_quant` — the round trip in one call, for paths that keep
+  fp32 buffers but must *see* the quantized values (the single-device
+  executor's DRAM emulation, weight casting at parameter-flatten time).
+
+Integer quantization is per-tensor symmetric: ``q = round(clip(x /
+scale, -127, 127))``. The round trip is idempotent — re-quantizing an
+already-dequantized tensor reproduces the same codes — so a map that
+crosses several pipeline hops pays the rounding error exactly once.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_JNP_DTYPES = {
+    "float32": jnp.float32,
+    "bfloat16": jnp.bfloat16,
+    "float16": jnp.float16,
+    "int8": jnp.int8,
+}
+
+
+def jnp_dtype(name: str):
+    """The jnp dtype for a policy dtype name."""
+    try:
+        return _JNP_DTYPES[name]
+    except KeyError:
+        raise ValueError(f"unknown policy dtype {name!r}; "
+                         f"known: {sorted(_JNP_DTYPES)}")
+
+
+def quantize(x, dtype: str, scale: float = 0.05):
+    """Cast compute values into the storage/transport dtype."""
+    if dtype == "int8":
+        q = jnp.round(x / scale)
+        return jnp.clip(q, -127.0, 127.0).astype(jnp.int8)
+    return x.astype(jnp_dtype(dtype))
+
+
+def dequantize(q, dtype: str, scale: float = 0.05,
+               compute: str = "float32"):
+    """Cast storage/transport values back to the compute dtype."""
+    out = jnp_dtype(compute)
+    if dtype == "int8":
+        return q.astype(out) * jnp.asarray(scale, out)
+    return q.astype(out)
+
+
+def fake_quant(x, dtype: str, scale: float = 0.05):
+    """Quantize-dequantize round trip, preserving ``x``'s dtype — the
+    values a quantized buffer would hold, in an fp32-shaped buffer."""
+    if dtype == "float32":
+        return x
+    restore = str(x.dtype)
+    return dequantize(quantize(x, dtype, scale), dtype, scale,
+                      compute=restore)
+
+
+def quantize_params(params, policy):
+    """Apply the policy's *weight* dtype to a parameter pytree, keeping
+    the storage dtype the engines expect (fake-quant: the numerics are
+    the declared dtype's, the buffers stay the compute dtype)."""
+    import jax
+
+    if policy is None or policy.weights == "float32":
+        return params
+    return jax.tree_util.tree_map(
+        lambda w: fake_quant(w, policy.weights, policy.scale), params)

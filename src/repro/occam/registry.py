@@ -75,6 +75,12 @@ class EngineSpec:
     # body executes its spans in a pipeline (chains allowed).
     make_spmd_body: Callable | None = None
     spmd_fallback: str | None = None
+    # Activation dtype names this engine's span body can execute
+    # (``None``: any). Checked by ``route_span`` before ``accepts`` —
+    # auto dispatch skips a non-matching engine, a forced backend raises
+    # — so an engine declares its width envelope once instead of every
+    # ``accepts`` re-implementing the same dtype test.
+    dtypes: tuple[str, ...] | None = None
 
 
 def resolve_spmd_engine(name: str) -> "EngineSpec":
@@ -106,6 +112,7 @@ def register_engine(name: str, *, priority: int,
                     spmd_capable: bool = False,
                     make_spmd_body: Callable | None = None,
                     spmd_fallback: str | None = None,
+                    dtypes: tuple[str, ...] | None = None,
                     overwrite: bool = False) -> EngineSpec:
     """Register (or, with ``overwrite=True``, replace) a span engine."""
     if name == AUTO:
@@ -114,7 +121,8 @@ def register_engine(name: str, *, priority: int,
         raise ValueError(f"engine {name!r} already registered "
                          "(pass overwrite=True to replace it)")
     spec = EngineSpec(name, priority, accepts, run, description,
-                      spmd_capable, make_spmd_body, spmd_fallback)
+                      spmd_capable, make_spmd_body, spmd_fallback,
+                      tuple(dtypes) if dtypes is not None else None)
     _ENGINES[name] = spec
     return spec
 
@@ -152,13 +160,25 @@ def route_span(net, a: int, b: int, ctx: RouteContext | None = None, *,
     ctx = ctx or RouteContext()
     if backend != AUTO:
         spec = get_engine(backend)
+        if not _dtype_ok(spec, ctx):
+            raise BackendError(
+                f"backend {backend!r} cannot take span ({a}, {b}): dtype "
+                f"{ctx.dtype!r} unsupported (declares {spec.dtypes})")
         ok, reason = spec.accepts(net, a, b, ctx)
         if not ok:
             raise BackendError(
                 f"backend {backend!r} cannot take span ({a}, {b}): {reason}")
         return spec.name, reason
     for spec in registered_engines():
+        if not _dtype_ok(spec, ctx):
+            continue
         ok, reason = spec.accepts(net, a, b, ctx)
         if ok:
             return spec.name, reason
     raise BackendError(f"no registered engine accepts span ({a}, {b})")
+
+
+def _dtype_ok(spec: EngineSpec, ctx: RouteContext) -> bool:
+    """Does the engine's declared width envelope admit the span's dtype?"""
+    return (ctx.dtype is None or spec.dtypes is None
+            or ctx.dtype in spec.dtypes)

@@ -61,7 +61,10 @@ OBJECTIVES = ("throughput", "latency", "traffic")
 # then toward a deterministic structural tail so exact score ties never
 # depend on enumeration order (stable picks across runs and re-scores)
 def _det(c: "Candidate") -> tuple:
-    return (c.kind, c.replicas, tuple(c.plan.boundaries))
+    # quant_cost leads: on an exact score tie the full-precision
+    # candidate wins deterministically over its quantized twins
+    return (c.quant_cost, c.traffic_bytes, c.kind, c.replicas,
+            tuple(c.plan.boundaries))
 
 
 _OBJECTIVE_KEYS = {
@@ -96,6 +99,12 @@ class Candidate:
     period: float
     fill_latency: float
     chips: int
+    # byte-denominated twin of ``traffic`` (0.0 = derive as fp32) and the
+    # plan's ordinal accuracy-headroom cost (0 = exact fp32): the two
+    # extra Pareto axes a ``Fleet(dtype_policy=...)`` sweep trades —
+    # cheaper bytes never silently evict the full-precision candidate
+    traffic_bytes: float = 0.0
+    quant_cost: int = 0
     _frontier: "Frontier | None" = dataclasses.field(
         default=None, repr=False, compare=False)
     _deployments: dict = dataclasses.field(
@@ -161,7 +170,9 @@ class Candidate:
 
     def scores(self) -> dict:
         return {"traffic": self.traffic, "period": self.period,
-                "fill_latency": self.fill_latency, "chips": self.chips}
+                "fill_latency": self.fill_latency, "chips": self.chips,
+                "traffic_bytes": self.traffic_bytes,
+                "quant_cost": self.quant_cost}
 
     def to_dict(self) -> dict:
         return {
@@ -180,16 +191,27 @@ class Candidate:
                    stage_times=tuple(float(t) for t in d["stage_times"]),
                    traffic=float(s["traffic"]), period=float(s["period"]),
                    fill_latency=float(s["fill_latency"]),
-                   chips=int(s["chips"]))
+                   chips=int(s["chips"]),
+                   # pre-quant frontier documents carry neither key:
+                   # fp32 bytes and zero accuracy cost
+                   traffic_bytes=float(
+                       s.get("traffic_bytes", s["traffic"] * 4.0)),
+                   quant_cost=int(s.get("quant_cost", 0)))
 
 
 def _dominates(a: Candidate, b: Candidate) -> bool:
-    """Pareto order over (traffic, period, fill_latency, chips): a is at
-    least as good everywhere and strictly better somewhere."""
-    le = (a.traffic <= b.traffic and a.period <= b.period
-          and a.fill_latency <= b.fill_latency and a.chips <= b.chips)
-    lt = (a.traffic < b.traffic or a.period < b.period
-          or a.fill_latency < b.fill_latency or a.chips < b.chips)
+    """Pareto order over (traffic, traffic_bytes, period, fill_latency,
+    chips, quant_cost): a is at least as good everywhere and strictly
+    better somewhere. ``quant_cost`` keeps the exact-fp32 candidate
+    alive against its cheaper-in-bytes quantized twins."""
+    le = (a.traffic <= b.traffic and a.traffic_bytes <= b.traffic_bytes
+          and a.period <= b.period
+          and a.fill_latency <= b.fill_latency and a.chips <= b.chips
+          and a.quant_cost <= b.quant_cost)
+    lt = (a.traffic < b.traffic or a.traffic_bytes < b.traffic_bytes
+          or a.period < b.period
+          or a.fill_latency < b.fill_latency or a.chips < b.chips
+          or a.quant_cost < b.quant_cost)
     return le and lt
 
 
@@ -336,15 +358,18 @@ def load_frontier(path: str) -> Frontier:
 
 def _make_plan(net: NetSpec, capacity: int, batch: int,
                part: PartitionResult, fleet: Fleet,
-               out_rows: int = 1) -> Plan:
-    """A schema-v3 Plan from an already-computed partition (the sweep
+               out_rows: int = 1, policy=None) -> Plan:
+    """A schema-v3/v5 Plan from an already-computed partition (the sweep
     never calls ``occam.plan`` — that would re-run the DP)."""
     from repro.runtime import span_engine
 
-    routes = span_engine.plan_routes(net, part, out_rows=out_rows)
-    predicted = occam_traffic(net, capacity, batch, part)
+    routes = span_engine.plan_routes(
+        net, part, out_rows=out_rows,
+        dtype=policy.compute if policy is not None else None)
+    predicted = occam_traffic(net, capacity, batch, part, policy=policy)
     return Plan(net, capacity, batch, part, routes, predicted,
-                ServingDefaults(None, part.n_spans), fleet, out_rows)
+                ServingDefaults(None, part.n_spans), fleet, out_rows,
+                quant=policy)
 
 
 _MAX_AUTO_TILE = 8
@@ -405,6 +430,11 @@ def _score(net: NetSpec, plan: Plan, fleet: Fleet, kind: str,
     """
     times_s = [t / fleet.macs_per_s for t in stage_times]
     traffic = plan.predicted.offchip_elems
+    traffic_bytes = plan.predicted.offchip_bytes
+    policy = plan.quant
+    # bandwidth rates are fp32-equivalent elements/s; a narrower
+    # boundary ships fewer bytes through the same rate
+    bnd_scale = (policy.boundary_bytes / 4.0) if policy is not None else 1.0
     batch = plan.batch
     if kind == SINGLE:
         period = sum(times_s)                      # one chip, spans in turn
@@ -413,7 +443,8 @@ def _score(net: NetSpec, plan: Plan, fleet: Fleet, kind: str,
         # single chip: span-boundary traffic is DRAM write+read — the
         # whole per-image quantity streams through this chip's HBM
         if fleet.hbm_elems_per_s is not None:
-            period = max(period, traffic / fleet.hbm_elems_per_s)
+            period = max(period,
+                         (traffic_bytes / 4.0) / fleet.hbm_elems_per_s)
     else:
         bottleneck = max(t / r for t, r in zip(times_s, replicas))
         period = bottleneck                        # 1 / closed-form thr
@@ -431,12 +462,14 @@ def _score(net: NetSpec, plan: Plan, fleet: Fleet, kind: str,
         if fleet.link_elems_per_s is not None:
             from repro.runtime.stap_pipeline import payload_spec
 
-            link = max((payload_spec(net, b).elems / fleet.link_elems_per_s
+            link = max((payload_spec(net, b).elems * bnd_scale
+                        / fleet.link_elems_per_s
                         for b in plan.boundaries), default=0.0)
             period = max(period, link)
     return Candidate(plan, kind, replicas, stage_times,
                      traffic=traffic, period=period, fill_latency=fill,
-                     chips=chips)
+                     chips=chips, traffic_bytes=traffic_bytes,
+                     quant_cost=policy.quant_cost if policy else 0)
 
 
 def autoplan(net: NetSpec, fleet: Fleet, *,
@@ -472,55 +505,71 @@ def autoplan(net: NetSpec, fleet: Fleet, *,
     from repro.runtime.stap_pipeline import (model_stage_times,
                                              plan_span_stages)
 
-    sweep = PartitionSweep(net, batch)
-    swept = sweep.sweep(fleet.vmem_elems)
-
-    # distinct partitions only — keep the LARGEST capacity achieving
-    # each boundary set (swept ascending, last wins): traffic is
-    # identical by construction, but the per-span fits flags grow with
-    # capacity and drive engine routing — the deployed chip really holds
-    # fleet.vmem_elems, so a span it can hold must not ship flagged as
-    # an oversized-lower-bound (oracle-routed) span
-    by_boundaries: dict[tuple, tuple[int, PartitionResult]] = {}
-    for pt in swept:
-        by_boundaries[tuple(pt.result.boundaries)] = \
-            (pt.capacity_elems, pt.result)
-
-    # pipeline candidates pay boundary traffic as link hops, not DRAM
-    # round-trips, so the hop-count DP (cost="hops") can prefer cuts the
-    # DRAM objective rejects — sweep it too (footprint memo is shared;
-    # only genuinely new fits-sets run the DP) and score any partitions
-    # the DRAM sweep did not already find as pipeline-only candidates
-    hop_only: dict[tuple, tuple[int, PartitionResult]] = {}
-    if fleet.chips > 1:
-        for pt in sweep.sweep(fleet.vmem_elems, cost="hops"):
-            key = tuple(pt.result.boundaries)
-            if key not in by_boundaries:
-                hop_only[key] = (pt.capacity_elems, pt.result)
+    from .quant import resolve_policies
 
     candidates: list[Candidate] = []
-    for source in (by_boundaries, hop_only):
-        for capacity, part in source.values():
-            t = (_pick_out_rows(net, capacity, batch, part)
-                 if out_rows == "auto" else int(out_rows))
-            plan = _make_plan(net, capacity, batch, part, fleet, t)
-            stages = plan_span_stages(net, part, routes=plan.routes)
-            times = model_stage_times(net, stages)
-            s = len(stages)
-            if source is by_boundaries:
-                candidates.append(_score(net, plan, fleet, SINGLE,
-                                         (1,) * s, times))
-            if fleet.max_replicas(s, packing="sum") >= 1:
-                for reps in _replica_vectors(times, fleet, harmonize):
-                    candidates.append(_score(net, plan, fleet, PIPELINE,
-                                             reps, times))
+    stats = {"capacities_swept": 0, "dp_runs": 0, "dp_runs_hops": 0,
+             "partitions": 0, "policies_swept": 0}
+    # the dtype axis: each policy runs its own byte-denominated capacity
+    # sweep (a narrower closure fits more layers per span — the fits set
+    # genuinely differs), and its candidates join one shared Pareto pool
+    for policy in resolve_policies(fleet.dtype_policy):
+        stats["policies_swept"] += 1
+        sweep = PartitionSweep(net, batch, policy=policy)
+        swept = sweep.sweep(fleet.vmem_elems)
+
+        # distinct partitions only — keep the LARGEST capacity achieving
+        # each boundary set (swept ascending, last wins): traffic is
+        # identical by construction, but the per-span fits flags grow
+        # with capacity and drive engine routing — the deployed chip
+        # really holds fleet.vmem_elems, so a span it can hold must not
+        # ship flagged as an oversized-lower-bound (oracle-routed) span
+        by_boundaries: dict[tuple, tuple[int, PartitionResult]] = {}
+        for pt in swept:
+            by_boundaries[tuple(pt.result.boundaries)] = \
+                (pt.capacity_elems, pt.result)
+
+        # pipeline candidates pay boundary traffic as link hops, not
+        # DRAM round-trips, so the hop-count DP (cost="hops") can prefer
+        # cuts the DRAM objective rejects — sweep it too (footprint memo
+        # is shared; only genuinely new fits-sets run the DP) and score
+        # any partitions the DRAM sweep did not already find as
+        # pipeline-only candidates
+        hop_only: dict[tuple, tuple[int, PartitionResult]] = {}
+        if fleet.chips > 1:
+            for pt in sweep.sweep(fleet.vmem_elems, cost="hops"):
+                key = tuple(pt.result.boundaries)
+                if key not in by_boundaries:
+                    hop_only[key] = (pt.capacity_elems, pt.result)
+
+        for source in (by_boundaries, hop_only):
+            for capacity, part in source.values():
+                t = (_pick_out_rows(net, capacity, batch, part)
+                     if out_rows == "auto" else int(out_rows))
+                plan = _make_plan(net, capacity, batch, part, fleet, t,
+                                  policy=policy)
+                stages = plan_span_stages(net, part, routes=plan.routes)
+                times = model_stage_times(net, stages)
+                s = len(stages)
+                if source is by_boundaries:
+                    candidates.append(_score(net, plan, fleet, SINGLE,
+                                             (1,) * s, times))
+                if fleet.max_replicas(s, packing="sum") >= 1:
+                    for reps in _replica_vectors(times, fleet, harmonize):
+                        candidates.append(_score(net, plan, fleet,
+                                                 PIPELINE, reps, times))
+        stats["capacities_swept"] += len(swept)
+        stats["dp_runs"] += sweep.dp_runs_by_cost.get("dram", 0)
+        stats["dp_runs_hops"] += sweep.dp_runs_by_cost.get("hops", 0)
+        stats["partitions"] += len(by_boundaries) + len(hop_only)
 
     # exact-score duplicates are interchangeable (e.g. extra replicas
     # inside the same mesh footprint that don't move the bottleneck) —
     # keep the one powering the fewest chips
     dedup: dict[tuple, Candidate] = {}
     for c in candidates:
-        key = (c.traffic, c.period, c.fill_latency, c.chips)
+        key = (c.traffic, c.period, c.fill_latency, c.chips,
+               c.traffic_bytes, c.quant_cost)
         prev = dedup.get(key)
         if prev is None or sum(c.replicas) < sum(prev.replicas):
             dedup[key] = c
@@ -528,14 +577,7 @@ def autoplan(net: NetSpec, fleet: Fleet, *,
     pareto = [c for c in unique
               if not any(_dominates(o, c) for o in unique)]
     pareto.sort(key=_OBJECTIVE_KEYS[objective])
+    stats["placements_scored"] = len(candidates)
+    stats["pareto_size"] = len(pareto)
     return Frontier(fleet, objective, tuple(pareto),
-                    arrival_rate=arrival_rate,
-                    stats={
-                        "capacities_swept": len(swept),
-                        "dp_runs": sweep.dp_runs_by_cost.get("dram", 0),
-                        "dp_runs_hops": sweep.dp_runs_by_cost.get("hops",
-                                                                  0),
-                        "partitions": len(by_boundaries) + len(hop_only),
-                        "placements_scored": len(candidates),
-                        "pareto_size": len(pareto),
-                    })
+                    arrival_rate=arrival_rate, stats=stats)

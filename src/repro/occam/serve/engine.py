@@ -62,12 +62,15 @@ _SESSION_MAX_PENDING = 1 << 30
 
 class AsyncTicket:
     """Awaitable handle for one :meth:`AsyncEngine.submit`:
-    ``y = await ticket`` yields the request's outputs in lane order."""
+    ``y = await ticket`` yields the request's outputs in lane order.
+    ``cancel()`` withdraws the request — awaiting a cancelled ticket
+    raises :class:`asyncio.CancelledError`."""
 
-    __slots__ = ("_req",)
+    __slots__ = ("_req", "_engine")
 
-    def __init__(self, req: Request):
+    def __init__(self, req: Request, engine: "AsyncEngine | None" = None):
         self._req = req
+        self._engine = engine
 
     @property
     def uid(self) -> int:
@@ -83,6 +86,21 @@ class AsyncTicket:
 
     def done(self) -> bool:
         return self._req.future.done()
+
+    def cancelled(self) -> bool:
+        return self._req.cancelled
+
+    def cancel(self) -> bool:
+        """Withdraw the request. Still-queued images never pack into a
+        round and stop counting toward the tenant's ``max_pending``
+        budget at once; lanes already packed finish their in-flight
+        rounds (the compiled tick's shape never changes) but their
+        results are discarded and their budget settles as the rounds
+        deliver. Returns True if the ticket was live — False when it
+        had already resolved (or was already cancelled)."""
+        if self._engine is None:
+            return False
+        return self._engine._cancel(self._req)
 
     def __await__(self):
         return self._req.future.__await__()
@@ -206,7 +224,21 @@ class AsyncEngine:
         req = self.queue.offer(tenant, xs, int(xs.shape[0]), fut)
         self.metrics.observe_arrival(req.n, self.queue.depth)
         self._wake.set()
-        return AsyncTicket(req)
+        return AsyncTicket(req, self)
+
+    def _cancel(self, req: Request) -> bool:
+        """Cancel one admitted request (``AsyncTicket.cancel``): mask
+        its queued images out of every round not yet packed, credit the
+        tenant's budget for them now, and cancel the awaited future.
+        In-flight lanes deliver into the void (``_deliver`` discards
+        them and settles their budget share)."""
+        if req.future.done():
+            return False
+        req.cancelled = True
+        self.queue.cancel(req)
+        req.future.cancel()
+        self._wake.set()
+        return True
 
     async def drain(self) -> None:
         """Flush queued partials through as masked rounds and wait until
@@ -266,6 +298,7 @@ class AsyncEngine:
             "queue_depth": self.queue.depth,
             "tenants": list(self.queue.tenants),
             "rejections": self.queue.rejections,
+            "cancellations": self.queue.cancellations,
             "rounds_in_flight": len(self._rounds),
             "packs_overlapped": self.packs_overlapped,
             "reconcile_calls": self.reconcile_calls,
@@ -477,6 +510,12 @@ class AsyncEngine:
         for ticket, lanes in done:
             off = 0
             for req, take in self._rounds.pop(ticket.uid):
+                if req.cancelled:
+                    # discard the lanes; the budget share still settles
+                    off += take
+                    req.remaining -= take
+                    self.queue.settle(req, take)
+                    continue
                 req.delivered.append(lanes[off:off + take])
                 off += take
                 req.remaining -= take

@@ -56,6 +56,7 @@ class Request:
     future: asyncio.Future
     delivered: list = dataclasses.field(default_factory=list)
     remaining: int = 0
+    cancelled: bool = False
 
     def __post_init__(self) -> None:
         self.remaining = self.n
@@ -67,9 +68,11 @@ class AdmissionQueue:
     ``offer`` admits or raises :class:`AdmissionError`; ``take`` pops up
     to N images as ``(request, slice)`` segments (a request may straddle
     rounds); ``settle`` returns a tenant's budget once its images
-    deliver. ``depth`` counts queued (not yet packed) images;
-    ``pending(tenant)`` counts everything admitted and not yet
-    delivered — the quantity the budget bounds.
+    deliver; ``cancel`` withdraws a request's still-queued images so
+    they never pack into a round and stop counting against the tenant's
+    budget immediately. ``depth`` counts queued (not yet packed)
+    images; ``pending(tenant)`` counts everything admitted and not yet
+    delivered or cancelled — the quantity the budget bounds.
     """
 
     def __init__(self, *, max_pending: int = 64, clock=time.monotonic):
@@ -82,6 +85,7 @@ class AdmissionQueue:
         self._pending: collections.Counter = collections.Counter()
         self._next_uid = 0
         self.rejections = 0
+        self.cancellations = 0
 
     # -- admission -----------------------------------------------------------
 
@@ -115,6 +119,26 @@ class AdmissionQueue:
     def settle(self, request: Request, n: int) -> None:
         """Return ``n`` delivered images to ``request.tenant``'s budget."""
         self._pending[request.tenant] -= n
+
+    def cancel(self, request: Request) -> int:
+        """Withdraw ``request``'s queued (not yet packed) images: its
+        queue entry is removed, the tenant's budget is credited for them
+        immediately, and the request's ``remaining`` drops by the same
+        count. Images already packed into a round stay in flight — they
+        settle as they deliver. Returns how many images were withdrawn
+        from the queue."""
+        removed = 0
+        for i, entry in enumerate(self._queue):
+            if entry[0] is request:
+                removed = request.n - entry[1]
+                del self._queue[i]
+                break
+        if removed:
+            self._depth -= removed
+            self._pending[request.tenant] -= removed
+            request.remaining -= removed
+        self.cancellations += 1
+        return removed
 
     # -- packing -------------------------------------------------------------
 

@@ -100,12 +100,21 @@ def execute_partition(params: list[dict], xs: jax.Array, net: NetSpec,
                       counter: cnn.TrafficCounter | None = None,
                       interpret: bool | None = None,
                       routes: tuple[SpanRoute, ...] | None = None,
-                      out_rows: int = 1) -> jax.Array:
+                      out_rows: int = 1, policy=None) -> jax.Array:
     """Execute ``net`` on ``xs`` ((B, H, W, C) or (H, W, C)) span-by-span.
 
     ``counter`` accumulates off-chip element transfers (x batch), matching
-    ``cnn.predicted_transfers(net, boundaries) * batch``.
+    ``cnn.predicted_transfers(net, boundaries) * batch``; under a policy
+    the byte twins scale by the boundary width.
     ``out_rows``: output tile height per step (Eqn. 6 amortization).
+    ``policy``: an ``occam.quant.DtypePolicy`` — every map that crosses a
+    span boundary (input, span outputs, spills, residual sources) makes
+    the round trip through the policy's boundary dtype before the next
+    span reads it, and weights through the weight dtype, so the
+    single-device result is bit-identical to a pipeline placement doing
+    real quantized transport. Dequant happens at span entry: span bodies
+    compute in ``policy.compute`` (a float dtype), which is why int8
+    boundaries still route onto the float-only engines.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -113,24 +122,39 @@ def execute_partition(params: list[dict], xs: jax.Array, net: NetSpec,
     if squeeze:
         xs = xs[None]
     batch = xs.shape[0]
+    if policy is not None and policy.is_default:
+        policy = None
+    if policy is None:
+        boundary = lambda arr: arr  # noqa: E731
+        bpe = 4.0
+    else:
+        from repro.occam.quant import casting
+
+        params = casting.quantize_params(params, policy)
+        boundary = functools.partial(casting.fake_quant,
+                                     dtype=policy.boundary,
+                                     scale=policy.scale)
+        bpe = policy.boundary_bytes
     boundaries = _boundaries_of(partition, net)
-    routes = routes or plan_routes(net, partition, out_rows=out_rows,
-                                   dtype=str(xs.dtype))
+    routes = routes or plan_routes(
+        net, partition, out_rows=out_rows,
+        dtype=policy.compute if policy is not None else str(xs.dtype))
     crossing = [(s, t) for (s, t) in net.residual_edges
                 if any(s < p < t for p in boundaries)]
     spill_sources = {s for (s, _t) in crossing}
-    stored: dict[int, jax.Array] = {0: xs}
+    stored: dict[int, jax.Array] = {0: boundary(xs)}
     for route in routes:
         a, b = route.start, route.end
-        cnn.count_span_reads(counter, net, a, b, batch)
+        cnn.count_span_reads(counter, net, a, b, batch, bytes_per_elem=bpe)
         spill = tuple(sorted(m for m in spill_sources if a < m < b))
         engine = registry.get_engine(route.route)
         t = max(1, min(out_rows, net.map_shape(b)[0]))  # per-span clamp
         out, spilled = engine.run(params, net, a, b, stored, spill,
                                   interpret=interpret, out_rows=t)
-        cnn.count_span_writes(counter, net, b, spilled, batch)
-        stored[b] = out
-        stored.update(spilled)
+        cnn.count_span_writes(counter, net, b, spilled, batch,
+                              bytes_per_elem=bpe)
+        stored[b] = boundary(out)
+        stored.update({m: boundary(v) for m, v in spilled.items()})
     y = stored[net.n_layers]
     return y[0] if squeeze else y
 
@@ -147,7 +171,10 @@ def _oversized(net: NetSpec, a: int, b: int,
 
 # Activation dtypes the generated kernel's row math supports (conv_row
 # accumulates in float32; integer activations would silently change ReLU
-# and pooling semantics).
+# and pooling semantics). Declared on the EngineSpec so ``route_span``
+# gates on it before ``accepts`` runs — int8 *boundaries* still route
+# here because a DtypePolicy's ``compute`` dtype (what the span body
+# sees after dequant-at-entry) is always a float.
 _PALLAS_DTYPES = ("float32", "bfloat16", "float16")
 
 
@@ -170,9 +197,6 @@ def _pallas_accepts(net: NetSpec, a: int, b: int,
     the BackendError a forced ``backend="pallas"`` raises carries it."""
     if _oversized(net, a, b, ctx):
         return False, "oversized single layer (lower bound)"
-    if ctx.dtype is not None and ctx.dtype not in _PALLAS_DTYPES:
-        return False, (f"dtype {ctx.dtype!r} unsupported by the fused "
-                       f"kernel (one of {_PALLAS_DTYPES})")
     bad_tile = _tile_shape_reason(net, a, b, ctx.out_rows)
     if bad_tile:
         return False, bad_tile
@@ -370,10 +394,12 @@ def _oracle_spmd_body(net: NetSpec, a: int, b: int, spill, src_keys, *,
 registry.register_engine(
     ROUTE_PALLAS, priority=10, accepts=_pallas_accepts, run=_run_pallas,
     spmd_capable=True, make_spmd_body=_pallas_spmd_body,
+    dtypes=_PALLAS_DTYPES,
     description="generated N-layer fused-span Pallas kernel")
 registry.register_engine(
     ROUTE_SCAN, priority=20, accepts=_scan_accepts, run=_run_scan,
     spmd_capable=True, make_spmd_body=_scan_spmd_body,
+    dtypes=_PALLAS_DTYPES,
     description="jitted row-streaming scan (residual-capable)")
 registry.register_engine(
     ROUTE_ORACLE, priority=30, accepts=_always_accepts(

@@ -527,12 +527,41 @@ def replicated_forward(stage_fn, stage_params, microbatches: jax.Array,
 # The span pipeline: heterogeneous Occam spans as switch-selected bodies
 # --------------------------------------------------------------------------
 
+def _payload_casts(policy):
+    """(dequant, quant) boundary transforms for a policy: identity for
+    None / the implicit fp32 policy; otherwise dequant lifts a payload
+    into the policy's compute dtype at span entry and quant drops a span
+    output back to the boundary dtype before it is packed for transport.
+    """
+    if policy is None or policy.is_default:
+        ident = lambda arr: arr  # noqa: E731
+        return ident, ident
+    from repro.occam.quant import casting
+
+    def dequant(q):
+        return casting.dequantize(q, policy.boundary, policy.scale,
+                                  compute=policy.compute)
+
+    def quant(x):
+        return casting.quantize(x, policy.boundary, policy.scale)
+
+    return dequant, quant
+
+
 def make_stage_body(net: NetSpec, stage: StageSpec, payload_width: int,
-                    out_rows: int = 1):
+                    out_rows: int = 1, policy=None):
     """One stage's shard_map-traceable body: unflatten the span's
     parameter slice, unpack the boundary payload, run the span core the
     registry resolved for the route, and pack the outgoing payload
     (output map + spills + forwarded upstream sources).
+
+    ``policy`` (an ``occam.quant.DtypePolicy``) makes the boundary
+    genuinely quantized: the slot arrives in the boundary dtype,
+    dequantizes at span entry (the span core computes in
+    ``policy.compute``, always a float dtype), and the outgoing map /
+    spills quantize back before packing. Forwarded upstream sources stay
+    in their transport form — a map that rides several hops is quantized
+    exactly once.
 
     Module-level because it is also a standalone jit target: the
     calibration timers (``repro.occam.calibrate.timers``) run each
@@ -545,21 +574,24 @@ def make_stage_body(net: NetSpec, stage: StageSpec, payload_width: int,
     t = max(1, min(out_rows, net.map_shape(b)[0]))
     core = spec.make_spmd_body(net, a, b, stage.spill, stage.src_keys,
                                out_rows=t)
+    dequant, quant = _payload_casts(policy)
 
     def body(p_flat, slot):
         span_params = _unflatten_span_params(p_flat, net, a, b)
         parts = _unpack(slot, stage.in_spec, net)
-        x = parts[a]
-        srcs = tuple(parts[s] for s in stage.src_keys)
+        x = dequant(parts[a])
+        srcs = tuple(dequant(parts[s]) for s in stage.src_keys)
         out, spilled = core(span_params, x, srcs)
         out_parts = {}
         for s in stage.out_spec.keys:
             if s == b:
-                out_parts[s] = out
+                out_parts[s] = quant(out)
             elif s in spilled:
-                out_parts[s] = spilled[s]
+                out_parts[s] = quant(spilled[s])
             elif s == a:
-                out_parts[s] = x       # edge source == this span's input
+                # edge source == this span's input: forward the transport
+                # form (already quantized), not the dequantized compute copy
+                out_parts[s] = parts[s]
             else:
                 out_parts[s] = parts[s]  # upstream source: forward it
         return _pack(out_parts, stage.out_spec, payload_width)
@@ -587,10 +619,16 @@ class _SpanProgram:
                  devices: Sequence | None = None,
                  routes: Sequence[span_engine.SpanRoute] | None = None,
                  out_rows: int = 1,
-                 packing: str = "rect"):
+                 packing: str = "rect",
+                 policy=None):
         if packing not in PACKINGS:
             raise ValueError(f"packing must be one of {PACKINGS}, "
                              f"got {packing!r}")
+        # normalize the implicit fp32 policy to None so every downstream
+        # hook has one no-quantization spelling
+        if policy is not None and policy.is_default:
+            policy = None
+        self.policy = policy
         self.net = net
         self.boundaries = span_engine._boundaries_of(partition, net)
         self.stages = plan_span_stages(net, partition, routes=routes)
@@ -638,6 +676,16 @@ class _SpanProgram:
         self.param_width = max(
             (_span_param_elems(net, *st.span) for st in self.stages),
             default=1) or 1
+        # the dtype every payload buffer (feed, ring state, ppermute
+        # hops) is allocated and moved in — int8 boundaries really ship
+        # a quarter of the fp32 bytes
+        if self.policy is None:
+            self._payload_dtype = jnp.float32
+            self.payload_bytes_per_elem = 4.0
+        else:
+            from repro.occam.quant import casting
+            self._payload_dtype = casting.jnp_dtype(self.policy.boundary)
+            self.payload_bytes_per_elem = self.policy.boundary_bytes
 
     # -- static reporting ---------------------------------------------------
 
@@ -661,7 +709,7 @@ class _SpanProgram:
 
     def _make_body(self, stage: StageSpec):
         return make_stage_body(self.net, stage, self.payload_width,
-                               out_rows=self.out_rows)
+                               out_rows=self.out_rows, policy=self.policy)
 
     def _step(self):
         """step(stage_idx, p_flat, slot) -> slot' switching between the
@@ -692,6 +740,9 @@ class _SpanProgram:
         if cached is not None and len(cached[0]) == len(leaves) and \
                 all(a is b for a, b in zip(cached[0], leaves)):
             return cached[1]
+        if self.policy is not None:
+            from repro.occam.quant import casting
+            params = casting.quantize_params(list(params), self.policy)
         stacked = jnp.stack([
             _flatten_span_params(params, self.net, *st.span,
                                  width=self.param_width)
@@ -721,12 +772,13 @@ class StapPipeline(_SpanProgram):
                  mesh: Mesh | None = None,
                  devices: Sequence | None = None,
                  routes: Sequence[span_engine.SpanRoute] | None = None,
-                 out_rows: int = 1):
+                 out_rows: int = 1, policy=None):
         super().__init__(net, partition, microbatch, plan=plan,
                          stage_times=stage_times, max_chips=max_chips,
                          max_replicas=max_replicas,
                          target_period=target_period, mesh=mesh,
-                         devices=devices, routes=routes, out_rows=out_rows)
+                         devices=devices, routes=routes, out_rows=out_rows,
+                         policy=policy)
         self.batch = batch
         self.n_microbatches = -(-batch // microbatch)
         self.schedule = staggered_schedule(self.plan, self.n_microbatches)
@@ -785,6 +837,17 @@ class StapPipeline(_SpanProgram):
             "out_conveyor_elems_per_image": self.out_conveyor_elems_per_image,
             "dp_transfer_elems_per_image": cnn.predicted_transfers(
                 self.net, list(self.boundaries)),
+            # byte-denominated twins: the same quantities in the bytes
+            # the wire actually carries (payloads move in the policy's
+            # boundary dtype — 4.0 B/elem for the implicit fp32 policy)
+            "payload_bytes_per_elem": self.payload_bytes_per_elem,
+            "link_bytes_per_image":
+                self.link_elems_per_image * self.payload_bytes_per_elem,
+            "conveyor_bytes_per_image":
+                self.conveyor_elems_per_image * self.payload_bytes_per_elem,
+            "out_conveyor_bytes_per_image":
+                self.out_conveyor_elems_per_image
+                * self.payload_bytes_per_elem,
         }
 
     # -- SPMD program -------------------------------------------------------
@@ -807,6 +870,10 @@ class StapPipeline(_SpanProgram):
         (i+1)*chunk)) instead of replicating the whole feed to every
         device — per-chip input memory O(stream/S)."""
         mb, m = self.microbatch, self.n_microbatches
+        if self.policy is not None:
+            from repro.occam.quant import casting
+            xs = casting.quantize(xs, self.policy.boundary,
+                                  self.policy.scale)
         xs = jnp.pad(xs, ((0, m * mb - xs.shape[0]),) + ((0, 0),) * 3)
         flat = xs.reshape(m, mb, -1)
         flat = jnp.pad(flat, ((0, self.schedule.n_slots - m), (0, 0),
@@ -833,10 +900,13 @@ class StapPipeline(_SpanProgram):
         if xs.shape[0] != self.batch:
             raise ValueError(f"pipeline compiled for batch {self.batch}, "
                              f"got {xs.shape[0]}")
+        bpe = self.payload_bytes_per_elem
         for st in self.stages:
             a, b = st.span
-            cnn.count_span_reads(counter, self.net, a, b, self.batch)
-            cnn.count_span_writes(counter, self.net, b, st.spill, self.batch)
+            cnn.count_span_reads(counter, self.net, a, b, self.batch,
+                                 bytes_per_elem=bpe)
+            cnn.count_span_writes(counter, self.net, b, st.spill, self.batch,
+                                  bytes_per_elem=bpe)
         # stage the input onto the mesh up front: each chip row receives
         # only its conveyor chunk of rounds (no whole-feed replication)
         feed = jax.device_put(self._pack_feed(xs), self._stage_feed_sharding())
@@ -848,6 +918,13 @@ class StapPipeline(_SpanProgram):
         flat = out.reshape(self.schedule.n_slots, self.microbatch,
                            self.payload_width)[:self.n_microbatches]
         y = flat[:, :, :h * w * c].reshape(-1, h, w, c)
+        if self.policy is not None:
+            # the last boundary crossed in the boundary dtype; hand the
+            # caller fp32 images (replica-partial summation may have
+            # widened an integer dtype — dequantize handles either form)
+            from repro.occam.quant import casting
+            y = casting.dequantize(y, self.policy.boundary,
+                                   self.policy.scale)
         return y[:self.batch]
 
 
@@ -881,10 +958,11 @@ class StapRing(_SpanProgram):
                  devices: Sequence | None = None,
                  routes: Sequence[span_engine.SpanRoute] | None = None,
                  out_rows: int = 1,
-                 packing: str = "rect"):
+                 packing: str = "rect",
+                 policy=None):
         super().__init__(net, partition, microbatch, plan=plan, mesh=mesh,
                          devices=devices, routes=routes, out_rows=out_rows,
-                         packing=packing)
+                         packing=packing, policy=policy)
         self.steady = steady_schedule(self.plan)
         self.trace_count = 0   # tick lowerings; regression: stays at 1
         tick = self._build_tick_packed() if self.packing == "sum" \
@@ -931,6 +1009,9 @@ class StapRing(_SpanProgram):
             "microbatch": self.microbatch,
             "payload_width_padded": self.payload_width,
             "link_elems_per_image": self.link_elems_per_image,
+            "payload_bytes_per_elem": self.payload_bytes_per_elem,
+            "link_bytes_per_image":
+                self.link_elems_per_image * self.payload_bytes_per_elem,
             "tick_lowerings": self.trace_count,
             "tick_count": self.timers.count,
             "tick_mean_s": self.timers.mean_s(),
@@ -946,12 +1027,13 @@ class StapRing(_SpanProgram):
         O(round_batch) per chip, stream-independent."""
         if self.packing == "sum":
             state = jnp.zeros((self.assignment.n_chips * self.round_width,
-                               self.microbatch, self.payload_width))
+                               self.microbatch, self.payload_width),
+                              self._payload_dtype)
             return jax.device_put(state, jax.sharding.NamedSharding(
                 self.mesh, P(CHIP_AXIS)))
         s, r = self.steady.n_stages, self.steady.max_replicas
         state = jnp.zeros((s * r * self.round_width, self.microbatch,
-                           self.payload_width))
+                           self.payload_width), self._payload_dtype)
         return jax.device_put(state, jax.sharding.NamedSharding(
             self.mesh, P((STAGE_AXIS, REPLICA_AXIS))))
 
@@ -1002,6 +1084,7 @@ class StapRing(_SpanProgram):
                             check_vma=False)
         r_max, mb = steady.max_replicas, self.microbatch
         h, w, c = self.net.map_shape(self.net.n_layers)
+        out_cast = self._lane_cast()
 
         def fn(params_stacked, state, in_round, masks):
             # trace-time side effect: one increment per lowering, the
@@ -1015,10 +1098,21 @@ class StapRing(_SpanProgram):
             out = out[(s_stages - 1) * r_max * width:]
             out = out.reshape((r_max, width * mb, self.payload_width)) \
                 .sum(axis=0)
-            lanes = out[:, :h * w * c].reshape(-1, h, w, c)
+            lanes = out_cast(out[:, :h * w * c].reshape(-1, h, w, c))
             return state, lanes
 
         return fn
+
+    def _lane_cast(self):
+        """Exit transform for the round leaving the last stage: the
+        payload crossed in the boundary dtype (replica-partial summation
+        may have widened an integer form); sessions get fp32 images."""
+        if self.policy is None:
+            return lambda lanes: lanes
+        from repro.occam.quant import casting
+        pol = self.policy
+        return lambda lanes: casting.dequantize(lanes, pol.boundary,
+                                                pol.scale)
 
     def _build_tick_packed(self):
         """The sum-of-replicas tick: same ring semantics as
@@ -1067,6 +1161,7 @@ class StapRing(_SpanProgram):
         h, w, c = self.net.map_shape(self.net.n_layers)
         last0 = asg.offsets[s_stages - 1]       # first last-stage chip
         r_last = asg.replicas[s_stages - 1]
+        out_cast = self._lane_cast()
 
         def fn(params_stacked, state, in_round, masks):
             self.trace_count += 1
@@ -1076,7 +1171,7 @@ class StapRing(_SpanProgram):
             out = out[last0 * width:]
             out = out.reshape((r_last, width * mb, self.payload_width)) \
                 .sum(axis=0)
-            lanes = out[:, :h * w * c].reshape(-1, h, w, c)
+            lanes = out_cast(out[:, :h * w * c].reshape(-1, h, w, c))
             return state, lanes
 
         return fn
@@ -1109,6 +1204,10 @@ class StapRing(_SpanProgram):
         if pad < 0:
             raise ValueError(f"round takes at most {self.round_batch} "
                              f"images, got {xs.shape[0]}")
+        if self.policy is not None:
+            from repro.occam.quant import casting
+            xs = casting.quantize(xs, self.policy.boundary,
+                                  self.policy.scale)
         xs = jnp.pad(xs, ((0, pad),) + ((0, 0),) * 3)
         flat = xs.reshape(self.round_width, self.microbatch, -1)
         return jnp.pad(flat, ((0, 0), (0, 0),

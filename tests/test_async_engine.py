@@ -476,3 +476,98 @@ def test_async_engine_throughput_within_band():
             break
     assert abs(best - 1) <= 0.30, \
         f"measured/predicted async engine throughput off by {best:.2f}x"
+
+
+# --------------------------------------------------------------------------
+# Ticket cancellation
+# --------------------------------------------------------------------------
+
+def test_queue_cancel_masks_out_of_take():
+    """Queue-level semantics, no devices: a cancelled request's queued
+    images never pack into a round, its budget frees immediately, and a
+    request already split across a round boundary only withdraws its
+    un-packed remainder."""
+    loop = asyncio.new_event_loop()
+    try:
+        q = AdmissionQueue(max_pending=8)
+        r1 = q.offer("a", np.zeros((3, 4, 4, 3)), 3, loop.create_future())
+        r2 = q.offer("a", np.zeros((2, 4, 4, 3)), 2, loop.create_future())
+        assert q.depth == 5 and q.pending("a") == 5
+        assert q.cancel(r1) == 3
+        assert q.depth == 2 and q.pending("a") == 2
+        assert r1.remaining == 0
+        segs = q.take(8)
+        assert [(r is r2, take) for r, _l, take in segs] == [(True, 2)]
+        # straddled request: pack part, cancel the rest
+        r3 = q.offer("b", np.zeros((4, 4, 4, 3)), 4, loop.create_future())
+        (req, _lanes, take), = q.take(1)
+        assert req is r3 and take == 1
+        assert q.cancel(r3) == 3        # only the un-packed remainder
+        assert q.depth == 0 and q.pending("b") == 1  # 1 still in flight
+        assert r3.remaining == 1
+        assert q.take(8) == []
+        assert q.cancellations == 2
+    finally:
+        loop.close()
+
+
+def test_ticket_cancel_frees_budget_before_dispatch(engine_case):
+    """Cancelling a queued ticket: the await raises CancelledError, the
+    tenant's budget frees at once (settled cancellations don't count
+    toward max_pending), and the images never reach the device."""
+    net, params, _frontier, dep = engine_case
+
+    async def drive():
+        eng = occam.AsyncEngine(dep, params, max_pending=2)
+        async with eng:
+            x1 = jax.random.normal(jax.random.PRNGKey(3),
+                                   (1,) + net.map_shape(0))
+            t1 = await eng.submit(x1, tenant="fickle")  # sub-round: queued
+            t2 = await eng.submit(x1, tenant="fickle")
+            with pytest.raises(occam.AdmissionError):
+                await eng.submit(x1, tenant="fickle")
+            assert t1.cancel() is True
+            assert t1.cancelled() and t1.done()
+            assert t1.cancel() is False          # already settled
+            with pytest.raises(asyncio.CancelledError):
+                await t1
+            # the freed budget admits a new submit immediately
+            t3 = await eng.submit(x1, tenant="fickle")
+            await eng.drain()
+            y2, y3 = await t2, await t3
+            assert_close(y2, _ref(params, net, x1))
+            assert_close(y3, _ref(params, net, x1))
+            assert eng.queue.pending("fickle") == 0
+            assert eng.describe()["cancellations"] == 1
+
+    asyncio.run(drive())
+
+
+def test_ticket_cancel_in_flight_discards_and_settles(engine_case):
+    """A full-round ticket cancelled after dispatch: the compiled tick's
+    shape never changes, so its lanes finish the ride — but the results
+    are discarded, the future cancels, the budget settles on delivery,
+    and the engine keeps serving correctly afterwards."""
+    net, params, _frontier, dep = engine_case
+
+    async def drive():
+        eng = occam.AsyncEngine(dep, params, max_pending=64)
+        async with eng:
+            rb = eng.round_batch
+            xs = jax.random.normal(jax.random.PRNGKey(4),
+                                   (rb,) + net.map_shape(0))
+            t = await eng.submit(xs, tenant="gone")
+            for _ in range(50):                  # let the round dispatch
+                await asyncio.sleep(0)
+                if eng.describe()["rounds_in_flight"]:
+                    break
+            t.cancel()
+            with pytest.raises(asyncio.CancelledError):
+                await t
+            await eng.drain()
+            assert eng.queue.pending("gone") == 0
+            t2 = await eng.submit(xs, tenant="still-here")
+            await eng.drain()
+            assert_close(await t2, _ref(params, net, xs))
+
+    asyncio.run(drive())

@@ -213,7 +213,7 @@ def test_plan_v4_calibration_roundtrip_both_ways():
     cm = CostModel(macs_per_s=1e9, stage_overhead_s=1e-3)
     cal = plan.with_calibration(cm)
     d = cal.to_dict()
-    assert d["version"] == 4 and d["calibration"]["macs_per_s"] == 1e9
+    assert d["version"] == 5 and d["calibration"]["macs_per_s"] == 1e9
     loaded = occam.plan_from_json(cal.to_json())
     assert loaded.calibration == cm
     assert loaded.boundaries == plan.boundaries

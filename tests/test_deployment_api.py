@@ -126,7 +126,7 @@ def test_plan_v2_carries_serving_defaults():
     plan = occam.plan(net, CAPACITY, batch=2, round_batch=8)
     assert plan.serving == occam.ServingDefaults(8, plan.n_spans)
     d = plan.to_dict()
-    assert d["version"] == occam.PLAN_FORMAT_VERSION == 4
+    assert d["version"] == occam.PLAN_FORMAT_VERSION == 5
     assert d["serving"] == {"round_batch": 8, "ring_depth": plan.n_spans}
     loaded = occam.plan_from_json(plan.to_json())
     assert loaded.serving == plan.serving
@@ -143,7 +143,7 @@ def test_plan_v3_carries_fleet_block():
                         hbm_elems_per_s=1e9)
     plan = occam.plan(net, CAPACITY, batch=2, fleet=fleet)
     d = plan.to_dict()
-    assert d["version"] == 4
+    assert d["version"] == 5
     assert d["fleet"] == fleet.to_dict()
     loaded = occam.plan_from_json(plan.to_json())
     assert loaded.fleet == fleet

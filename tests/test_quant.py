@@ -1,0 +1,434 @@
+"""occam.quant: dtype as a first-class planning axis.
+
+Planning side: DtypePolicy presets/serialization, byte-denominated
+footprints, the DP moving its cut under an int8 policy (the resnet18
+acceptance: strictly fewer boundary bytes per image AND at least one
+strictly larger fitted span than fp32 at the same capacity), plan
+schema v4 -> v5 migration, Fleet(dtype_policy=) sweeps into the Pareto
+frontier with the quant_cost axis keeping fp32 alive.
+
+Execution side (emulated mesh): quantized boundary transport is
+byte-exact against the plan's prediction (matches_prediction holds in
+bytes), single-device fake-quant emulation is bit-identical to the
+pipeline's real quantized ppermute payloads, and the int8 accuracy cost
+is bounded and real.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import require_devices
+from repro import occam
+from repro.core import closure
+from repro.core.graph import chain
+from repro.core.partition import partition_cnn
+from repro.core.traffic import TrafficCounter, occam_traffic
+from repro.models import cnn
+from repro.models.zoo import resnet18
+from repro.occam.quant import (POLICIES, DtypePolicy, casting, dtype_bytes,
+                               effective_footprint_elems, report_widths,
+                               resolve_policies, resolve_policy,
+                               span_footprint_bytes)
+from repro.runtime import span_engine
+
+C, P = "conv", "pool"
+CAPACITY = 6000
+
+RESNET_CAPACITY = 400_000
+
+
+def _tiny():
+    return chain("tiny", [(C, 3, 1, 1, 8), (C, 3, 1, 1, 8),
+                          (P, 2, 2, 0, 0), (C, 3, 1, 1, 16)],
+                 in_h=16, in_w=16, in_ch=3)
+
+
+def _vgg(hw=16):
+    specs = [(C, 3, 1, 1, 8), (C, 3, 1, 1, 8), (P, 2, 2, 0, 0),
+             (C, 3, 1, 1, 16), (C, 3, 1, 1, 16), (P, 2, 2, 0, 0),
+             (C, 3, 1, 1, 16)]
+    return chain("vgg_mini", specs, in_h=hw, in_w=hw, in_ch=3)
+
+
+def _span_lens(net, boundaries):
+    cuts = [0] + list(boundaries) + [net.n_layers]
+    return [b - a for a, b in zip(cuts[:-1], cuts[1:])]
+
+
+# --------------------------------------------------------------------------
+# Policy: presets, resolution, serialization
+# --------------------------------------------------------------------------
+
+def test_policy_presets_and_resolution():
+    assert POLICIES["fp32"].is_default
+    i8 = resolve_policy("int8")
+    assert i8.weights == "float32"          # weights stay fp32-resident
+    assert i8.activations == i8.boundary == "int8"
+    assert i8.compute == "float32"          # engines route on fp32
+    assert i8.boundary_bytes == 1.0 and i8.weight_bytes == 4.0
+    assert resolve_policy(None) is None
+    assert resolve_policy(i8) is i8
+    assert resolve_policy(i8.to_dict()) == i8
+    with pytest.raises(ValueError, match="unknown dtype policy"):
+        resolve_policy("fp7")
+    with pytest.raises(ValueError, match="unknown policy dtype"):
+        DtypePolicy(weights="int4")
+    with pytest.raises(ValueError, match="scale"):
+        DtypePolicy(scale=0.0)
+    assert dtype_bytes("bfloat16") == 2.0
+    # sweep-list shapes: None -> [None]; scalars wrap; sequences map
+    assert resolve_policies(None) == [None]
+    assert resolve_policies("bf16") == [POLICIES["bf16"]]
+    assert resolve_policies([None, "int8"]) == [None, POLICIES["int8"]]
+    assert resolve_policies([]) == [None]
+
+
+def test_policy_round_trip_and_version_gate():
+    pol = DtypePolicy(weights="bfloat16", activations="int8",
+                      boundary="int8", scale=0.02)
+    assert DtypePolicy.from_dict(pol.to_dict()) == pol
+    d = pol.to_dict()
+    d["version"] = 99
+    with pytest.raises(ValueError, match="version"):
+        DtypePolicy.from_dict(d)
+    # ordinal accuracy-headroom axis: fp32 < bf16 < int8
+    assert POLICIES["fp32"].quant_cost == 0
+    assert POLICIES["bf16"].quant_cost == 1
+    assert POLICIES["int8"].quant_cost == 2
+    assert pol.quant_cost == 2
+
+
+def test_casting_round_trip_idempotent():
+    import jax.numpy as jnp
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 5)) * 0.4
+    q = casting.quantize(x, "int8", 0.05)
+    assert q.dtype == jnp.int8
+    x1 = casting.dequantize(q, "int8", 0.05)
+    # the round-trip error is paid exactly once: re-quantizing the
+    # dequantized tensor is the identity
+    q2 = casting.quantize(x1, "int8", 0.05)
+    assert np.array_equal(np.asarray(q), np.asarray(q2))
+    assert float(jnp.max(jnp.abs(x1 - x))) <= 0.5 * 0.05 + 1e-6
+    # fp32 fake-quant is the identity; int8 fake-quant == dequant(quant)
+    assert np.array_equal(np.asarray(casting.fake_quant(x, "float32")),
+                          np.asarray(x))
+    fq = casting.fake_quant(x, "int8", scale=0.05)
+    assert np.array_equal(np.asarray(fq), np.asarray(x1))
+    # integer summation may widen (replica partial sums); dequantize
+    # handles any integer width
+    wide = q.astype(jnp.int32) + q.astype(jnp.int32)
+    x2 = casting.dequantize(wide, "int8", 0.05)
+    np.testing.assert_allclose(np.asarray(x2), 2 * np.asarray(x1),
+                               rtol=1e-6)
+
+
+def test_footprint_byte_twins():
+    net = _tiny()
+    elems = closure.span_footprint_elems(net, 0, 2)
+    assert span_footprint_bytes(net, 0, 2) == 4.0 * elems
+    i8 = POLICIES["int8"]
+    b8 = span_footprint_bytes(net, 0, 2, policy=i8)
+    assert b8 < 4.0 * elems                 # int8 activations shrink it
+    assert effective_footprint_elems(net, 0, 2, policy=i8) == b8 / 4.0
+    assert report_widths(None) == {"filter_bytes_per_elem": 4.0,
+                                   "boundary_bytes_per_elem": 4.0}
+    assert report_widths(i8) == {"filter_bytes_per_elem": 4.0,
+                                 "boundary_bytes_per_elem": 1.0}
+
+
+# --------------------------------------------------------------------------
+# Byte-denominated DP: the policy moves the cut
+# --------------------------------------------------------------------------
+
+def test_int8_policy_grows_fits_on_tiny_net():
+    net = _tiny()
+    f32 = partition_cnn(net, 3000)
+    i8 = partition_cnn(net, 3000, policy=POLICIES["int8"])
+    assert len(i8.spans) < len(f32.spans)   # 4x-smaller closures fuse
+    pred8 = occam_traffic(net, 3000, partition=i8, policy=POLICIES["int8"])
+    pred32 = occam_traffic(net, 3000, partition=f32)
+    assert pred8.offchip_bytes < pred32.offchip_bytes
+    assert pred8.boundary_bytes_per_elem == 1.0
+
+
+def test_resnet18_int8_acceptance():
+    """The ISSUE acceptance on a real zoo net: under the same capacity,
+    the int8-activation policy yields strictly fewer pipeline boundary
+    bytes per image AND at least one strictly larger fitted span than
+    fp32 — the byte-denominated DP genuinely moves the argmin."""
+    net = resnet18()
+    p32 = occam.plan(net, RESNET_CAPACITY)
+    p8 = occam.plan(net, RESNET_CAPACITY, dtype_policy="int8")
+    assert p8.quant == POLICIES["int8"]
+    assert p8.predicted.boundary_bytes < p32.predicted.boundary_bytes
+    assert p8.predicted.offchip_bytes < p32.predicted.offchip_bytes
+    lens32 = _span_lens(net, p32.boundaries)
+    lens8 = _span_lens(net, p8.boundaries)
+    assert any(a > b for a, b in zip(lens8, lens32)), \
+        f"no fitted span grew: int8 {lens8} vs fp32 {lens32}"
+
+
+# --------------------------------------------------------------------------
+# Plan schema v5: the quant block and v4 -> v5 migration
+# --------------------------------------------------------------------------
+
+def test_plan_schema_v5_round_trip():
+    net = _vgg()
+    plan = occam.plan(net, CAPACITY, dtype_policy="int8")
+    assert occam.PLAN_FORMAT_VERSION == 5
+    d = plan.to_dict()
+    assert d["version"] == 5
+    assert d["quant"]["boundary"] == "int8"
+    loaded = occam.plan_from_json(plan.to_json())
+    assert loaded.quant == plan.quant
+    assert loaded.boundaries == plan.boundaries
+    # the loaded prediction re-stamps its byte widths from the block
+    assert loaded.predicted.boundary_bytes_per_elem == 1.0
+    assert loaded.predicted.filter_bytes_per_elem == 4.0
+    assert loaded.predicted.offchip_bytes == plan.predicted.offchip_bytes
+
+
+def test_plan_v4_documents_load_unchanged():
+    """Pre-quant documents (v1-v4) load with the implicit fp32 policy,
+    whether the quant key is absent or an explicit null."""
+    net = _vgg()
+    d = occam.plan(net, CAPACITY).to_dict()
+    assert d["quant"] is None
+    for strip in (False, True):
+        old = dict(d, version=4)
+        if strip:
+            old.pop("quant")
+        loaded = occam.plan_from_dict(old)
+        assert loaded.quant is None
+        assert loaded.predicted.boundary_bytes_per_elem == 4.0
+        assert loaded.predicted.offchip_bytes == \
+            4.0 * loaded.predicted.offchip_elems
+
+
+def test_stray_quant_block_on_old_stamped_doc_rejected():
+    """A v<=4-stamped document carrying a non-null quant block is a
+    forgery (or a mis-stamped writer) — rejected, never silently
+    dropped: dropping it would execute a quantized plan at fp32."""
+    net = _vgg()
+    d = occam.plan(net, CAPACITY, dtype_policy="int8").to_dict()
+    d["version"] = 4
+    with pytest.raises(ValueError, match="version 5"):
+        occam.plan_from_dict(d)
+
+
+# --------------------------------------------------------------------------
+# Fleet knob and the autoplan policy sweep
+# --------------------------------------------------------------------------
+
+def test_fleet_dtype_policy_serialization():
+    fleet = occam.Fleet(chips=4, vmem_elems=3000,
+                        dtype_policy=[None, "bf16", POLICIES["int8"]])
+    d = fleet.to_dict()
+    assert d["dtype_policy"] == [None, "bf16", POLICIES["int8"].to_dict()]
+    back = occam.Fleet.from_dict(d)
+    assert resolve_policies(back.dtype_policy) == \
+        [None, POLICIES["bf16"], POLICIES["int8"]]
+    # written only when set: pre-quant readers see no new key
+    assert "dtype_policy" not in occam.Fleet(chips=1,
+                                             vmem_elems=10).to_dict()
+    with pytest.raises(ValueError, match="unknown dtype policy"):
+        occam.Fleet(chips=1, vmem_elems=10, dtype_policy="fp99")
+
+
+def test_autoplan_sweeps_policies_into_frontier():
+    net = _tiny()
+    fleet = occam.Fleet(chips=4, vmem_elems=3000,
+                        dtype_policy=[None, "int8"])
+    fr = occam.autoplan(net, fleet)
+    assert fr.stats["policies_swept"] == 2
+    costs = {c.quant_cost for c in fr}
+    # quant_cost is a Pareto axis: cheap int8 bytes cannot evict the
+    # full-precision candidates
+    assert costs == {0, 2}
+    for c in fr:
+        if c.quant_cost == 0:
+            assert c.plan.quant is None
+            assert c.traffic_bytes == 4.0 * c.traffic
+        else:
+            assert c.plan.quant == POLICIES["int8"]
+            assert c.traffic_bytes < 4.0 * c.traffic
+    # candidates round-trip the new score axes through frontier JSON
+    fr2 = occam.frontier_from_json(fr.to_json())
+    assert [(c.traffic_bytes, c.quant_cost) for c in fr2] == \
+        [(c.traffic_bytes, c.quant_cost) for c in fr]
+    # pre-quant candidate dicts (no byte axes) load as fp32
+    s = fr.to_dict()
+    for cd in s["candidates"]:
+        cd["scores"].pop("traffic_bytes")
+        cd["scores"].pop("quant_cost")
+    legacy = occam.frontier_from_dict(s)
+    assert all(c.quant_cost == 0 and c.traffic_bytes == 4.0 * c.traffic
+               for c in legacy)
+
+
+# --------------------------------------------------------------------------
+# Registry: declared dtype envelopes
+# --------------------------------------------------------------------------
+
+def test_engines_declare_dtype_envelopes():
+    assert occam.get_engine("pallas").dtypes == \
+        ("float32", "bfloat16", "float16")
+    assert occam.get_engine("scan").dtypes == \
+        ("float32", "bfloat16", "float16")
+    assert occam.get_engine("oracle").dtypes is None  # dtype-agnostic
+    net = _vgg()
+    # auto dispatch skips engines whose envelope excludes the dtype
+    routes = span_engine.plan_routes(net, [3], dtype="int8")
+    assert all(r.route not in ("pallas", "scan") for r in routes)
+    # the int8 *policy* computes in fp32, so kernel routing is unchanged
+    pol = POLICIES["int8"]
+    assert span_engine.plan_routes(net, [3], dtype=pol.compute) == \
+        span_engine.plan_routes(net, [3])
+
+
+# --------------------------------------------------------------------------
+# Traffic accounting: byte twins
+# --------------------------------------------------------------------------
+
+def test_traffic_counter_byte_twins():
+    c = TrafficCounter()
+    c.add_reads(10)                      # fp32 default: 4 bytes/elem
+    c.add_writes(5, bytes_per_elem=1.0)  # int8 boundary
+    assert c.total == 15
+    assert c.total_bytes == 45.0
+    per = TrafficCounter()
+    per.add_reads(2, bytes_per_elem=1.0)
+    c2 = TrafficCounter()
+    c2.add_scaled(per, 3)
+    assert c2.reads == 6 and c2.read_bytes == 6.0
+
+
+def test_matches_prediction_requires_bytes_too():
+    """An elem-exact but byte-wrong measurement must fail the check —
+    mixed-dtype runs cannot pass by counting elements alone."""
+    net = _vgg()
+    plan = occam.plan(net, CAPACITY, dtype_policy="int8")
+    pred = plan.predicted
+    good = TrafficCounter()
+    good.add_reads(int(pred.feature_elems // 2), bytes_per_elem=1.0)
+    good.add_writes(int(pred.feature_elems - pred.feature_elems // 2),
+                    bytes_per_elem=1.0)
+    assert pred.with_measured(good, 1).matches_prediction
+    bad = TrafficCounter()
+    bad.add_reads(int(pred.feature_elems // 2))          # fp32 widths:
+    bad.add_writes(int(pred.feature_elems - pred.feature_elems // 2))
+    attached = pred.with_measured(bad, 1)
+    assert attached.measured_per_image == pred.offchip_elems
+    assert attached.matches_prediction is False           # bytes wrong
+    # legacy counters (elem-only) are taken as fp32: bytes = 4 x elems
+    legacy = TrafficCounter(reads=8, writes=4)
+    rep = occam.plan(net, CAPACITY).predicted.with_measured(legacy, 1)
+    assert rep.measured_bytes == 4.0 * 12
+
+
+# --------------------------------------------------------------------------
+# Execution: byte-exact transport, bit-identical surfaces, accuracy band
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def quant_exec_case():
+    net = _vgg()
+    params = cnn.init_params(jax.random.PRNGKey(0), net)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (6, 16, 16, 3)) * 0.5
+    ref = jax.vmap(lambda im: cnn.reference_forward(params, im, net))(xs)
+    return net, params, xs, ref
+
+
+def test_int8_single_device_bytes_exact(quant_exec_case):
+    net, params, xs, _ref = quant_exec_case
+    plan = occam.plan(net, CAPACITY, batch=xs.shape[0],
+                      dtype_policy="int8")
+    dep = plan.place().compile(interpret=True)
+    dep.run(params, xs)
+    rep = dep.report()
+    assert rep.matches_prediction
+    assert rep.matches_prediction_bytes
+    assert rep.boundary_bytes_per_elem == 1.0
+    assert rep.measured_bytes < rep.measured_elems * 4.0
+
+
+def test_int8_pipeline_bit_identical_and_fewer_link_bytes(quant_exec_case):
+    """The pipeline's real quantized ppermute payloads produce exactly
+    the single-device fake-quant emulation's outputs, its measured
+    traffic is byte-exact, and the int8 wire moves strictly fewer link
+    bytes per image than the fp32 plan of the same net."""
+    net, params, xs, _ref = quant_exec_case
+    plan = occam.plan(net, CAPACITY, batch=xs.shape[0],
+                      dtype_policy="int8")
+    require_devices(plan.n_spans)
+    y1 = np.asarray(plan.place().compile(interpret=True).run(params, xs))
+    dep = plan.place(chips=plan.n_spans).compile(interpret=True)
+    y2 = np.asarray(dep.run(params, xs))
+    assert np.array_equal(y1, y2)
+    rep = dep.report()
+    assert rep.matches_prediction and rep.matches_prediction_bytes
+    pr = dep.pipeline(xs.shape[0]).report()
+    assert pr["payload_bytes_per_elem"] == 1.0
+    f32 = occam.plan(net, CAPACITY, batch=xs.shape[0])
+    f32dep = f32.place(chips=f32.n_spans).compile(interpret=True)
+    pr32 = f32dep.pipeline(xs.shape[0]).report()
+    assert pr["link_bytes_per_image"] < pr32["link_bytes_per_image"]
+
+
+def test_quantized_accuracy_band(quant_exec_case):
+    """The quant_cost axis trades real accuracy: int8 outputs differ
+    from the fp32 reference (quantization actually happened) but stay
+    inside the tolerance the per-tensor scale bounds."""
+    net, params, xs, ref = quant_exec_case
+    plan = occam.plan(net, CAPACITY, batch=xs.shape[0],
+                      dtype_policy="int8")
+    y = plan.place().compile(interpret=True).run(params, xs)
+    err = float(np.max(np.abs(np.asarray(y) - np.asarray(ref))))
+    assert 0.0 < err < 0.25
+    # bf16 sits between: quantized, but tighter than int8
+    yb = occam.plan(net, CAPACITY, batch=xs.shape[0],
+                    dtype_policy="bf16").place() \
+        .compile(interpret=True).run(params, xs)
+    errb = float(np.max(np.abs(np.asarray(yb) - np.asarray(ref))))
+    assert 0.0 < errb < err
+
+
+def test_serving_session_bytes_exact(quant_exec_case):
+    net, params, xs, _ref = quant_exec_case
+    plan = occam.plan(net, CAPACITY, batch=xs.shape[0],
+                      dtype_policy="int8")
+    require_devices(plan.n_spans)
+    dep = plan.place(chips=plan.n_spans).compile(interpret=True)
+    y_pipe = np.asarray(dep.run(params, xs))
+    with dep.serve(params) as sess:
+        t = sess.submit(xs)
+        got = {}
+        while not got:
+            for tk, y in sess.results(flush=True):
+                got[tk.uid] = np.asarray(y)
+        rep = sess.report()
+    assert np.array_equal(got[t.uid], y_pipe)
+    assert rep.matches_prediction and rep.matches_prediction_bytes
+
+
+# --------------------------------------------------------------------------
+# Benchmark artifact schema (fast tier)
+# --------------------------------------------------------------------------
+
+def test_bench_quant_doc_schema():
+    from benchmarks.occam_quant import REQUIRED_KEYS, validate_doc
+
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "BENCH_quant.json")
+    if not os.path.exists(path):
+        pytest.skip("results/BENCH_quant.json not generated yet")
+    with open(path) as f:
+        doc = json.load(f)
+    validate_doc(doc)
+    assert set(REQUIRED_KEYS) <= set(doc)
+    assert doc["bytes_reduction_int8"] > 1.0
+    assert doc["execution"]["matches_prediction_bytes"] is True
