@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: lint test-fast test bench bench-smoke
+.PHONY: lint audit test-fast test bench bench-smoke
 
 # Lint gate: no tracked bytecode, then ruff (config in pyproject.toml).
 # ruff is a dev extra (requirements-dev.txt) — skipped with a notice when
@@ -21,12 +21,19 @@ lint:
 		     "(pip install -r requirements-dev.txt)"; \
 	fi
 
+# Static audit gate: every checked-in *.plan.json / *.frontier.json
+# artifact re-proves its invariants (occam.audit, rule table in
+# docs/deployment_api.md) and the occam/serve concurrency lint runs.
+# Prints a notice and still passes when the tree has no artifacts.
+audit:
+	$(PY) -m repro.occam.audit
+
 # Fast tier: everything but the @pytest.mark.slow sweeps (< 2 min).
-test-fast: lint
+test-fast: lint audit
 	$(PY) -m pytest -q -m "not slow"
 
 # Full suite, fail-fast (the ROADMAP tier-1 verify command).
-test: lint
+test: lint audit
 	$(PY) -m pytest -x -q
 
 bench:

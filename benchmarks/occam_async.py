@@ -203,7 +203,10 @@ def async_measurement(rounds_timed: int = ROUNDS_TIMED, reps: int = REPS,
                                       predicted_rate, poisson_requests)
                  for frac in poisson_fracs]
         images = rounds_timed * rb
+        from benchmarks.audit_stamp import audit_verdict
+
         return {
+            "audit": audit_verdict(place),
             "net": net.name, "hw": HW, "microbatch": MICROBATCH,
             "boundaries": list(res.boundaries),
             "replicas": list(place.stap.replicas),

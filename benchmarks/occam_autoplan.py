@@ -85,7 +85,10 @@ def measure_net(name: str, chips: int = CHIPS, vmem: int = VMEM) -> dict:
         brute_match = best.traffic == bf_cost
 
     b_thr = frontier.best("throughput")
+    from benchmarks.audit_stamp import audit_verdict
+
     return {
+        "audit": audit_verdict(frontier),
         "net": name,
         "n_layers": net.n_layers,
         "capacities": len(caps),
@@ -110,6 +113,12 @@ def autoplan_measurement(nets=SWEEP_NETS, chips: int = CHIPS,
                          vmem: int = VMEM) -> dict:
     rows = [measure_net(n, chips, vmem) for n in nets]
     return {
+        "audit": {
+            "ok": all(r["audit"]["ok"] for r in rows),
+            "rules": sorted({rule for r in rows
+                             for rule in r["audit"]["rules"]}),
+            "findings": sum(r["audit"]["findings"] for r in rows),
+        },
         "fleet": {"chips": chips, "vmem_elems": vmem},
         "nets": rows,
         "all_match_exhaustive": all(r["matches_exhaustive"] for r in rows),

@@ -43,6 +43,7 @@ CALIBRATE_ROUNDS = 3
 # every BENCH_calibrate.json must carry these (schema gate for the
 # fast-tier test in tests/test_bench_smoke.py)
 REQUIRED_KEYS = (
+    "audit",
     "net", "fleet", "boundaries", "replicas", "packing", "chips",
     "chips_saved_on_frontier", "round_batch", "rounds_timed",
     "session_compile_count", "measured_period_us", "analytic_period_us",
@@ -180,7 +181,10 @@ def calibrate_measurement(chips: int = CHIPS, vmem: int = CAPACITY,
     saved = sum(
         len(c.replicas) * max(c.replicas) - sum(c.replicas)
         for c in frontier if c.kind == occam.PIPELINE)
+    from benchmarks.audit_stamp import audit_verdict
+
     return {
+        "audit": audit_verdict(winner),
         "net": net.name,
         "fleet": {"chips": chips, "vmem_elems": vmem},
         "boundaries": winner.plan.boundaries,

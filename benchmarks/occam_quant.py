@@ -46,7 +46,7 @@ INT8_TOLERANCE = 0.25   # max |int8 - fp32| on vgg_mini activations
 # every BENCH_quant.json must carry these (schema gate for the
 # fast-tier test in tests/test_quant.py)
 REQUIRED_KEYS = (
-    "zoo_capacity_elems", "policies", "zoo", "execution",
+    "audit", "zoo_capacity_elems", "policies", "zoo", "execution",
     "bytes_reduction_int8", "span_growth_nets",
 )
 
@@ -139,7 +139,10 @@ def execution_row() -> dict:
         reports[pol] = dep.report()
     err = float(np.max(np.abs(ys["int8"] - ys["fp32"])))
     pipe = {pol: deps[pol].pipeline(BATCH).report() for pol in deps}
+    from benchmarks.audit_stamp import audit_verdict
+
     return {
+        "audit": audit_verdict(deps["fp32"], deps["int8"]),
         "net": net.name,
         "capacity_elems": CAPACITY,
         "matches_prediction_bytes": bool(
@@ -170,11 +173,13 @@ def quant_measurement() -> dict:
         if any(a > b for a, b in pairs) or \
                 i8["n_spans"] < f32["n_spans"]:
             growth.append(name)
+    execution = execution_row()
     return {
+        "audit": execution.pop("audit"),
         "zoo_capacity_elems": ZOO_CAPACITY,
         "policies": list(POLICIES),
         "zoo": zoo,
-        "execution": execution_row(),
+        "execution": execution,
         "bytes_reduction_int8": round(max(reductions), 3),
         "span_growth_nets": growth,
     }

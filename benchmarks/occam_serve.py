@@ -126,7 +126,10 @@ def serve_measurement(rounds_timed: int = ROUNDS_TIMED,
     sess.results()
     ratio, t_dep, wall = best
     images = rounds_timed * rb
+    from benchmarks.audit_stamp import audit_verdict
+
     return {
+        "audit": audit_verdict(place),
         "net": net.name, "hw": HW, "microbatch": MICROBATCH,
         "boundaries": list(res.boundaries),
         "replicas": list(place.stap.replicas),

@@ -310,6 +310,9 @@ def main() -> None:
         "link_elems_per_image": stap.link_elems_per_image,
         "dp_transfer_elems_per_image": plan.predicted_transfers,
     }
+    from benchmarks.audit_stamp import audit_verdict
+
+    row["audit"] = audit_verdict(place2)
     os.makedirs(os.path.dirname(_OUT), exist_ok=True)
     with open(_OUT, "w") as f:
         json.dump(row, f, indent=2)

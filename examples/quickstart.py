@@ -5,6 +5,8 @@ Execution goes through the staged deployment API —
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import json
+
 import jax
 import numpy as np
 
@@ -80,6 +82,18 @@ assert frontier2.best("traffic").plan.boundaries == plan.boundaries
 plan2 = occam.plan_from_json(plan.to_json())
 assert plan2.boundaries == plan.boundaries
 assert occam.plan_from_json(plan_t2.to_json()).out_rows == 2
+# shipped plans are audited artifacts: occam.audit statically re-proves
+# a document's invariants (closure residency, DP cut optimality,
+# placement geometry, engine routing) without executing anything — a
+# corrupted document is rejected with a stable rule ID, and the same
+# check gates place()/compile()/serve() via the audit= knob
+bad_doc = json.loads(plan.to_json())
+bad_doc["capacity_elems"] = 100          # lie: the spans no longer fit
+bad = occam.audit(bad_doc)
+assert not bad.ok and "OCM011" in bad.rules()
+assert occam.audit(plan).ok              # the honest plan audits clean
+print(f"audit: corrupted plan rejected ({', '.join(bad.rules())}); "
+      f"honest plan passes clean")
 
 # --- measured-cost planning: calibrate -> rescore -> redeploy ---------------
 # analytic rates miss dispatch/padding constants; measure the live

@@ -70,17 +70,26 @@ from .serve import AdmissionError, AsyncEngine, AsyncTicket, Router
 from .calibrate import (ChipAssignment, CostModel, StageProfile,
                         TickTimers, pack_replicas, rescore_frontier)
 from .calibrate.cost_model import calibrate
+# static verification: the submodule stays importable as
+# repro.occam.audit; the package-level name ``occam.audit`` is the
+# entry-point FUNCTION (plan/placement/deployment/frontier/artifact ->
+# AuditReport)
+from .audit import (AUDIT_RULES, AuditError, AuditReport, AuditWarning,
+                    Finding, lint_serve)
+from .audit.api import audit
 
 __all__ = [
-    "AUTO", "FRONTIER_FORMAT_VERSION", "OBJECTIVES", "PIPELINE",
-    "PLAN_FORMAT_VERSION", "POLICIES", "SINGLE",
+    "AUDIT_RULES", "AUTO", "FRONTIER_FORMAT_VERSION", "OBJECTIVES",
+    "PIPELINE", "PLAN_FORMAT_VERSION", "POLICIES", "SINGLE",
     "AdmissionError", "AsyncEngine", "AsyncTicket",
+    "AuditError", "AuditReport", "AuditWarning",
     "BackendError", "Candidate", "ChipAssignment", "CostModel",
-    "Deployment", "DtypePolicy", "EngineSpec", "Fleet",
+    "Deployment", "DtypePolicy", "EngineSpec", "Finding", "Fleet",
     "Frontier", "Placement", "Plan", "RouteContext", "Router",
     "ServingDefaults", "ServingStats", "Session", "StageProfile",
-    "TickTimers", "Ticket", "autoplan",
+    "TickTimers", "Ticket", "audit", "autoplan",
     "backend_names", "calibrate", "frontier_from_dict",
+    "lint_serve",
     "frontier_from_json", "get_engine", "load_fleet", "load_frontier",
     "load_plan", "pack_replicas", "plan",
     "plan_from_dict", "plan_from_json", "quant", "register_engine",

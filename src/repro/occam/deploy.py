@@ -217,7 +217,27 @@ class Deployment:
         filling — a lone small request completes under polling without
         an explicit ``flush()``/``results()`` (default: wait
         indefinitely).
+
+        Serving geometry is validated up front with clear errors —
+        ``round_batch`` divisibility via ``Placement.serve_geometry``
+        and the plan's recorded ``serving.ring_depth`` against the
+        placement's actual ring — instead of surfacing as shape errors
+        deep inside the compiled ring tick.
         """
+        serving = self.plan.serving
+        if (self.placement.kind == PIPELINE
+                and serving.ring_depth is not None
+                and serving.ring_depth != self.placement.ring_depth):
+            raise ValueError(
+                f"plan records serving.ring_depth {serving.ring_depth} "
+                f"but this placement's ring is "
+                f"{self.placement.ring_depth} rounds deep (one per "
+                f"pipeline stage, {len(self.placement.replicas)} "
+                f"stages); the plan document is stale or corrupted — "
+                f"re-plan, or fix the serving block")
+        # raises the serve_geometry ValueError here (with the offending
+        # round_batch named) rather than mid-construction in StapRing
+        self.placement.serve_geometry(round_batch)
         return Session(self, params, round_batch=round_batch,
                        max_pending=max_pending,
                        max_wait_ticks=max_wait_ticks)

@@ -109,16 +109,23 @@ class Placement:
         return round_batch, round_batch // width
 
     def compile(self, backend: str = "auto", *, mesh=None,
-                devices=None, interpret: bool | None = None) -> "Deployment":
+                devices=None, interpret: bool | None = None,
+                audit: str = "warn") -> "Deployment":
         """Stage 3: lower onto engines -> :class:`~repro.occam.Deployment`.
 
         ``backend``: ``"auto"`` or any registered engine name (forced for
         every span). ``mesh`` / ``devices`` override the placement's.
         ``interpret`` forces Pallas interpret mode (default: interpret
         everywhere but real TPUs).
+        ``audit`` statically verifies this placement before lowering
+        (``occam.audit``): ``"warn"`` (default) emits an
+        ``AuditWarning`` on error findings, ``"error"`` raises
+        ``AuditError``, ``"off"`` skips the check.
         """
+        from .audit.api import gate
         from .deploy import Deployment
 
+        gate(self, audit, what="Placement.compile")
         return Deployment(self, backend=backend,
                           mesh=mesh if mesh is not None else self.mesh,
                           devices=devices if devices is not None
@@ -135,7 +142,8 @@ def place_plan(plan: Plan, *, chips: int | None = None,
                mesh=None, devices=None,
                pipeline: bool | None = None,
                harmonize: bool = False,
-               packing: str = "rect") -> Placement:
+               packing: str = "rect",
+               audit: str = "warn") -> Placement:
     """Implementation of :meth:`Plan.place` (see its docstring)."""
     if packing not in ("rect", "sum"):
         raise ValueError(f"packing must be 'rect' or 'sum', got {packing!r}")
@@ -154,7 +162,7 @@ def place_plan(plan: Plan, *, chips: int | None = None,
         if packing == "sum":
             raise ValueError("packing='sum' applies to pipeline "
                              "placements only")
-        return Placement(plan, SINGLE, microbatch)
+        return _audited(Placement(plan, SINGLE, microbatch), audit)
 
     # Stage latencies: measured if the caller has them, else the MAC model.
     from repro.runtime.stap_pipeline import (default_stap_plan,
@@ -187,7 +195,15 @@ def place_plan(plan: Plan, *, chips: int | None = None,
                                  target_period=target_period,
                                  mesh=mesh, devices=devices,
                                  harmonize=harmonize)
-    return Placement(plan, PIPELINE, microbatch, stap=stap,
-                     stage_times=times, mesh=mesh,
-                     devices=tuple(devices) if devices is not None else None,
-                     packing=packing)
+    return _audited(
+        Placement(plan, PIPELINE, microbatch, stap=stap,
+                  stage_times=times, mesh=mesh,
+                  devices=tuple(devices) if devices is not None else None,
+                  packing=packing), audit)
+
+
+def _audited(placement: Placement, audit: str) -> Placement:
+    from .audit.api import gate
+
+    gate(placement, audit, what="Plan.place")
+    return placement

@@ -42,6 +42,22 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
 PLAN_FORMAT_VERSION = 5
 _READABLE_VERSIONS = (1, 2, 3, 4, 5)
 
+# Authoritative top-level key set per schema version. Strict loading
+# (``plan_from_dict`` rejects unknown keys on current-version documents)
+# and the ``occam.audit`` OCM001 document rule (which flags them on any
+# version) share this table.
+_V1_KEYS = frozenset({"version", "net", "capacity_elems", "batch",
+                      "boundaries", "spans", "transfers", "routes",
+                      "predicted"})
+PLAN_KEYS_BY_VERSION: dict[int, frozenset[str]] = {
+    1: _V1_KEYS,
+    2: _V1_KEYS | {"serving"},
+    3: _V1_KEYS | {"serving", "fleet", "out_rows"},
+    4: _V1_KEYS | {"serving", "fleet", "out_rows", "calibration"},
+    5: _V1_KEYS | {"serving", "fleet", "out_rows", "calibration",
+                   "quant"},
+}
+
 _PREDICTED_FIELDS = ("scheme", "feature_elems", "filter_elems",
                      "compute_macs", "boundary_elems")
 
@@ -133,7 +149,8 @@ class Plan:
               mesh=None, devices=None,
               pipeline: bool | None = None,
               harmonize: bool = False,
-              packing: str = "rect") -> "Placement":
+              packing: str = "rect",
+              audit: str = "warn") -> "Placement":
         """Commit the plan to chips -> :class:`~repro.occam.Placement`.
 
         With no arguments: the degenerate single-device placement (every
@@ -147,6 +164,10 @@ class Plan:
         ``packing="sum"`` packs stage replicas onto ``sum(replicas)``
         chips instead of the rectangular ``stages x max(replicas)`` mesh
         (paper §III-E accounting; pipeline placements only).
+        ``audit`` statically verifies the resulting placement
+        (``occam.audit``): ``"warn"`` (default) emits an
+        ``AuditWarning`` on error findings, ``"error"`` raises
+        ``AuditError``, ``"off"`` skips the check.
         """
         from .place import place_plan
 
@@ -155,7 +176,8 @@ class Plan:
                           target_period=target_period,
                           max_replicas=max_replicas, microbatch=microbatch,
                           mesh=mesh, devices=devices, pipeline=pipeline,
-                          harmonize=harmonize, packing=packing)
+                          harmonize=harmonize, packing=packing,
+                          audit=audit)
 
     # -- serialization ------------------------------------------------------
 
@@ -235,6 +257,18 @@ def plan_from_dict(d: dict) -> Plan:
     if version not in _READABLE_VERSIONS:
         raise ValueError(f"unsupported plan version {version!r} "
                          f"(this build reads {_READABLE_VERSIONS})")
+    # strict mode on current-version documents: a key this writer could
+    # not have produced is a corrupted or hand-edited artifact, not a
+    # forward-compatibility case (those bump the version). Old-stamped
+    # documents stay lenient for migration; ``occam.audit`` rule OCM001
+    # flags their stray keys instead.
+    if version == PLAN_FORMAT_VERSION:
+        unknown = sorted(set(d) - PLAN_KEYS_BY_VERSION[version])
+        if unknown:
+            raise ValueError(
+                f"plan document carries unknown top-level key(s) "
+                f"{unknown}; schema version {version} defines "
+                f"{sorted(PLAN_KEYS_BY_VERSION[version])}")
     net = net_from_dict(d["net"])
     spans = [Span(int(s), int(e), bool(f)) for (s, e, f) in d["spans"]]
     # The DP tables are planner scratch, not part of the shipped artifact;

@@ -54,6 +54,14 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
 
 FRONTIER_FORMAT_VERSION = 1
 
+# Authoritative top-level key set of a frontier document. Strict
+# loading (``frontier_from_dict`` rejects unknown keys on
+# current-version documents) and the ``occam.audit`` OCM001 document
+# rule share this table.
+FRONTIER_DOCUMENT_KEYS = frozenset({"version", "objective",
+                                    "arrival_rate", "fleet", "stats",
+                                    "candidates"})
+
 OBJECTIVES = ("throughput", "latency", "traffic")
 
 # sort keys per objective: minimize the named metric, break ties toward
@@ -288,19 +296,25 @@ class Frontier:
     def serve(self, params, *, objective: str | None = None,
               backend: str = "auto", mesh=None, devices=None,
               interpret: bool | None = None, autoscale: bool = True,
-              **engine_kw):
+              audit: str = "warn", **engine_kw):
         """Frontier -> async serving in one call: deploy the best
         candidate and wrap it in an ``occam.serve.AsyncEngine``.
 
         ``autoscale=True`` (default) arms the engine's damped
         autoscaler against THIS frontier, so observed arrival rate
         drives ``Deployment.reconcile`` re-picks at serve time.
+        ``audit`` statically verifies the winning candidate before any
+        compile (``occam.audit``): ``"warn"`` (default) emits an
+        ``AuditWarning`` on error findings, ``"error"`` raises
+        ``AuditError``, ``"off"`` skips the check.
         ``engine_kw`` passes through to the engine (``max_pending``,
         ``max_wait_ms``, ``round_batch``, metrics windows, ...); await
         ``engine.submit(images, tenant=...)`` tickets from there.
         """
+        from .audit.api import gate
         from .serve import AsyncEngine
 
+        gate(self.best(objective), audit, what="Frontier.serve")
         dep = self.deploy(objective, backend, mesh=mesh, devices=devices,
                           interpret=interpret)
         engine = AsyncEngine(dep, params, **engine_kw)
@@ -333,6 +347,15 @@ def frontier_from_dict(d: dict) -> Frontier:
     if version != FRONTIER_FORMAT_VERSION:
         raise ValueError(f"unsupported frontier version {version!r} "
                          f"(this build reads {FRONTIER_FORMAT_VERSION})")
+    # strict mode (mirrors plan_from_dict): this writer could not have
+    # produced an extra top-level key, so one marks a corrupted or
+    # hand-edited artifact
+    unknown = sorted(set(d) - FRONTIER_DOCUMENT_KEYS)
+    if unknown:
+        raise ValueError(
+            f"frontier document carries unknown top-level key(s) "
+            f"{unknown}; schema version {version} defines "
+            f"{sorted(FRONTIER_DOCUMENT_KEYS)}")
     return Frontier(
         fleet=Fleet.from_dict(d["fleet"]),
         objective=d["objective"],

@@ -1,0 +1,501 @@
+"""``occam.audit`` — the static plan/pipeline verifier and concurrency
+lint (docs/deployment_api.md, "Auditing plans").
+
+Three layers of coverage:
+
+* **Corpus** — hand-corrupted plan/frontier JSON documents, each
+  violating exactly one invariant, each caught by exactly its stable
+  rule ID (undersized closure -> OCM011, stray key -> OCM001, spurious
+  cut -> OCM020/021, zeroed replica -> OCM030, chip-score mismatch ->
+  OCM032, unknown engine -> OCM040, float-only engine under an int8
+  policy -> OCM041, ...).
+* **Property** — every plan the planner emits (``occam.plan`` and
+  ``occam.autoplan``, fp32 and int8, across the zoo) audits clean:
+  zero findings, not merely zero errors.
+* **Lint** — the OCM05x asyncio lint flags a deliberate ``time.sleep``
+  inside an ``async def`` (and never ``asyncio.sleep``), plus the
+  ``audit=`` knob wiring on ``place``/``compile``/``serve``.
+"""
+import copy
+import json
+import warnings
+
+import pytest
+
+from repro import occam
+from repro.core.graph import chain
+from repro.core.partition import (COST_MODES, CNNPartitionProblem,
+                                  PartitionResult, Span, partition_cost)
+from repro.models.zoo import get_network
+from repro.occam.audit import (AUDIT_RULES, AuditError, AuditReport,
+                               AuditWarning, Finding, lint_source)
+from repro.occam.audit.api import audit, gate
+from repro.occam.audit.schedule import conveyor_findings
+from repro.occam.registry import register_engine, unregister_engine
+from repro.runtime import span_engine
+
+C, P = "conv", "pool"
+CAPACITY = 6000
+
+
+def vgg_mini():
+    return chain("vgg_mini", [(C, 3, 1, 1, 8), (C, 3, 1, 1, 8),
+                              (P, 2, 2, 0, 0), (C, 3, 1, 1, 16),
+                              (C, 3, 1, 1, 16), (P, 2, 2, 0, 0),
+                              (C, 3, 1, 1, 16)],
+                 in_h=16, in_w=16, in_ch=3)
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return occam.plan(vgg_mini(), CAPACITY)
+
+
+@pytest.fixture(scope="module")
+def doc(plan):
+    return plan.to_dict()
+
+
+@pytest.fixture(scope="module")
+def frontier():
+    return occam.autoplan(vgg_mini(), occam.Fleet(chips=6,
+                                                  vmem_elems=CAPACITY))
+
+
+def corrupt(doc, **overrides):
+    d = copy.deepcopy(doc)
+    d.update(overrides)
+    return d
+
+
+def replan_doc(plan, cuts, mode="dram"):
+    """The plan's document with its cuts replaced by ``cuts`` and every
+    derived field (spans, fits flags, transfers, routes, serving ring)
+    recomputed *honestly* — the only lie left is the cut choice."""
+    net = plan.net
+    prob = CNNPartitionProblem(net, plan.capacity_elems, plan.batch,
+                               plan.quant)
+    edges = [0] + list(cuts) + [net.n_layers]
+    spans = [[a, b, bool(prob.span_fits(a, b))]
+             for a, b in zip(edges[:-1], edges[1:])]
+    transfers = partition_cost(prob, list(cuts), mode)
+    part = PartitionResult(list(cuts),
+                           [Span(a, b, f) for a, b, f in spans],
+                           transfers, {}, {})
+    routes = span_engine.plan_routes(net, part)
+    d = copy.deepcopy(plan.to_dict())
+    d["boundaries"] = list(cuts)
+    d["spans"] = spans
+    d["transfers"] = transfers
+    d["routes"] = [[r.start, r.end, r.route, r.reason] for r in routes]
+    if d.get("serving", {}).get("ring_depth") is not None:
+        d["serving"]["ring_depth"] = len(spans)
+    return d
+
+
+# --------------------------------------------------------------------------
+# zero false positives: everything the planner emits audits clean
+# --------------------------------------------------------------------------
+
+def test_clean_plan_audits_clean(plan):
+    rep = audit(plan)
+    assert rep.ok and not rep.findings, rep.summary()
+
+
+def test_clean_int8_plan_audits_clean():
+    rep = audit(occam.plan(vgg_mini(), CAPACITY, dtype_policy="int8"))
+    assert rep.ok and not rep.findings, rep.summary()
+
+
+def test_clean_placements_audit_clean(plan):
+    assert not audit(plan.place()).findings
+    pipe = plan.place(chips=plan.n_spans + 1)
+    assert not audit(pipe).findings
+
+
+def test_clean_frontier_audits_clean(frontier):
+    rep = audit(frontier)
+    assert rep.ok and not rep.findings, rep.summary()
+
+
+def test_clean_document_roundtrip_audits_clean(doc, frontier):
+    assert not audit(copy.deepcopy(doc)).findings
+    assert not audit(json.loads(frontier.to_json())).findings
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["alexnet", "resnet18", "vggnet"])
+@pytest.mark.parametrize("policy", [None, "int8"])
+def test_zoo_plans_audit_clean(name, policy):
+    cap = 3 * 1024 * 1024
+    plan = occam.plan(get_network(name), cap, dtype_policy=policy)
+    rep = audit(plan)
+    assert rep.ok and not rep.findings, rep.summary()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["alexnet", "resnet18"])
+def test_zoo_frontiers_audit_clean(name):
+    fr = occam.autoplan(get_network(name),
+                        occam.Fleet(chips=8, vmem_elems=3 * 1024 * 1024))
+    rep = audit(fr)
+    assert rep.ok and not rep.findings, rep.summary()
+
+
+# --------------------------------------------------------------------------
+# corrupted corpus: one lie, one rule ID
+# --------------------------------------------------------------------------
+
+def test_corpus_undersized_capacity_is_ocm011(doc):
+    rep = audit(corrupt(doc, capacity_elems=100))
+    assert rep.rules() == ("OCM011",) and not rep.ok
+
+
+def test_corpus_stray_key_is_ocm001(doc):
+    rep = audit(corrupt(doc, autoscale={"target": 2}))
+    assert rep.rules() == ("OCM001",) and not rep.ok
+    # a null stray key cannot change behavior: flagged, not failed
+    rep = audit(corrupt(doc, autoscale=None))
+    assert rep.rules() == ("OCM001",) and rep.ok
+
+
+def test_corpus_suboptimal_cut_is_ocm021_and_ocm020(plan):
+    # a spurious extra boundary: spans/fits/transfers all honest, but
+    # dropping the added cut strictly improves both cost modes
+    cuts = sorted(plan.boundaries)
+    free = next(p for p in range(1, plan.net.n_layers)
+                if p not in set(cuts))
+    d = replan_doc(plan, sorted(cuts + [free]))
+    rep = audit(d)
+    assert rep.rules() == ("OCM021",) and not rep.ok
+    # past the brute-force threshold the neighborhood check catches it
+    rep = audit(d, brute_force_max_layers=0)
+    assert rep.rules() == ("OCM020",) and not rep.ok
+
+
+def test_corpus_infeasible_cut_is_caught(plan):
+    # moving the cut so a multi-layer span no longer fits: the honest
+    # fits=false flag escapes OCM011, but the cut set costs INF under
+    # every mode, and any feasible edit improves on that
+    prob = CNNPartitionProblem(plan.net, plan.capacity_elems, plan.batch,
+                               plan.quant)
+    bad = next(([p] for p in range(2, plan.net.n_layers - 1)
+                if not prob.span_fits(0, p)), None)
+    if bad is None:
+        pytest.skip("every prefix fits at this capacity")
+    d = replan_doc(plan, bad)
+    assert audit(d).rules() == ("OCM021",)
+    assert audit(d, brute_force_max_layers=0).rules() == ("OCM020",)
+
+
+def test_corpus_stale_transfers_is_ocm022_warn(doc):
+    rep = audit(corrupt(doc, transfers=doc["transfers"] + 12345.0))
+    assert rep.rules() == ("OCM022",)
+    assert rep.ok  # warn severity: misleading, but nothing executes it
+
+
+def test_corpus_zeroed_replica_is_ocm030(frontier):
+    d = json.loads(frontier.to_json())
+    cand = next(c for c in d["candidates"] if c["kind"] == "pipeline"
+                and len(c["replicas"]) > 1)
+    cand["replicas"] = [0] + cand["replicas"][1:]
+    # keep the chip score consistent so only the bijection rule fires
+    cand["scores"]["chips"] = sum(cand["replicas"])
+    rep = audit(d)
+    assert rep.rules() == ("OCM030",) and not rep.ok
+
+
+def test_corpus_chip_mismatch_is_ocm032(frontier):
+    d = json.loads(frontier.to_json())
+    cand = next(c for c in d["candidates"] if c["kind"] == "pipeline")
+    cand["scores"]["chips"] = sum(cand["replicas"]) + 1
+    rep = audit(d)
+    assert rep.rules() == ("OCM032",) and not rep.ok
+
+
+def test_corpus_unknown_engine_is_ocm040(doc):
+    d = copy.deepcopy(doc)
+    d["routes"][0][2] = "warp9"
+    rep = audit(d)
+    assert rep.rules() == ("OCM040",) and not rep.ok
+
+
+def test_corpus_int8_on_floatonly_engine_is_ocm041():
+    # int8 boundary policies compute in fp32 at span cores; an engine
+    # declaring a bfloat16-only envelope must be rejected at audit time
+    plan = occam.plan(vgg_mini(), CAPACITY, dtype_policy="int8")
+    d = plan.to_dict()
+    register_engine("narrow", priority=99,
+                    accepts=lambda net, a, b, ctx: (True, "always"),
+                    run=lambda *a, **k: (None, {}),
+                    dtypes=("bfloat16",))
+    try:
+        d["routes"][0][2] = "narrow"
+        rep = audit(d)
+        assert rep.rules() == ("OCM041",) and not rep.ok
+    finally:
+        unregister_engine("narrow")
+
+
+def test_corpus_no_spmd_body_is_ocm043(frontier):
+    register_engine("hostonly", priority=99,
+                    accepts=lambda net, a, b, ctx: (True, "always"),
+                    run=lambda *a, **k: (None, {}))
+    try:
+        d = json.loads(frontier.to_json())
+        cand = next(c for c in d["candidates"] if c["kind"] == "pipeline")
+        for route in cand["plan"]["routes"]:
+            route[2] = "hostonly"
+        rep = audit(d)
+        assert "OCM043" in rep.rules() and not rep.ok
+    finally:
+        unregister_engine("hostonly")
+
+
+def test_corpus_ring_depth_mismatch_is_ocm031(doc):
+    d = copy.deepcopy(doc)
+    d["serving"]["ring_depth"] = d["serving"]["ring_depth"] + 2
+    rep = audit(d)
+    assert rep.rules() == ("OCM031",) and not rep.ok
+
+
+def test_corpus_indivisible_round_batch_is_ocm031(frontier):
+    d = json.loads(frontier.to_json())
+    cand = next(c for c in d["candidates"] if c["kind"] == "pipeline"
+                and max(c["replicas"]) > 1)
+    cand["plan"]["serving"]["round_batch"] = 7  # lcm(replicas) > 1
+    rep = audit(d)
+    assert rep.rules() == ("OCM031",) and not rep.ok
+
+
+def test_corpus_unloadable_document_is_ocm002(doc):
+    d = copy.deepcopy(doc)
+    del d["spans"]
+    rep = audit(d)
+    assert rep.rules() == ("OCM002",) and not rep.ok
+
+
+def test_corpus_span_table_mismatch_is_ocm002(doc):
+    d = copy.deepcopy(doc)
+    d["spans"] = d["spans"][:-1]  # drop a span: table no longer tiles
+    rep = audit(d)
+    assert rep.rules() == ("OCM002",) and not rep.ok
+
+
+def test_residency_reproof_failure_is_ocm010(plan, monkeypatch):
+    from repro.core import closure
+
+    def broken(net, a, b, **kw):
+        raise ValueError("ring cap exceeded")
+
+    monkeypatch.setattr(closure, "span_schedule", broken)
+    rep = audit(plan)
+    assert rep.rules() == ("OCM010",) and not rep.ok
+
+
+def test_conveyor_collision_is_ocm033(monkeypatch):
+    from repro.runtime import stap_pipeline
+
+    monkeypatch.setattr(stap_pipeline, "output_bank_row",
+                        lambda rg, n_rounds, n_stages: 0)
+    findings = conveyor_findings(3, "test")
+    assert findings and all(f.rule == "OCM033" for f in findings)
+
+
+def test_conveyor_checked_in_assignment_is_clean():
+    for n_stages in (1, 2, 3, 5):
+        assert not conveyor_findings(n_stages, "test")
+
+
+# --------------------------------------------------------------------------
+# strict loaders (satellite: unknown keys on current-version docs raise)
+# --------------------------------------------------------------------------
+
+def test_plan_loader_rejects_unknown_keys(doc):
+    with pytest.raises(ValueError, match="unknown top-level key"):
+        occam.plan_from_json(json.dumps(corrupt(doc, autoscale=1)))
+
+
+def test_frontier_loader_rejects_unknown_keys(frontier):
+    d = json.loads(frontier.to_json())
+    d["scheduler"] = {"policy": "fifo"}
+    with pytest.raises(ValueError, match="unknown top-level key"):
+        occam.frontier_from_json(json.dumps(d))
+
+
+# --------------------------------------------------------------------------
+# OCM05x: the asyncio concurrency lint
+# --------------------------------------------------------------------------
+
+def test_lint_flags_time_sleep_in_async_def():
+    findings = lint_source(
+        "import time\n"
+        "import asyncio\n"
+        "async def tick(self):\n"
+        "    await asyncio.sleep(0.1)\n"
+        "    time.sleep(0.5)\n", "fake.py")
+    assert [f.rule for f in findings] == ["OCM050"]
+    assert findings[0].detail["line"] == 5  # asyncio.sleep not flagged
+
+
+def test_lint_tracks_sleep_aliases_and_device_sync():
+    findings = lint_source(
+        "import time as clock\n"
+        "from time import sleep as nap\n"
+        "async def a():\n"
+        "    clock.sleep(1)\n"
+        "async def b():\n"
+        "    nap(1)\n"
+        "async def c(x):\n"
+        "    x.block_until_ready()\n"
+        "async def d(self):\n"
+        "    self.session.pump()\n", "fake.py")
+    assert [f.rule for f in findings] == ["OCM050"] * 4
+
+
+def test_lint_ignores_sync_defs_and_nested_scopes():
+    findings = lint_source(
+        "import time\n"
+        "def sync_path():\n"
+        "    time.sleep(1)\n"  # not async: out of scope
+        "async def outer():\n"
+        "    def helper():\n"
+        "        time.sleep(1)\n"  # nested sync def: its own schedule
+        "    return helper\n", "fake.py")
+    assert findings == []
+
+
+def test_lint_flags_unguarded_thread_mutation():
+    src = ("import threading\n"
+           "class Engine:\n"
+           "    def _worker(self):\n"
+           "        self.done = True\n"
+           "    def start(self):\n"
+           "        threading.Thread(target=self._worker).start()\n")
+    findings = lint_source(src, "fake.py")
+    assert [f.rule for f in findings] == ["OCM051"]
+    assert findings[0].detail["attrs"] == ["self.done"]
+
+
+def test_lint_accepts_lock_guarded_thread_mutation():
+    src = ("import threading\n"
+           "class Engine:\n"
+           "    def _worker(self):\n"
+           "        with self._lock:\n"
+           "            self.done = True\n"
+           "    def start(self):\n"
+           "        threading.Thread(target=self._worker).start()\n")
+    assert lint_source(src, "fake.py") == []
+
+
+def test_serve_tree_lints_clean():
+    rep = occam.lint_serve()
+    assert rep.ok and not rep.findings, rep.summary()
+
+
+# --------------------------------------------------------------------------
+# the audit= knob on place / compile / serve + report plumbing
+# --------------------------------------------------------------------------
+
+def corrupted_plan(doc):
+    """A loadable Plan carrying an error finding (stale ring_depth)."""
+    d = copy.deepcopy(doc)
+    d["serving"]["ring_depth"] = d["serving"]["ring_depth"] + 2
+    return occam.plan_from_json(json.dumps(d))
+
+
+def test_place_audit_knob(doc):
+    bad = corrupted_plan(doc)
+    with pytest.raises(AuditError, match="OCM031"):
+        bad.place(audit="error")
+    with pytest.warns(AuditWarning, match="OCM031"):
+        bad.place()  # warn is the default
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        bad.place(audit="off")
+    with pytest.raises(ValueError, match="audit"):
+        bad.place(audit="loud")
+
+
+def test_compile_audit_knob(doc):
+    bad = corrupted_plan(doc)
+    placement = bad.place(audit="off")
+    with pytest.raises(AuditError, match="OCM031"):
+        placement.compile(interpret=True, audit="error")
+    with pytest.warns(AuditWarning, match="OCM031"):
+        placement.compile(interpret=True)
+
+
+def test_serve_validates_ring_depth_and_round_batch(doc):
+    bad = corrupted_plan(doc)
+    dep = bad.place(chips=bad.n_spans + 1, audit="off") \
+             .compile(interpret=True, audit="off")
+    with pytest.raises(ValueError, match="ring"):
+        dep.serve(params=None)
+    good = occam.plan_from_json(json.dumps(doc))
+    dep = good.place(chips=good.n_spans + 1, audit="off") \
+              .compile(interpret=True, audit="off")
+    width = dep.placement.steady_schedule().round_width
+    with pytest.raises(ValueError, match="multiple"):
+        dep.serve(params=None, round_batch=width + 1)
+
+
+def test_gate_off_runs_nothing(doc):
+    assert gate(corrupt(doc, autoscale=1), "off") is None
+
+
+def test_frontier_serve_audit_knob(frontier):
+    d = json.loads(frontier.to_json())
+    for c in d["candidates"]:
+        c["scores"]["chips"] = sum(c["replicas"]) + 9
+    bad = occam.frontier_from_json(json.dumps(d))
+    with pytest.raises(AuditError, match="OCM032"):
+        bad.serve(params=None, audit="error")
+
+
+def test_report_json_roundtrip(doc):
+    rep = audit(corrupt(doc, autoscale=1, transfers=1.0))
+    back = AuditReport.from_json(rep.to_json())
+    assert back.findings == rep.findings
+    assert back.ok == rep.ok and back.subject == rep.subject
+    v = rep.verdict()
+    assert v["ok"] is False and "OCM001" in v["rules"]
+
+
+def test_rule_table_is_stable():
+    assert set(AUDIT_RULES) >= {
+        "OCM001", "OCM002", "OCM010", "OCM011", "OCM012", "OCM020",
+        "OCM021", "OCM022", "OCM030", "OCM031", "OCM032", "OCM033",
+        "OCM040", "OCM041", "OCM042", "OCM043", "OCM050", "OCM051"}
+    for rule in AUDIT_RULES.values():
+        assert rule.severity in ("error", "warn") and rule.invariant
+
+
+def test_finding_rejects_unknown_rule():
+    with pytest.raises(ValueError):
+        Finding("OCM999", "error", "x", "y", {})
+
+
+def test_audit_rejects_unknown_types():
+    with pytest.raises(TypeError, match="occam.audit takes"):
+        audit(42)
+
+
+def test_cli_passes_clean_and_fails_corrupt(tmp_path, doc, capsys):
+    from repro.occam.audit.__main__ import main
+
+    good = tmp_path / "good.plan.json"
+    good.write_text(json.dumps(doc))
+    assert main([str(tmp_path), "--no-lint"]) == 0
+    bad = tmp_path / "bad.plan.json"
+    bad.write_text(json.dumps(corrupt(doc, capacity_elems=100)))
+    assert main([str(tmp_path), "--no-lint"]) == 1
+    out = capsys.readouterr().out
+    assert "OCM011" in out
+
+
+def test_cli_graceful_with_no_artifacts(tmp_path, capsys):
+    from repro.occam.audit.__main__ import main
+
+    assert main([str(tmp_path), "--no-lint"]) == 0
+    assert "no *.plan.json" in capsys.readouterr().out

@@ -382,10 +382,11 @@ def test_autoplan_bench_schema_and_exhaustive_match():
     from benchmarks.occam_autoplan import autoplan_measurement
 
     doc = autoplan_measurement(nets=("alexnet", "zfnet"))
-    assert set(doc) == {"fleet", "nets", "all_match_exhaustive",
+    assert set(doc) == {"audit", "fleet", "nets", "all_match_exhaustive",
                         "sweep_speedup_geomean"}
     assert doc["all_match_exhaustive"] is True
     assert doc["sweep_speedup_geomean"] > 0
+    assert doc["audit"]["ok"] is True and doc["audit"]["findings"] == 0
     required = {"net", "n_layers", "capacities", "dp_runs", "partitions",
                 "placements_scored", "pareto_size", "best_traffic",
                 "exhaustive_best_traffic", "matches_exhaustive",

@@ -25,6 +25,22 @@ def test_no_tracked_bytecode():
     assert not tracked, f"tracked bytecode files: {tracked}"
 
 
+def test_serve_tree_has_zero_concurrency_findings():
+    """The OCM05x asyncio lint (``occam.audit.lint_serve``) is a CI
+    gate: the checked-in ``occam/serve`` tree must carry zero findings —
+    not merely zero errors — so a blocking call or unguarded cross-
+    thread mutation fails the fast tier the commit it appears."""
+    import sys
+
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    try:
+        from repro.occam.audit import lint_serve
+    finally:
+        sys.path.pop(0)
+    report = lint_serve()
+    assert not report.findings, report.summary()
+
+
 def test_gitignore_covers_caches():
     path = os.path.join(_ROOT, ".gitignore")
     assert os.path.exists(path), ".gitignore missing"
